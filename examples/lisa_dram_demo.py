@@ -1,0 +1,41 @@
+"""Full reproduction demo: Table 1 + Figs. 3/4 orderings on synthetic
+multiprogrammed workloads (the paper's system evaluation, Sec. 3).
+
+Run:  PYTHONPATH=src python examples/lisa_dram_demo.py
+"""
+import jax
+
+from repro.core.dram import timing as T
+from repro.core.dram.controller import (MechanismConfig, simulate_jit,
+                                        weighted_speedup)
+from repro.core.dram.traces import TraceConfig, generate
+
+print("=== Table 1 (8 KB copy) ===")
+print(f"{'mechanism':14s} {'latency ns':>10s} {'energy uJ':>10s}")
+for mech, (lat, ene) in T.table1().items():
+    print(f"{mech:14s} {lat:10.2f} {ene:10.4f}")
+print(f"\nRBM bandwidth: {T.RBM_BW_GBPS:.0f} GB/s = "
+      f"{T.RBM_BW_GBPS/T.CHANNEL_BW_GBPS:.1f}x a DDR4-2400 channel (paper: 26x)")
+print(f"LIP precharge: {T.precharge_latency(False):.0f} ns -> "
+      f"{T.precharge_latency(True):.0f} ns (paper: 2.6x)")
+
+print("\n=== System evaluation (4-core synthetic workloads) ===")
+tcfg = TraceConfig(n_requests=16384)
+tr = generate(jax.random.key(1), tcfg)
+base = simulate_jit(tr, tcfg, MechanismConfig("memcpy"))
+for name, mcfg, paper in [
+    ("RowClone-InterSA", MechanismConfig("rc_intersa"), ""),
+    ("LISA-RISC", MechanismConfig("lisa"), "paper: +59.6%"),
+    ("LISA-(RISC+VILLA)", MechanismConfig("lisa", use_villa=True),
+     "paper: +16.5% over RISC"),
+    ("LISA-ALL", MechanismConfig("lisa", use_villa=True, use_lip=True),
+     "paper: +94.8% total, +8.8% from LIP"),
+    ("RC-InterSA+VILLA", MechanismConfig("memcpy", use_villa=True,
+                                         villa_copy_mech="rc_intersa"),
+     "paper: -52.3% (slow copies kill caching)"),
+]:
+    r = simulate_jit(tr, tcfg, mcfg)
+    ws = float(weighted_speedup(base["core_stall"], r["core_stall"]))
+    ene = 1 - float(r["energy_uJ"]) / float(base["energy_uJ"])
+    hit = float(r["villa_hit_rate"])
+    print(f"{name:18s} WS {ws:6.3f}x  energy {ene:+.1%}  hit {hit:.2f}  {paper}")

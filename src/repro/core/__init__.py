@@ -1,0 +1,7 @@
+"""Core: the paper's contribution.
+
+``repro.core.dram`` — faithful reproduction of the LISA DRAM substrate
+                      (timing/energy exact to Table 1; system sim for Figs 3/4).
+``repro.core.lisa`` — the same substrate adapted to the TPU mesh
+                      (hop-chain collectives, tiered VILLA cache, cost model).
+"""

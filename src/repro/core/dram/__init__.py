@@ -1,0 +1,10 @@
+"""Faithful reproduction of the LISA DRAM substrate (HPCA'16 / 2018 summary).
+
+Modules:
+  timing      — DDR3-1600 + LISA timing/energy models (Table 1, exact)
+  substrate   — data-correct functional DRAM bank with RBM / RISC / multicast
+  villa       — the VILLA hot-row caching policy (Sec. 3.2.1, exact)
+  controller  — command-level multi-core system simulator (Figs. 3/4 orderings)
+  traces      — synthetic workload generation (SPEC traces are not shippable)
+"""
+from repro.core.dram import timing, substrate, villa, controller, traces  # noqa: F401

@@ -1,0 +1,204 @@
+"""Command-level multi-core memory-controller simulator (pure JAX, lax.scan).
+
+Models the system-level effects the paper evaluates on Ramulator:
+
+  * one channel, N banks; requests gated on bank availability and channel
+    occupancy (64 B bursts for reads, full-duration occupancy for memcpy
+    copies — LISA/RowClone copies leave the channel free, which is exactly
+    the bank-level-parallelism benefit of Sec. 3.1);
+  * open-row policy per bank: row hit / row conflict (precharge first, LIP
+    shortens it) / closed row;
+  * bulk-copy requests dispatched to the configured mechanism
+    (memcpy / RC-InterSA / LISA-RISC with real hop distances);
+  * optional VILLA fast-subarray cache per bank with the paper's exact policy
+    (counters/epochs/benefit replacement), insertions charged to the
+    configured copy mechanism (LISA vs RC-InterSA — Fig. 3's comparison).
+
+"Weighted speedup" is reported as in the paper's WS metric [14,93], with each
+core's IPC proxied by the reciprocal of its total memory stall time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dram import timing as T
+from repro.core.dram import villa as V
+from repro.core.dram.traces import Trace, TraceConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MechanismConfig:
+    copy_mech: str = "memcpy"         # memcpy | rc_intersa | lisa
+    use_villa: bool = False
+    use_lip: bool = False
+    villa_copy_mech: str = "lisa"     # lisa | rc_intersa  (Fig. 3 comparison)
+    villa: V.VillaConfig = dataclasses.field(default_factory=V.VillaConfig)
+
+
+class SimState(NamedTuple):
+    bank_free: jax.Array     # (banks,) f32
+    chan_free: jax.Array     # () f32
+    open_row: jax.Array      # (banks,) i32, -1 closed
+    fast_open: jax.Array     # (banks,) i32 — open row in the fast subarray
+    villa: V.VillaState      # stacked over banks
+    core_stall: jax.Array    # (cores,) f32
+    energy: jax.Array        # () f32 uJ
+    villa_hits: jax.Array    # () i32
+    villa_accesses: jax.Array  # () i32
+
+
+def _copy_cost(mech: str, hops: jax.Array):
+    """(latency ns, energy uJ, occupies_channel) for an 8 KB copy."""
+    hops = jnp.maximum(hops, 1).astype(jnp.float32)
+    if mech == "memcpy":
+        return (jnp.float32(T.latency_memcpy()), jnp.float32(T.energy_memcpy()), True)
+    if mech == "rc_intersa":
+        return (jnp.float32(T.latency_rc_inter_sa()),
+                jnp.float32(T.energy_rc_inter_sa()), False)
+    if mech == "lisa":
+        base = T.LISA.risc_base(T.DDR3)
+        lat = base + T.LISA.t_rbm_hop * hops
+        ene = T.ENERGY.e_risc_base + (hops - 1.0) * T.ENERGY.e_rbm_hop
+        return (lat, ene, False)
+    raise ValueError(f"unknown copy mechanism: {mech}")
+
+
+def simulate(trace: Trace, tcfg: TraceConfig, mcfg: MechanismConfig) -> Dict[str, jax.Array]:
+    t = T.DDR3
+    tPRE = jnp.float32(T.precharge_latency(mcfg.use_lip))
+    lat_hit = jnp.float32(t.tCL)
+    lat_closed = jnp.float32(t.tRCD + t.tCL)
+    lat_fast_hit = jnp.float32(mcfg.villa.tCL_fast)
+    lat_fast_open = jnp.float32(mcfg.villa.tRP_fast + mcfg.villa.tRCD_fast
+                                + mcfg.villa.tCL_fast)
+    lat_fast_closed = jnp.float32(mcfg.villa.tRCD_fast + mcfg.villa.tCL_fast)
+
+    e_access_miss = jnp.float32(T.ENERGY.e_act_pre + T.ENERGY.e_col_internal
+                                + T.ENERGY.e_col_channel)
+    e_access_hit = jnp.float32(T.ENERGY.e_col_internal + T.ENERGY.e_col_channel)
+
+    def step(state: SimState, req):
+        arrival, core, bank, row, is_copy, dst_row = req
+        sa = row // tcfg.rows_per_subarray
+        dst_sa = dst_row // tcfg.rows_per_subarray
+
+        t0 = jnp.maximum(arrival, state.bank_free[bank])
+
+        # ---- normal access latency (open-row policy) --------------------
+        is_hit = state.open_row[bank] == row
+        is_open = state.open_row[bank] >= 0
+        lat_conflict = tPRE + lat_closed
+        lat_normal = jnp.where(is_hit, lat_hit,
+                               jnp.where(is_open, lat_conflict, lat_closed))
+        e_normal = jnp.where(is_hit, e_access_hit, e_access_miss)
+
+        # ---- VILLA ------------------------------------------------------
+        if mcfg.use_villa:
+            vbank = jax.tree.map(lambda x: x[bank], state.villa)
+            vbank2, vhit, vinsert, _ = V.villa_access(vbank, row, mcfg.villa)
+            new_villa = jax.tree.map(
+                lambda full, leaf: full.at[bank].set(leaf), state.villa, vbank2)
+            ins_lat, ins_ene, _ = _copy_cost(mcfg.villa_copy_mech,
+                                             jnp.maximum(sa, 1))
+            # The fast subarray has its own row buffer (it *is* a subarray).
+            f_hit = state.fast_open[bank] == row
+            f_open = state.fast_open[bank] >= 0
+            lat_fast = jnp.where(f_hit, lat_fast_hit,
+                                 jnp.where(f_open, lat_fast_open,
+                                           lat_fast_closed))
+            # An insertion reuses the row buffer the access just activated:
+            # the requestor is served at slow latency; the RBM + restore then
+            # occupies the *bank* in the background (charged below), not the
+            # request's critical path.
+            lat_normal = jnp.where(vhit, lat_fast, lat_normal)
+            bank_extra = jnp.where(vinsert, ins_lat, 0.0)
+            e_normal = jnp.where(vhit, e_access_hit,
+                                 e_normal + jnp.where(vinsert, ins_ene, 0.0))
+            new_fast_open = jnp.where(vhit | vinsert, row,
+                                      state.fast_open[bank]).astype(jnp.int32)
+            villa_hits = state.villa_hits + vhit.astype(jnp.int32)
+            villa_acc = state.villa_accesses + 1
+        else:
+            vhit = jnp.zeros((), bool)
+            bank_extra = jnp.zeros((), jnp.float32)
+            new_villa = state.villa
+            new_fast_open = state.fast_open[bank]
+            villa_hits, villa_acc = state.villa_hits, state.villa_accesses
+
+        # ---- bulk copy --------------------------------------------------
+        hops = jnp.abs(dst_sa - sa)
+        copy_lat, copy_ene, copy_on_chan = _copy_cost(mcfg.copy_mech, hops)
+
+        lat = jnp.where(is_copy, copy_lat, lat_normal)
+        ene = jnp.where(is_copy, copy_ene, e_normal)
+
+        # ---- channel occupancy ------------------------------------------
+        # Normal reads burst 64 B at the end of the access; memcpy copies own
+        # the channel for their whole duration; in-DRAM copies never touch it.
+        if copy_on_chan:
+            chan_start_copy = jnp.maximum(t0, state.chan_free)
+            t_end_copy = chan_start_copy + lat
+            chan_after_copy = t_end_copy
+        else:
+            t_end_copy = t0 + lat
+            chan_after_copy = state.chan_free
+
+        burst = jnp.maximum(t0 + lat - t.tBURST, state.chan_free)
+        t_end_normal = burst + t.tBURST
+        chan_after_normal = t_end_normal
+
+        t_end = jnp.where(is_copy, t_end_copy, t_end_normal)
+        chan_free = jnp.where(is_copy, chan_after_copy, chan_after_normal)
+
+        # A VILLA fast hit is served by the fast subarray and leaves the slow
+        # subarrays' row buffer untouched.
+        new_open = jnp.where(is_copy, -1,
+                             jnp.where(vhit, state.open_row[bank], row)
+                             ).astype(jnp.int32)
+        state = SimState(
+            bank_free=state.bank_free.at[bank].set(t_end + bank_extra),
+            chan_free=chan_free,
+            open_row=state.open_row.at[bank].set(new_open),
+            fast_open=state.fast_open.at[bank].set(new_fast_open),
+            villa=new_villa,
+            core_stall=state.core_stall.at[core].add(t_end - arrival),
+            energy=state.energy + ene,
+            villa_hits=villa_hits,
+            villa_accesses=villa_acc,
+        )
+        return state, t_end - arrival
+
+    villa0 = jax.vmap(lambda _: V.villa_init(mcfg.villa))(jnp.arange(tcfg.n_banks))
+    init = SimState(
+        bank_free=jnp.zeros((tcfg.n_banks,), jnp.float32),
+        chan_free=jnp.zeros((), jnp.float32),
+        open_row=jnp.full((tcfg.n_banks,), -1, jnp.int32),
+        fast_open=jnp.full((tcfg.n_banks,), -1, jnp.int32),
+        villa=villa0,
+        core_stall=jnp.zeros((tcfg.n_cores,), jnp.float32),
+        energy=jnp.zeros((), jnp.float32),
+        villa_hits=jnp.zeros((), jnp.int32),
+        villa_accesses=jnp.zeros((), jnp.int32),
+    )
+    xs = (trace.t, trace.core, trace.bank, trace.row, trace.is_copy, trace.dst_row)
+    final, lat_trace = jax.lax.scan(step, init, xs)
+    return {
+        "core_stall": final.core_stall,
+        "energy_uJ": final.energy,
+        "avg_latency_ns": lat_trace.mean(),
+        "villa_hit_rate": jnp.where(
+            final.villa_accesses > 0,
+            final.villa_hits / jnp.maximum(final.villa_accesses, 1), 0.0),
+    }
+
+
+def weighted_speedup(base_stall: jax.Array, mech_stall: jax.Array) -> jax.Array:
+    """WS proxy: sum over cores of IPC_mech/IPC_base with IPC ~ 1/stall."""
+    return (base_stall / jnp.maximum(mech_stall, 1e-3)).mean()
+
+
+simulate_jit = jax.jit(simulate, static_argnums=(1, 2))

@@ -1,0 +1,236 @@
+"""Functional (data-correct) model of a LISA-enabled DRAM bank.
+
+This is the *semantic* half of the reproduction: a pure-JAX state machine whose
+operations mirror the DRAM commands the paper reasons about —
+ACTIVATE / PRECHARGE / RBM (row buffer movement) / column READ / WRITE — plus
+the composed LISA-RISC copy and the 1-to-N multicast enabled by intermediate
+row-buffer latching (paper Sec. 5.2).  Timing/energy accounting comes from
+``timing.py``; this module guarantees the *data movement itself* is correct,
+including the adjacency and precharge-state preconditions of RBM.
+
+State layout (one bank):
+  cells        (n_subarrays, rows_per_subarray, row_bytes)  uint8
+  row_buffer   (n_subarrays, row_bytes)                     uint8
+  rb_valid     (n_subarrays,)  bool   — row buffer holds latched data
+  open_row     (n_subarrays,)  int32  — activated row id, -1 if precharged
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dram import timing as T
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BankState:
+    cells: jax.Array
+    row_buffer: jax.Array
+    rb_valid: jax.Array
+    open_row: jax.Array
+
+    def tree_flatten(self):
+        return (self.cells, self.row_buffer, self.rb_valid, self.open_row), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def n_subarrays(self) -> int:
+        return self.cells.shape[0]
+
+    @property
+    def rows_per_subarray(self) -> int:
+        return self.cells.shape[1]
+
+    @property
+    def row_bytes(self) -> int:
+        return self.cells.shape[2]
+
+
+def make_bank(n_subarrays: int = 16, rows_per_subarray: int = 64,
+              row_bytes: int = T.ROW_BYTES, key: jax.Array | None = None) -> BankState:
+    if key is None:
+        cells = jnp.zeros((n_subarrays, rows_per_subarray, row_bytes), jnp.uint8)
+    else:
+        cells = jax.random.randint(
+            key, (n_subarrays, rows_per_subarray, row_bytes), 0, 256, jnp.uint8)
+    return BankState(
+        cells=cells,
+        row_buffer=jnp.zeros((n_subarrays, row_bytes), jnp.uint8),
+        rb_valid=jnp.zeros((n_subarrays,), bool),
+        open_row=jnp.full((n_subarrays,), -1, jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Primitive DRAM commands (pure functions: state -> state).
+# ---------------------------------------------------------------------------
+
+def activate(state: BankState, sa: jax.Array, row: jax.Array) -> BankState:
+    """ACTIVATE row ``row`` of subarray ``sa``: latch it into the row buffer.
+
+    If the row buffer already holds *valid* latched data (e.g. after an RBM)
+    and the subarray is precharged, activation instead *restores* the buffer
+    contents into the target row — this is exactly how LISA-RISC writes the
+    moved data into the destination row (paper Sec. 3.1 step 3).
+    """
+    sa = jnp.asarray(sa, jnp.int32)
+    row = jnp.asarray(row, jnp.int32)
+    restore_mode = state.rb_valid[sa] & (state.open_row[sa] < 0)
+
+    stored = state.cells[sa, row]
+    buf = state.row_buffer[sa]
+    new_buf = jnp.where(restore_mode, buf, stored)
+    new_cells = state.cells.at[sa, row].set(new_buf)
+
+    return BankState(
+        cells=new_cells,
+        row_buffer=state.row_buffer.at[sa].set(new_buf),
+        rb_valid=state.rb_valid.at[sa].set(True),
+        open_row=state.open_row.at[sa].set(row),
+    )
+
+
+def precharge(state: BankState, sa: jax.Array) -> BankState:
+    """PRECHARGE subarray ``sa``: close the open row, invalidate the buffer."""
+    sa = jnp.asarray(sa, jnp.int32)
+    return BankState(
+        cells=state.cells,
+        row_buffer=state.row_buffer,
+        rb_valid=state.rb_valid.at[sa].set(False),
+        open_row=state.open_row.at[sa].set(-1),
+    )
+
+
+def rbm(state: BankState, src_sa: jax.Array, dst_sa: jax.Array) -> BankState:
+    """Row Buffer Movement between *adjacent* subarrays (the LISA primitive).
+
+    Preconditions (checked with ``checkify``-style masking — the op is a no-op
+    with ``rb_valid[dst]=False`` if violated, so property tests can detect
+    misuse): |src-dst| == 1, src buffer valid, dst subarray precharged.
+    The activated source row buffer drives the precharged destination
+    bitlines; the destination senses and latches (paper Sec. 2).
+    """
+    src_sa = jnp.asarray(src_sa, jnp.int32)
+    dst_sa = jnp.asarray(dst_sa, jnp.int32)
+    ok = (jnp.abs(src_sa - dst_sa) == 1) & state.rb_valid[src_sa] & (state.open_row[dst_sa] < 0)
+    moved = jnp.where(ok, state.row_buffer[src_sa], state.row_buffer[dst_sa])
+    return BankState(
+        cells=state.cells,
+        row_buffer=state.row_buffer.at[dst_sa].set(moved),
+        rb_valid=state.rb_valid.at[dst_sa].set(ok | state.rb_valid[dst_sa]),
+        open_row=state.open_row,
+    )
+
+
+def read_line(state: BankState, sa: jax.Array, line: jax.Array) -> jax.Array:
+    """Column read of one 64 B cache line from the open row buffer."""
+    start = jnp.asarray(line, jnp.int32) * T.CACHE_LINE_BYTES
+    return jax.lax.dynamic_slice(state.row_buffer[sa], (start,), (T.CACHE_LINE_BYTES,))
+
+
+def write_line(state: BankState, sa: jax.Array, line: jax.Array,
+               data: jax.Array) -> BankState:
+    """Column write of one 64 B cache line into the open row (and buffer)."""
+    sa = jnp.asarray(sa, jnp.int32)
+    start = jnp.asarray(line, jnp.int32) * T.CACHE_LINE_BYTES
+    buf = jax.lax.dynamic_update_slice(state.row_buffer[sa], data.astype(jnp.uint8), (start,))
+    row = state.open_row[sa]
+    return BankState(
+        cells=state.cells.at[sa, row].set(buf),
+        row_buffer=state.row_buffer.at[sa].set(buf),
+        rb_valid=state.rb_valid,
+        open_row=state.open_row,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Composed operations: LISA-RISC copy and 1-to-N multicast.
+# ---------------------------------------------------------------------------
+
+def _hop_chain(state: BankState, src_sa: int, dst_sa: int) -> BankState:
+    """RBM hop-by-hop from src to dst; every intermediate buffer latches."""
+    step = 1 if dst_sa >= src_sa else -1
+    sas = list(range(src_sa, dst_sa, step))
+    for cur in sas:
+        state = rbm(state, cur, cur + step)
+    return state
+
+
+def lisa_risc_copy(state: BankState, src_sa: int, src_row: int,
+                   dst_sa: int, dst_row: int) -> Tuple[BankState, float, float]:
+    """Full LISA-RISC row copy.  Returns (state, latency_ns, energy_uJ).
+
+    ACTIVATE(src) -> RBM x hops -> ACTIVATE(dst, restore mode) -> PRE.
+    Subarray indices are Python ints (command schedules are static), data is
+    traced, so this composes with jit.
+    """
+    hops = abs(dst_sa - src_sa)
+    if hops < 1:
+        raise ValueError("source and destination subarrays must differ")
+    state = activate(state, src_sa, src_row)
+    state = _hop_chain(state, src_sa, dst_sa)
+    state = precharge(state, src_sa)          # close source; dst buffer holds data
+    state = activate(state, dst_sa, dst_row)  # restore-mode: buffer -> cells
+    state = precharge(state, dst_sa)
+    return state, T.latency_lisa_risc(hops), T.energy_lisa_risc(hops)
+
+
+def lisa_broadcast(state: BankState, src_sa: int, src_row: int,
+                   dst_sas: Tuple[int, ...], dst_row: int
+                   ) -> Tuple[BankState, float, float]:
+    """1-to-N multicast (paper Sec. 5.2): one hop chain to the farthest
+    destination latches the data in *every* intermediate row buffer; a single
+    ACTIVATE per destination then restores it into ``dst_row``.
+
+    Latency: one RISC traversal to the farthest destination + one
+    (tRAS + tRP) restore per *additional* destination (they are in distinct
+    subarrays and proceed back-to-back per the command-level model).
+    """
+    if src_sa in dst_sas:
+        raise ValueError("destination equals source subarray")
+    fwd = [d for d in dst_sas if d > src_sa]
+    bwd = [d for d in dst_sas if d < src_sa]
+    state = activate(state, src_sa, src_row)
+    hops = 0
+    if fwd:                                   # chain toward max destination
+        state = _hop_chain(state, src_sa, max(fwd))
+        hops += max(fwd) - src_sa
+    if bwd:                                   # chain toward min destination
+        state = _hop_chain(state, src_sa, min(bwd))
+        hops += src_sa - min(bwd)
+    state = precharge(state, src_sa)
+    lat = T.latency_lisa_risc(hops)           # chains serialized (conservative)
+    ene = T.energy_lisa_risc(hops)
+    for i, d in enumerate(sorted(dst_sas, key=lambda d: abs(d - src_sa))):
+        state = activate(state, d, dst_row)   # restore latched buffer
+        state = precharge(state, d)
+        if i > 0:
+            lat += T.DDR3.tRAS + T.DDR3.tRP
+            ene += 2 * T.ENERGY.e_act_pre
+    return state, lat, ene
+
+
+def rowclone_intersa_copy(state: BankState, src_sa: int, src_row: int,
+                          dst_sa: int, dst_row: int) -> Tuple[BankState, float, float]:
+    """Baseline RowClone inter-subarray copy (via the narrow internal bus):
+    semantically a row copy; cost from the calibrated Table-1 model."""
+    state = activate(state, src_sa, src_row)
+    data = state.row_buffer[src_sa]
+    state = precharge(state, src_sa)
+    state = activate(state, dst_sa, dst_row)
+    buf = data
+    state = BankState(
+        cells=state.cells.at[dst_sa, dst_row].set(buf),
+        row_buffer=state.row_buffer.at[dst_sa].set(buf),
+        rb_valid=state.rb_valid,
+        open_row=state.open_row,
+    )
+    state = precharge(state, dst_sa)
+    return state, T.latency_rc_inter_sa(), T.energy_rc_inter_sa()

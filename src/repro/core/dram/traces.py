@@ -1,0 +1,78 @@
+"""Synthetic multi-core memory traces for the controller simulator.
+
+The paper evaluates 50 four-core workloads built from SPEC/TPC traces (via
+Pin + Ramulator).  Those traces are not redistributable, so the system-level
+benchmarks here use parameterised synthetic traces with the two properties
+the paper's results hinge on:
+
+  * a Zipf-like hot-row access distribution (drives VILLA hit rate), and
+  * a configurable fraction of bulk-copy operations (drives RISC gains).
+
+Benchmarks sweep these knobs across "50 workloads" and assert the paper's
+*orderings* (see DESIGN.md Sec. 5, assumption 5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceConfig:
+    n_requests: int = 8192
+    n_cores: int = 4
+    n_banks: int = 8
+    n_subarrays: int = 16
+    rows_per_subarray: int = 64
+    copy_prob: float = 0.005         # fraction of requests that are bulk copies
+    zipf_s: float = 1.4              # hot-row skew
+    hot_rows: int = 64               # size of the hot set per bank
+    mean_gap_ns: float = 100.0       # mean inter-arrival time
+
+
+class Trace(NamedTuple):
+    t: jax.Array         # (N,) float32 arrival times, sorted
+    core: jax.Array      # (N,) int32
+    bank: jax.Array      # (N,) int32
+    row: jax.Array       # (N,) int32 global row id within bank (sa*rows + r)
+    is_copy: jax.Array   # (N,) bool
+    dst_row: jax.Array   # (N,) int32 copy destination row id
+
+
+def generate(key: jax.Array, cfg: TraceConfig) -> Trace:
+    k1, k2, k3, k4, k5, k6, k7 = jax.random.split(key, 7)
+    n = cfg.n_requests
+    n_rows = cfg.n_subarrays * cfg.rows_per_subarray
+
+    gaps = jax.random.exponential(k1, (n,)) * cfg.mean_gap_ns
+    t = jnp.cumsum(gaps).astype(jnp.float32)
+
+    core = jax.random.randint(k2, (n,), 0, cfg.n_cores, jnp.int32)
+    bank = jax.random.randint(k3, (n,), 0, cfg.n_banks, jnp.int32)
+
+    # Zipf over a hot set + uniform tail.  Hot set lives in the *slow*
+    # subarrays (sa >= 1); subarray 0 is the fast (VILLA) subarray.
+    ranks = jnp.arange(1, cfg.hot_rows + 1, dtype=jnp.float32)
+    p = ranks ** (-cfg.zipf_s)
+    p = p / p.sum()
+    hot_pick = jax.random.choice(k4, cfg.hot_rows, (n,), p=p)
+    hot_rows = cfg.rows_per_subarray + hot_pick          # rows in subarray 1+
+    uniform_rows = jax.random.randint(k5, (n,), cfg.rows_per_subarray,
+                                      n_rows, jnp.int32)
+    take_hot = jax.random.bernoulli(k6, 0.8, (n,))
+    row = jnp.where(take_hot, hot_rows, uniform_rows).astype(jnp.int32)
+
+    kc, kd = jax.random.split(k7)
+    is_copy = jax.random.bernoulli(kc, cfg.copy_prob, (n,))
+    dst_row = jax.random.randint(kd, (n,), cfg.rows_per_subarray, n_rows,
+                                 jnp.int32)
+    # ensure copy src/dst land in different subarrays
+    same_sa = (dst_row // cfg.rows_per_subarray) == (row // cfg.rows_per_subarray)
+    dst_row = jnp.where(same_sa, (dst_row + cfg.rows_per_subarray) % n_rows,
+                        dst_row)
+    dst_row = jnp.maximum(dst_row, cfg.rows_per_subarray)
+    return Trace(t=t, core=core, bank=bank, row=row, is_copy=is_copy,
+                 dst_row=dst_row)

@@ -1,0 +1,97 @@
+"""LISA-VILLA: in-DRAM caching policy (paper Sec. 3.2.1), pure JAX.
+
+The policy is reproduced exactly as described:
+  * a set of 1024 saturating counters per bank tracks row accesses;
+  * counter values are halved every epoch (staleness control);
+  * at the end of an epoch the 16 most-frequently-accessed rows are marked
+    *hot* and are cached into the fast subarray on their next access;
+  * replacement is *benefit-based* (Lee et al. [57]): every cached row has a
+    benefit counter incremented on hit; the minimum-benefit row is evicted.
+
+The same policy object is reused by the TPU-side tiered cache
+(``repro.core.lisa.villa_cache``) — that is the point of LISA-as-substrate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+COUNTER_SATURATION = 32767          # 15-bit saturating counters (6KB/bank, Sec 3.2.1 fn2)
+
+
+@dataclasses.dataclass(frozen=True)
+class VillaConfig:
+    n_counters: int = 1024
+    n_hot: int = 16                  # rows marked hot per epoch
+    n_slots: int = 16                # rows the fast subarray can hold
+    epoch_len: int = 256             # accesses per epoch (controller ticks it)
+    # fast-subarray timings (short bitlines; TL-DRAM-like near segment), ns
+    tRCD_fast: float = 7.5
+    tRAS_fast: float = 18.0
+    tRP_fast: float = 8.75
+    tCL_fast: float = 13.75          # column path unchanged
+
+
+class VillaState(NamedTuple):
+    counters: jax.Array      # (n_counters,) int32, saturating
+    hot: jax.Array           # (n_counters,) bool — marked hot last epoch
+    tags: jax.Array          # (n_slots,) int32 cached row id, -1 empty
+    benefit: jax.Array       # (n_slots,) int32
+    tick: jax.Array          # () int32 — accesses since epoch start
+
+
+def villa_init(cfg: VillaConfig) -> VillaState:
+    return VillaState(
+        counters=jnp.zeros((cfg.n_counters,), jnp.int32),
+        hot=jnp.zeros((cfg.n_counters,), bool),
+        tags=jnp.full((cfg.n_slots,), -1, jnp.int32),
+        benefit=jnp.zeros((cfg.n_slots,), jnp.int32),
+        tick=jnp.zeros((), jnp.int32),
+    )
+
+
+def villa_epoch(state: VillaState, cfg: VillaConfig) -> VillaState:
+    """End-of-epoch maintenance: halve counters, re-mark the top-16 as hot."""
+    topk_vals, _ = jax.lax.top_k(state.counters, cfg.n_hot)
+    threshold = jnp.maximum(topk_vals[-1], 1)
+    hot = state.counters >= threshold
+    return state._replace(counters=state.counters // 2, hot=hot,
+                          tick=jnp.zeros((), jnp.int32))
+
+
+def villa_access(state: VillaState, row_id: jax.Array, cfg: VillaConfig
+                 ) -> Tuple[VillaState, jax.Array, jax.Array, jax.Array]:
+    """One access to ``row_id``.  Returns (state, hit, insert, victim_slot).
+
+    ``hit``    — row is resident in the fast subarray (serve at fast latency,
+                 bump its benefit counter).
+    ``insert`` — row was marked hot and is not resident: cache it *now*
+                 ("cache them when they are accessed the next time"), evicting
+                 the minimum-benefit slot.  The caller charges the configured
+                 copy mechanism's latency/energy for the insertion.
+    Epoch bookkeeping (halving + hot re-marking) fires every ``epoch_len``
+    accesses, matching the paper's per-epoch description.
+    """
+    row_id = jnp.asarray(row_id, jnp.int32)
+    cidx = row_id % cfg.n_counters
+    counters = state.counters.at[cidx].set(
+        jnp.minimum(state.counters[cidx] + 1, COUNTER_SATURATION))
+
+    hit_mask = state.tags == row_id
+    hit = hit_mask.any()
+    benefit = jnp.where(hit_mask, state.benefit + 1, state.benefit)
+
+    is_hot = state.hot[cidx]
+    insert = is_hot & ~hit
+    victim = jnp.argmin(benefit)
+    tags = jnp.where(insert, state.tags.at[victim].set(row_id), state.tags)
+    benefit = jnp.where(insert, benefit.at[victim].set(1), benefit)
+
+    new = VillaState(counters=counters, hot=state.hot, tags=tags,
+                     benefit=benefit, tick=state.tick + 1)
+    new = jax.lax.cond(new.tick >= cfg.epoch_len,
+                       lambda s: villa_epoch(s, cfg), lambda s: s, new)
+    return new, hit, insert, victim

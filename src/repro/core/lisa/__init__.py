@@ -1,0 +1,9 @@
+"""LISA substrate adapted to the TPU mesh (see DESIGN.md Sec. 2).
+
+  rbm          — hop primitives: lisa_copy, lisa_broadcast, ring collectives
+                 with per-hop compute overlap
+  villa_cache  — tiered hot/cold store driven by the paper's exact policy
+  topology     — linear-in-hops cost model (Table 1 re-parameterised for ICI)
+  compression  — int8 error-feedback gradient compression for the DP axis
+"""
+from repro.core.lisa import rbm, villa_cache, topology, compression  # noqa: F401

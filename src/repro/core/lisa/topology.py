@@ -1,0 +1,77 @@
+"""Hop-distance cost model for the TPU mesh (the Table-1 linear model,
+re-parameterised with ICI constants).
+
+The paper's central quantitative structure is *linear-in-hops* transfer cost
+with a large constant advantage over the global bus (Table 1:
+T_RISC(h) = 140.5 + 8h ns vs. 1363.75 ns flat).  On a TPU v5e mesh the same
+structure holds for neighbor-hop (collective-permute) schedules vs.
+host-mediated / DCN movement:
+
+    T_hop_chain(h, bytes) = h * (alpha_ici + bytes / bw_ici)
+    T_host_path(bytes)    = 2 * (alpha_pcie + bytes / bw_pcie)
+
+The runtime uses this model for cost-aware migration decisions (the paper's
+"intelligent cost-aware mechanism", Sec. 3.2) — e.g. whether moving a KV page
+between replicas is worth it, or which of several fast-tier slots to fill.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# TPU v5e-ish constants (per task spec + public system papers).
+ICI_LINK_GBPS = 50.0        # GB/s per ICI link direction
+HBM_GBPS = 819.0            # GB/s HBM bandwidth per chip
+PEAK_BF16_TFLOPS = 197.0    # per chip
+ICI_ALPHA_US = 1.0          # per-hop launch latency (us), conservative
+PCIE_GBPS = 16.0            # host <-> device path (the "narrow bus")
+PCIE_ALPHA_US = 5.0
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshTopology:
+    """A 1-D ring view of one mesh axis (what hop schedules run over)."""
+    size: int
+    wraparound: bool = True     # TPU ICI tori have wraparound links
+
+    def hops(self, src: int, dst: int) -> int:
+        d = abs(dst - src)
+        return min(d, self.size - d) if self.wraparound else d
+
+    def path(self, src: int, dst: int) -> list[int]:
+        d = (dst - src) % self.size
+        if self.wraparound and d > self.size - d:
+            step, n = -1, self.size - d
+        else:
+            step, n = 1, d
+        return [(src + step * (i + 1)) % self.size for i in range(n)]
+
+
+def hop_chain_us(hops: int, nbytes: int) -> float:
+    """Neighbor-hop chain cost (the RBM-chain analogue)."""
+    return hops * (ICI_ALPHA_US + nbytes / (ICI_LINK_GBPS * 1e3))
+
+
+def host_path_us(nbytes: int) -> float:
+    """Through-the-host cost (the memcpy-over-channel analogue)."""
+    return 2 * (PCIE_ALPHA_US + nbytes / (PCIE_GBPS * 1e3))
+
+
+def ring_collective_us(axis_size: int, shard_bytes: int,
+                       kind: str = "all_gather") -> float:
+    """Cost of a ring collective over one mesh axis.
+
+    all_gather / reduce_scatter: (n-1) hops, each carrying one shard.
+    all_reduce: reduce_scatter + all_gather = 2(n-1) hops.
+    """
+    steps = {"all_gather": axis_size - 1,
+             "reduce_scatter": axis_size - 1,
+             "all_reduce": 2 * (axis_size - 1)}[kind]
+    return steps * (ICI_ALPHA_US + shard_bytes / (ICI_LINK_GBPS * 1e3))
+
+
+def migration_worthwhile(nbytes: int, hops: int, expected_hits: float,
+                         fast_gain_us: float) -> bool:
+    """Paper Sec. 3.2: 'an intelligent cost-aware mechanism is required to
+    make astute decisions on which data to cache and when.'  Move data only
+    if the expected latency saved exceeds the movement cost."""
+    return expected_hits * fast_gain_us > hop_chain_us(hops, nbytes)

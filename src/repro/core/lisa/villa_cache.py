@@ -1,0 +1,78 @@
+"""LISA-VILLA on TPU: a tiered store with the paper's exact caching policy.
+
+The DRAM version caches hot rows in fast (short-bitline) subarrays; the TPU
+version caches hot *items* (KV-cache pages, expert weights, request states) in
+a small fast tier against a large slow tier.  On real hardware the fast tier
+is HBM-resident working set and the slow tier is host memory / a compressed
+pool; movement between them is the expensive bulk transfer LISA accelerates —
+cost-awareness comes from ``topology.migration_worthwhile``.
+
+The *policy* (counters / epochs / top-16 hot marking / benefit-based
+replacement) is literally ``repro.core.dram.villa`` — the same code drives the
+DRAM reproduction and the TPU runtime.  That reuse is the "LISA as substrate"
+claim made concrete.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dram.villa import VillaConfig, VillaState, villa_access, villa_init
+
+
+class TieredStore(NamedTuple):
+    policy: VillaState
+    fast: jax.Array      # (n_slots, *item_shape) — hot tier
+    slow: jax.Array      # (n_items, *item_shape) — bulk tier
+    hits: jax.Array      # () int32
+    accesses: jax.Array  # () int32
+
+
+def make_store(slow: jax.Array, cfg: VillaConfig) -> TieredStore:
+    item_shape = slow.shape[1:]
+    return TieredStore(
+        policy=villa_init(cfg),
+        fast=jnp.zeros((cfg.n_slots,) + item_shape, slow.dtype),
+        slow=slow,
+        hits=jnp.zeros((), jnp.int32),
+        accesses=jnp.zeros((), jnp.int32),
+    )
+
+
+def access(store: TieredStore, item_id: jax.Array, cfg: VillaConfig
+           ) -> Tuple[TieredStore, jax.Array, jax.Array]:
+    """Read item ``item_id`` through the tiered store.
+
+    Returns (store', data, hit).  Hot items are promoted on access (the
+    paper's "cache them when they are accessed the next time"), evicting the
+    minimum-benefit slot.  Promotion copies slow->fast — the bulk movement
+    that LISA-RISC (hop chains / rbm_copy kernel) performs on hardware.
+    """
+    item_id = jnp.asarray(item_id, jnp.int32)
+    policy, hit, insert, victim = villa_access(store.policy, item_id, cfg)
+    slow_data = store.slow[item_id]
+    fast = jnp.where(insert, store.fast.at[victim].set(slow_data), store.fast)
+    slot = jnp.argmax(policy.tags == item_id)          # valid for hit & insert
+    data = jnp.where(hit, fast[slot], slow_data)
+    return (TieredStore(policy=policy, fast=fast, slow=store.slow,
+                        hits=store.hits + hit.astype(jnp.int32),
+                        accesses=store.accesses + 1),
+            data, hit)
+
+
+def write(store: TieredStore, item_id: jax.Array, data: jax.Array
+          ) -> TieredStore:
+    """Write-through: update the slow tier, and the fast slot if resident."""
+    item_id = jnp.asarray(item_id, jnp.int32)
+    slow = store.slow.at[item_id].set(data)
+    resident = store.policy.tags == item_id
+    slot = jnp.argmax(resident)
+    fast = jnp.where(resident.any(), store.fast.at[slot].set(data), store.fast)
+    return store._replace(slow=slow, fast=fast)
+
+
+def hit_rate(store: TieredStore) -> jax.Array:
+    return jnp.where(store.accesses > 0,
+                     store.hits / jnp.maximum(store.accesses, 1), 0.0)

@@ -1,0 +1,53 @@
+"""Deterministic synthetic LM data pipeline.
+
+Stateless: ``batch_at(step)`` is a pure function of (seed, step), so restart
+after a failure reproduces the exact token stream with no data-loader state
+in the checkpoint — the fault-tolerance property the launcher relies on.
+
+The synthetic language has learnable structure (a repeated-segment copy task
+over a Markov backbone) so small models show clear loss decrease within a
+few hundred steps — the end-to-end example trains on it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    repeat_len: int = 16       # copy-task period (structure to learn)
+
+
+def batch_at(cfg: DataConfig, step: int | jax.Array) -> Dict[str, jax.Array]:
+    """Produce the global batch for ``step`` (tokens, labels)."""
+    key = jax.random.fold_in(jax.random.key(cfg.seed), step)
+    k1, k2 = jax.random.split(key)
+    B, S, V = cfg.global_batch, cfg.seq_len, cfg.vocab_size
+    R = min(cfg.repeat_len, S)
+    n_rep = -(-S // R)
+    base = jax.random.randint(k1, (B, R), 0, V, jnp.int32)
+    tokens = jnp.tile(base, (1, n_rep))[:, :S]
+    # sprinkle noise so it's not trivially memorisable
+    noise = jax.random.bernoulli(k2, 0.05, (B, S))
+    rand = jax.random.randint(jax.random.fold_in(k2, 1), (B, S), 0, V, jnp.int32)
+    tokens = jnp.where(noise, rand, tokens)
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    return {"tokens": tokens, "labels": labels}
+
+
+def host_shard(batch: Dict[str, jax.Array], host_id: int, n_hosts: int
+               ) -> Dict[str, jax.Array]:
+    """Slice the per-host shard (multi-host launchers feed jax.make_array_
+    from_process_local_data with this)."""
+    def cut(x):
+        per = x.shape[0] // n_hosts
+        return x[host_id * per:(host_id + 1) * per]
+    return {k: cut(v) for k, v in batch.items()}

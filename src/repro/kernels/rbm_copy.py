@@ -1,0 +1,84 @@
+"""Pallas TPU bulk-copy kernel: RBM at the VMEM level.
+
+A row-buffer movement is a wide, latency-optimal transfer between adjacent
+storage arrays.  The TPU analogue at the kernel level is a tiled HBM->HBM
+copy staged through VMEM: the Pallas grid pipeline keeps *two* tile buffers
+in flight — while tile i computes (stores), tile i+1's DMA is already running
+("precharging" the idle buffer: LISA-LIP, DESIGN.md Sec. 5.4).
+
+Tiles are (rows x 128-lane) MXU/VPU-aligned.  ``rbm_copy`` is the movement
+engine used by the serving tier-promotion path and checkpoint resharding when
+running on real TPUs; on CPU it validates in interpret mode against the
+identity oracle.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _copy_kernel(src_ref, dst_ref):
+    dst_ref[...] = src_ref[...]
+
+
+def rbm_copy(x: jax.Array, *, tile_rows: int = 256, lanes: int = 128,
+             interpret: Optional[bool] = None) -> jax.Array:
+    """Copy ``x`` (any shape) through VMEM tiles of (tile_rows, lanes)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    flat = x.reshape(-1)
+    n = flat.size
+    per_tile = tile_rows * lanes
+    n_tiles = -(-n // per_tile)
+    pad = n_tiles * per_tile - n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    tiled = flat.reshape(n_tiles * tile_rows, lanes)
+
+    out = pl.pallas_call(
+        _copy_kernel,
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((tile_rows, lanes), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile_rows, lanes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(tiled.shape, x.dtype),
+        interpret=interpret,
+    )(tiled)
+    return out.reshape(-1)[:n].reshape(x.shape)
+
+
+def _gather_kernel(table_ref, pages_ref, out_ref):
+    # pages_ref block is selected by the scalar-prefetched table entry;
+    # the body is a pure VMEM move.
+    out_ref[...] = pages_ref[...]
+
+
+def villa_gather(pages: jax.Array, table: jax.Array, *,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """Gather whole pages by a page table: out[j] = pages[table[j]].
+
+    pages: (N, P, d) — P*d must tile to (8, 128) multiples for real TPUs.
+    The page table is scalar-prefetched so the grid pipeline can launch the
+    DMA for page j+1 while page j is being written (LIP again) — this is the
+    VILLA fast-tier read path.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    from jax.experimental.pallas import tpu as pltpu
+    N, P, d = pages.shape
+    n_out = table.shape[0]
+
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n_out,),
+            in_specs=[pl.BlockSpec((1, P, d), lambda j, table: (table[j], 0, 0))],
+            out_specs=pl.BlockSpec((1, P, d), lambda j, table: (j, 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_out, P, d), pages.dtype),
+        interpret=interpret,
+    )(table.astype(jnp.int32), pages)
+    return out

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0) -> jax.Array:
+    """Exact softmax attention.  q: (B,H,S,D), k/v: (B,K,T,D), H = K*G."""
+    B, H, S, D = q.shape
+    K, T = k.shape[1], k.shape[2]
+    G = H // K
+    qr = q.reshape(B, K, G, S, D).astype(jnp.float32)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qr, k.astype(jnp.float32)) * D ** -0.5
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(T)[None, :]
+    valid = jnp.ones((S, T), bool)
+    if causal:
+        valid &= k_pos <= q_pos + (T - S)       # q block at sequence tail
+    if window > 0:
+        valid &= k_pos > q_pos + (T - S) - window
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, S, D).astype(q.dtype)
+
+
+def rbm_copy_ref(x: jax.Array) -> jax.Array:
+    """Bulk copy oracle: identity (the kernel must move every byte)."""
+    return x + 0
+
+
+def villa_gather_ref(pages: jax.Array, table: jax.Array) -> jax.Array:
+    """Tiered-cache page gather oracle.  pages: (N, P, d), table: (n,)."""
+    return jnp.take(pages, table, axis=0)

@@ -1,0 +1,36 @@
+"""Production mesh construction (single-pod 16x16, multi-pod 2x16x16)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 (data, model) per pod; 2x16x16 (pod, data, model) across pods.
+
+    A function (not a module-level constant) so importing this module never
+    touches jax device state; the dry-run sets XLA_FLAGS for 512 host
+    devices *before* calling this.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(jax.devices())} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "importing jax (launch/dryrun.py does this)")
+    return jax.sharding.Mesh(
+        np.asarray(devices).reshape(shape), axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (tests / CPU examples)."""
+    n = data * model
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(jax.devices())}")
+    return jax.sharding.Mesh(
+        np.asarray(devices).reshape(data, model), ("data", "model"))

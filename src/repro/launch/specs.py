@@ -1,0 +1,65 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs`` covers the batch inputs; ``state_specs`` / ``cache_specs``
+cover train state and KV caches via ``jax.eval_shape`` over the real
+constructors — weak-type-correct and shardable, nothing materialised.
+Modality frontends are STUBS per the task spec: [audio]/[vlm] get
+precomputed frame/patch embeddings (enc_embeds) and M-RoPE position ids.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SHAPES, ShapeConfig
+from repro.models import lm
+from repro.train.step import ParallelConfig, init_train_state
+
+SDS = jax.ShapeDtypeStruct
+
+# Encoder length for enc-dec decode shapes (speech frames after frontend).
+ENC_LEN_DECODE = 4096
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig | str,
+                act_dtype=jnp.bfloat16) -> Dict[str, Any]:
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        specs: Dict[str, Any] = {
+            "tokens": SDS((B, S), jnp.int32),
+            "labels": SDS((B, S), jnp.int32),
+        }
+        if cfg.mrope:
+            specs["positions"] = SDS((3, B, S), jnp.int32)
+        if cfg.encdec:
+            specs["enc_embeds"] = SDS((B, S, cfg.d_model), act_dtype)
+        if shape.kind == "prefill":
+            del specs["labels"]
+        return specs
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": SDS((B, 1), jnp.int32),
+            "pos": SDS((), jnp.int32)}
+
+
+def state_specs(cfg: ModelConfig, pcfg: ParallelConfig, param_dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: init_train_state(cfg, jax.random.key(0), pcfg, param_dtype))
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig | str,
+                cache_dtype=jnp.bfloat16):
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    enc_len = ENC_LEN_DECODE if cfg.encdec else 0
+    return jax.eval_shape(
+        lambda: lm.init_cache(cfg, shape.global_batch, max_len=shape.seq_len,
+                              enc_len=enc_len, dtype=cache_dtype))
+
+
+def param_specs(cfg: ModelConfig, param_dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: lm.init_lm(cfg, jax.random.key(0), param_dtype))

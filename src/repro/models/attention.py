@@ -1,0 +1,363 @@
+"""Attention variants: GQA (full / sliding-window), MLA (DeepSeek-V2),
+with a chunked online-softmax core that keeps prefill memory linear in
+sequence length (the pure-jnp twin of ``kernels/flash_attention.py``).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_mrope, apply_rope, dense_init, rms_norm
+from repro.models.sharding import constrain
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention core (flash-style, pure jnp).
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      q_pos: jax.Array, kv_pos: jax.Array,
+                      *, causal: bool = True, window: int = 0,
+                      block: int = 512, k_scale=None, v_scale=None
+                      ) -> jax.Array:
+    """q: (B,S,H,Dk), k: (B,T,K,Dk), v: (B,T,K,Dv); H = K*G.
+
+    Scans KV blocks with running (max, sum, acc) — memory O(S*block), never
+    materialising the (S,T) score matrix.  ``window > 0`` masks keys older
+    than ``q_pos - window + 1`` (sliding-window attention).  Invalid cache
+    slots must carry ``kv_pos`` > any real position (they get causally
+    masked).  ``k_scale``/``v_scale`` (B,T,K): int8-quantised KV cache;
+    dequantisation happens inside the kernel region per block (the fused
+    dequant-attention kernel on real TPUs).
+    """
+    B, S, H, Dk = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    Dv = v.shape[-1]
+    scale = Dk ** -0.5
+    # The whole body runs as the Pallas flash kernel on TPU
+    # (kernels/flash_attention.py); the scope marks it for the roofline's
+    # kernel-adjusted memory accounting (roofline/hlo.py).
+    with jax.named_scope("pallas_kernel_region"):
+        return _chunked_attention_body(q, k, v, q_pos, kv_pos, causal=causal,
+                                       window=window, block=block,
+                                       k_scale=k_scale, v_scale=v_scale)
+
+
+def _chunked_attention_body(q, k, v, q_pos, kv_pos, *, causal, window, block,
+                            k_scale=None, v_scale=None):
+    B, S, H, Dk = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    Dv = v.shape[-1]
+    scale = Dk ** -0.5
+
+    block = min(block, T)
+    nb = -(-T // block)
+    pad = nb * block - T
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=2**30)
+        if k_scale is not None:
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, pad), (0, 0)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, pad), (0, 0)))
+
+    qr = (q.reshape(B, S, K, G, Dk) * scale).astype(jnp.float32)
+    kb = k.reshape(B, nb, block, K, Dk)
+    vb = v.reshape(B, nb, block, K, Dv)
+    pb = kv_pos.reshape(B, nb, block)
+    sb = (k_scale.reshape(B, nb, block, K), v_scale.reshape(B, nb, block, K)) \
+        if k_scale is not None else None
+
+    def step(carry, blk):
+        m, l, acc = carry
+        if sb is not None:
+            kj, vj, pj, ksj, vsj = blk
+            kj = kj.astype(jnp.float32) * ksj[..., None]
+            vj = vj.astype(jnp.float32) * vsj[..., None]
+        else:
+            kj, vj, pj = blk
+        s = jnp.einsum("bskgd,btkd->bkgst", qr, kj.astype(jnp.float32))
+        valid = jnp.ones((B, 1, 1, S, block), bool)
+        if causal:
+            valid &= pj[:, None, None, None, :] <= q_pos[:, None, None, :, None]
+        if window > 0:
+            valid &= pj[:, None, None, None, :] > (
+                q_pos[:, None, None, :, None] - window)
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(valid, p, 0.0)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p, vj.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, K, G, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, S), jnp.float32)
+    a0 = jnp.zeros((B, K, G, S, Dv), jnp.float32)
+    xs = [jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0),
+          jnp.moveaxis(pb, 1, 0)]
+    if sb is not None:
+        xs += [jnp.moveaxis(sb[0], 1, 0), jnp.moveaxis(sb[1], 1, 0)]
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), tuple(xs))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, K * G, S, Dv).swapaxes(1, 2).reshape(B, S, H, Dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block (RoPE / M-RoPE, optional sliding window, optional QKV bias).
+# ---------------------------------------------------------------------------
+
+def init_gqa_params(key: jax.Array, d_model: int, n_heads: int, n_kv: int,
+                    head_dim: int, qkv_bias: bool = False,
+                    dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d_model, n_heads * head_dim), dtype=dtype),
+        "wk": dense_init(ks[1], (d_model, n_kv * head_dim), dtype=dtype),
+        "wv": dense_init(ks[2], (d_model, n_kv * head_dim), dtype=dtype),
+        "wo": dense_init(ks[3], (n_heads * head_dim, d_model), dtype=dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+    return p
+
+
+def gqa_block(params: Dict, x: jax.Array, positions: jax.Array, *,
+              n_heads: int, n_kv: int, head_dim: int,
+              rope_theta: float = 1e4, mrope: bool = False,
+              window: int = 0, block: int = 512,
+              kv_cache: Optional[Tuple[jax.Array, jax.Array, jax.Array]] = None,
+              cache_index: Optional[jax.Array] = None,
+              kv_scales: Optional[Tuple[jax.Array, jax.Array]] = None,
+              ) -> Tuple[jax.Array, Optional[Tuple]]:
+    """Self-attention.  Training: ``kv_cache=None`` (causal over ``x``).
+    Decode: ``kv_cache=(k, v, kv_pos)`` ring/linear buffers; the new token's
+    K/V is written at ``cache_index`` and attention runs over the cache.
+    int8 caches quantise on write (per-token-per-head absmax scales in
+    ``kv_scales``) and dequantise inside the attention kernel region.
+
+    positions: (B,S) int32, or (3,B,S) when ``mrope``.
+    """
+    B, S, M = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, S, n_heads, head_dim)
+    k = k.reshape(B, S, n_kv, head_dim)
+    v = v.reshape(B, S, n_kv, head_dim)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+
+    if mrope:
+        q = apply_mrope(q, positions, rope_theta)
+        k = apply_mrope(k, positions, rope_theta)
+        tok_pos = positions[0]
+    else:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+        tok_pos = positions
+
+    if kv_cache is None:
+        out = chunked_attention(q, k, v, tok_pos, tok_pos,
+                                causal=True, window=window, block=block)
+        new_cache = None
+    else:
+        ck, cv, cpos = kv_cache
+        idx = cache_index
+        new_scales = None
+        if ck.dtype == jnp.int8:
+            ks_buf, vs_buf = kv_scales
+            k_s = jnp.maximum(jnp.abs(k).max(-1), 1e-6) / 127.0   # (B,S,K)
+            v_s = jnp.maximum(jnp.abs(v).max(-1), 1e-6) / 127.0
+            kq = jnp.clip(jnp.round(k / k_s[..., None]), -127, 127
+                          ).astype(jnp.int8)
+            vq = jnp.clip(jnp.round(v / v_s[..., None]), -127, 127
+                          ).astype(jnp.int8)
+            ck = jax.lax.dynamic_update_slice(ck, kq, (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, vq, (0, idx, 0, 0))
+            ks_buf = jax.lax.dynamic_update_slice(
+                ks_buf, k_s.astype(ks_buf.dtype), (0, idx, 0))
+            vs_buf = jax.lax.dynamic_update_slice(
+                vs_buf, v_s.astype(vs_buf.dtype), (0, idx, 0))
+            new_scales = (ks_buf, vs_buf)
+        else:
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                              (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                              (0, idx, 0, 0))
+        cpos = jax.lax.dynamic_update_slice(
+            cpos, jnp.broadcast_to(tok_pos, (B, S)), (0, idx))
+        out = chunked_attention(
+            q, ck, cv, tok_pos, cpos, causal=True, window=window, block=block,
+            k_scale=new_scales[0] if new_scales else None,
+            v_scale=new_scales[1] if new_scales else None)
+        new_cache = (ck, cv, cpos, new_scales)
+
+    y = out.reshape(B, S, n_heads * head_dim) @ params["wo"]
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (Multi-head Latent Attention, DeepSeek-V2) with compressed decode cache.
+# ---------------------------------------------------------------------------
+
+def init_mla_params(key: jax.Array, d_model: int, n_heads: int,
+                    q_lora: int, kv_lora: int, qk_nope: int, qk_rope: int,
+                    v_dim: int, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 5)
+    return {
+        "q_a": dense_init(ks[0], (d_model, q_lora), dtype=dtype),
+        "q_norm": jnp.zeros((q_lora,), jnp.float32),
+        "q_b": dense_init(ks[1], (q_lora, n_heads * (qk_nope + qk_rope)), dtype=dtype),
+        "kv_a": dense_init(ks[2], (d_model, kv_lora + qk_rope), dtype=dtype),
+        "kv_norm": jnp.zeros((kv_lora,), jnp.float32),
+        "kv_b": dense_init(ks[3], (kv_lora, n_heads * (qk_nope + v_dim)), dtype=dtype),
+        "wo": dense_init(ks[4], (n_heads * v_dim, d_model), dtype=dtype),
+    }
+
+
+def _mla_qkr(params, x, positions, n_heads, qk_nope, qk_rope, kv_lora,
+             rope_theta):
+    B, S, _ = x.shape
+    cq = rms_norm(x @ params["q_a"], params["q_norm"])
+    q = (cq @ params["q_b"]).reshape(B, S, n_heads, qk_nope + qk_rope)
+    q = constrain(q, "batch", None, "heads", None)
+    q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+
+    ckv = x @ params["kv_a"]
+    c_kv = rms_norm(ckv[..., :kv_lora], params["kv_norm"])  # (B,S,kv_lora)
+    k_rope = apply_rope(ckv[..., kv_lora:][:, :, None, :], positions,
+                        rope_theta)[:, :, 0, :]             # (B,S,qk_rope)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_block(params: Dict, x: jax.Array, positions: jax.Array, *,
+              n_heads: int, q_lora: int, kv_lora: int, qk_nope: int,
+              qk_rope: int, v_dim: int, rope_theta: float = 1e4,
+              block: int = 512,
+              kv_cache: Optional[Tuple[jax.Array, jax.Array, jax.Array]] = None,
+              cache_index: Optional[jax.Array] = None,
+              kv_scales: Optional[Tuple[jax.Array, jax.Array]] = None,
+              ) -> Tuple[jax.Array, Optional[Tuple]]:
+    """Training path expands K/V per head; decode path uses the *absorbed*
+    formulation over the compressed cache (c_kv, k_rope) — the cache is
+    (kv_lora + qk_rope) per token instead of 2*H*D (the paper-relevant
+    bulk-data saving: 576 vs 32768 floats/token for DeepSeek-V2).
+    int8 caches quantise on write (per-token scales) and dequantise inside
+    the kernel region."""
+    B, S, M = x.shape
+    q_nope, q_rope, c_kv, k_rope = _mla_qkr(
+        params, x, positions, n_heads, qk_nope, qk_rope, kv_lora, rope_theta)
+
+    w_kv = params["kv_b"].reshape(kv_lora, n_heads, qk_nope + v_dim)
+    w_uk, w_uv = w_kv[..., :qk_nope], w_kv[..., qk_nope:]
+
+    if kv_cache is None:
+        kv = jnp.einsum("btc,chd->bthd", c_kv, w_kv)
+        k_nope, v = kv[..., :qk_nope], kv[..., qk_nope:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (B, S, n_heads, qk_rope))], -1)
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        out = chunked_attention(q, k, v, positions, positions,
+                                causal=True, block=block)
+        new_cache = None
+    else:
+        cc, cr, cpos = kv_cache                      # (B,T,kv_lora) (B,T,rope)
+        idx = cache_index
+        new_scales = None
+        if cc.dtype == jnp.int8:
+            cs_buf, rs_buf = kv_scales
+            c_s = jnp.maximum(jnp.abs(c_kv).max(-1), 1e-6) / 127.0   # (B,S)
+            r_s = jnp.maximum(jnp.abs(k_rope).max(-1), 1e-6) / 127.0
+            c_q = jnp.clip(jnp.round(c_kv / c_s[..., None]), -127, 127
+                           ).astype(jnp.int8)
+            r_q = jnp.clip(jnp.round(k_rope / r_s[..., None]), -127, 127
+                           ).astype(jnp.int8)
+            cc = jax.lax.dynamic_update_slice(cc, c_q, (0, idx, 0))
+            cr = jax.lax.dynamic_update_slice(cr, r_q, (0, idx, 0))
+            cs_buf = jax.lax.dynamic_update_slice(
+                cs_buf, c_s.astype(cs_buf.dtype), (0, idx))
+            rs_buf = jax.lax.dynamic_update_slice(
+                rs_buf, r_s.astype(rs_buf.dtype), (0, idx))
+            new_scales = (cs_buf, rs_buf)
+        else:
+            cc = jax.lax.dynamic_update_slice(cc, c_kv.astype(cc.dtype),
+                                              (0, idx, 0))
+            cr = jax.lax.dynamic_update_slice(cr, k_rope.astype(cr.dtype),
+                                              (0, idx, 0))
+        cpos = jax.lax.dynamic_update_slice(
+            cpos, jnp.broadcast_to(positions, (B, S)), (0, idx))
+        # Absorbed attention over the compressed cache — the fused
+        # MLA-decode kernel on real TPUs (dequant inside the region).
+        with jax.named_scope("pallas_kernel_region"):
+            scale = (qk_nope + qk_rope) ** -0.5
+            q_c = jnp.einsum("bshd,chd->bshc", q_nope, w_uk)
+            s_nope = jnp.einsum("bshc,btc->bhst", q_c, cc.astype(q_c.dtype))
+            s_rope = jnp.einsum("bshd,btd->bhst", q_rope,
+                                cr.astype(q_rope.dtype))
+            if new_scales is not None:      # undo per-token quantisation
+                s_nope = s_nope * new_scales[0][:, None, None, :]
+                s_rope = s_rope * new_scales[1][:, None, None, :]
+            s = (s_nope + s_rope) * scale
+            valid = cpos[:, None, None, :] <= positions[:, None, :, None]
+            s = jnp.where(valid, s.astype(jnp.float32), NEG_INF)
+            p = jax.nn.softmax(s, axis=-1)
+            if new_scales is not None:
+                p_eff = (p * new_scales[0][:, None, None, :]).astype(q_c.dtype)
+            else:
+                p_eff = p.astype(q_c.dtype)
+            ctx = jnp.einsum("bhst,btc->bshc", p_eff, cc.astype(q_c.dtype))
+            out = jnp.einsum("bshc,chd->bshd", ctx, w_uv)
+        new_cache = (cc, cr, cpos, new_scales)
+
+    y = out.reshape(B, S, n_heads * v_dim) @ params["wo"]
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (enc-dec; seamless-m4t decoder).
+# ---------------------------------------------------------------------------
+
+def init_cross_params(key: jax.Array, d_model: int, n_heads: int,
+                      head_dim: int, dtype=jnp.float32) -> Dict:
+    return init_gqa_params(key, d_model, n_heads, n_heads, head_dim,
+                           dtype=dtype)
+
+
+def cross_block(params: Dict, x: jax.Array, enc_kv: Tuple[jax.Array, jax.Array],
+                enc_mask: Optional[jax.Array], *, n_heads: int, head_dim: int
+                ) -> jax.Array:
+    """enc_kv: precomputed (k, v) of shape (B, T, H, D) from encoder output."""
+    B, S, M = x.shape
+    q = (x @ params["wq"]).reshape(B, S, n_heads, head_dim)
+    k, v = enc_kv
+    T = k.shape[1]
+    kv_pos = jnp.zeros((B, T), jnp.int32)
+    if enc_mask is not None:
+        kv_pos = jnp.where(enc_mask, 0, 2**30)
+    q_pos = jnp.full((B, S), 2**29, jnp.int32)     # attend to all valid enc
+    out = chunked_attention(q, k, v, q_pos, kv_pos, causal=True, block=512)
+    return out.reshape(B, S, n_heads * head_dim) @ params["wo"]
+
+
+def encode_kv(params: Dict, enc_out: jax.Array, n_heads: int, head_dim: int
+              ) -> Tuple[jax.Array, jax.Array]:
+    B, T, _ = enc_out.shape
+    k = (enc_out @ params["wk"]).reshape(B, T, n_heads, head_dim)
+    v = (enc_out @ params["wv"]).reshape(B, T, n_heads, head_dim)
+    return k, v

@@ -1,0 +1,123 @@
+"""Shared model building blocks: norms, embeddings, MLPs, RoPE variants."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import constrain
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with fp32 *statistics* but application in the input dtype —
+    keeps the (B,S,d) elementwise traffic and its cotangents in bf16
+    (EXPERIMENTS.md §Perf iteration A5: −fp32 norm families)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * (1.0 + scale).astype(x.dtype)
+
+
+def init_rms(d: int) -> jax.Array:
+    return jnp.zeros((d,), jnp.float32)
+
+
+def dense_init(key: jax.Array, shape, scale: Optional[float] = None,
+               dtype=jnp.float32) -> jax.Array:
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP: SwiGLU / GeGLU gated feed-forward.
+# ---------------------------------------------------------------------------
+
+def init_mlp(key: jax.Array, d_model: int, d_ff: int, dtype=jnp.float32) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(k1, (d_model, d_ff), dtype=dtype),
+        "wi_up": dense_init(k2, (d_model, d_ff), dtype=dtype),
+        "wo": dense_init(k3, (d_ff, d_model), dtype=dtype),
+    }
+
+
+def mlp(params: Dict, x: jax.Array, activation: str = "swiglu") -> jax.Array:
+    gate = x @ params["wi_gate"]
+    up = x @ params["wi_up"]
+    gate = constrain(gate, "batch", None, "ff")
+    if activation == "swiglu":
+        h = jax.nn.silu(gate) * up
+    elif activation == "geglu":
+        h = jax.nn.gelu(gate, approximate=True) * up
+    else:
+        raise ValueError(f"unknown activation {activation}")
+    return h @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard + M-RoPE).
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 1e4) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                                  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs        # (B, S, D/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float = 1e4,
+                sections=(2, 1, 1)) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: the frequency bands of each head are split
+    into temporal/height/width sections, each rotated by its own position id.
+
+    x: (B, S, H, D); positions: (3, B, S) — for text all three are equal.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freqs = rope_freqs(d, theta)                                  # (half,)
+    total = sum(sections)
+    bounds = []
+    acc = 0
+    for s in sections:
+        n = half * s // total
+        bounds.append((acc, acc + n))
+        acc += n
+    bounds[-1] = (bounds[-1][0], half)
+    ang_parts = []
+    for (lo, hi), pos in zip(bounds, positions):
+        ang_parts.append(pos[..., None].astype(jnp.float32) * freqs[lo:hi])
+    ang = jnp.concatenate(ang_parts, -1)                          # (B, S, half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head.
+# ---------------------------------------------------------------------------
+
+def init_embed(key: jax.Array, vocab: int, d_model: int, dtype=jnp.float32) -> jax.Array:
+    # std 1/sqrt(d): the embed-scale multiplier sqrt(d) restores unit variance
+    # and tied logits stay O(1) at init (CE starts near ln V).
+    return dense_init(key, (vocab, d_model), scale=d_model ** -0.5, dtype=dtype)
+
+
+def embed(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    out = jnp.take(table, tokens, axis=0)
+    return constrain(out, "batch", "seq", None)
+
+
+def unembed(table_or_w: jax.Array, x: jax.Array, tied: bool) -> jax.Array:
+    w = table_or_w.T if tied else table_or_w
+    logits = x @ w
+    return constrain(logits, "batch", "seq", "vocab")

@@ -1,0 +1,161 @@
+"""RWKV-6 ("Finch") blocks: attention-free time-mix with *data-dependent
+decay* (the defining RWKV-6 feature) + squared-ReLU channel-mix.
+
+State is O(1) in context length: per block a (B, H, D, D) wkv matrix plus two
+token-shift vectors — which is why rwkv6 runs the long_500k decode shape.
+Training runs a chunked, rematerialised scan like the Mamba block.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.models.sharding import constrain
+
+HEAD_DIM = 64
+DECAY_LORA = 64
+
+
+class RWKVState(NamedTuple):
+    att_shift: jax.Array   # (B, d_model) — previous token (time-mix)
+    ffn_shift: jax.Array   # (B, d_model) — previous token (channel-mix)
+    wkv: jax.Array         # (B, H, D, D) fp32 — key-value state
+
+
+def init_rwkv_params(key: jax.Array, d_model: int, d_ff: int,
+                     dtype=jnp.float32) -> Dict:
+    H = d_model // HEAD_DIM
+    ks = jax.random.split(key, 12)
+    return {
+        # time-mix token-shift interpolation weights
+        "mu_w": jnp.full((d_model,), 0.5, jnp.float32),
+        "mu_k": jnp.full((d_model,), 0.5, jnp.float32),
+        "mu_v": jnp.full((d_model,), 0.5, jnp.float32),
+        "mu_r": jnp.full((d_model,), 0.5, jnp.float32),
+        "mu_g": jnp.full((d_model,), 0.5, jnp.float32),
+        # data-dependent decay LoRA: w = exp(-exp(w0 + tanh(xw@w1)@w2))
+        "w0": jnp.full((d_model,), -6.0, jnp.float32),
+        "w1": dense_init(ks[0], (d_model, DECAY_LORA), dtype=dtype),
+        "w2": dense_init(ks[1], (DECAY_LORA, d_model),
+                         scale=DECAY_LORA ** -0.5, dtype=dtype),
+        "u": dense_init(ks[2], (H, HEAD_DIM), scale=1.0, dtype=jnp.float32),
+        "wk": dense_init(ks[3], (d_model, d_model), dtype=dtype),
+        "wv": dense_init(ks[4], (d_model, d_model), dtype=dtype),
+        "wr": dense_init(ks[5], (d_model, d_model), dtype=dtype),
+        "wg": dense_init(ks[6], (d_model, d_model), dtype=dtype),
+        "wo": dense_init(ks[7], (d_model, d_model), dtype=dtype),
+        "ln_x": jnp.ones((d_model,), jnp.float32),
+        # channel-mix
+        "cm_mu_k": jnp.full((d_model,), 0.5, jnp.float32),
+        "cm_mu_r": jnp.full((d_model,), 0.5, jnp.float32),
+        "cm_wk": dense_init(ks[8], (d_model, d_ff), dtype=dtype),
+        "cm_wv": dense_init(ks[9], (d_ff, d_model), dtype=dtype),
+        "cm_wr": dense_init(ks[10], (d_model, d_model), dtype=dtype),
+    }
+
+
+def _shift(x: jax.Array, prev: jax.Array | None) -> jax.Array:
+    """Token shift: x[t-1] (zeros / carried state at t=0)."""
+    if prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([prev[:, None, :].astype(x.dtype), x], 1)[:, :-1]
+
+
+def _wkv_scan(r, k, v, w, u, chunk: int, state: jax.Array | None):
+    """RWKV-6 recurrence.  r,k,v: (B,S,H,D); w: (B,S,H,D) decay in (0,1).
+
+    out_t = r_t . (S_{t-1} + u * k_t v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    B, S, H, D = r.shape
+
+    def inner(s, inp):
+        r_t, k_t, v_t, w_t = inp                                # (B,H,D)
+        kv = k_t[..., :, None] * v_t[..., None, :]              # (B,H,Dk,Dv)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, out
+
+    @jax.checkpoint
+    def run_chunk(s, inp):
+        return jax.lax.scan(inner, s, inp)
+
+    if state is None:
+        state = jnp.zeros((B, H, D, D), jnp.float32)
+
+    if S == 1:
+        s, out = inner(state, (r[:, 0], k[:, 0], v[:, 0], w[:, 0]))
+        return out[:, None], s
+
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk -= 1
+    nc = S // chunk
+    resh = lambda a: jnp.moveaxis(a.reshape(B, nc, chunk, H, D), (1, 2), (0, 1))
+    # TPU path: a chunked GLA-style wkv kernel (VMEM-resident state); marked
+    # for the roofline's kernel-adjusted memory accounting.
+    with jax.named_scope("pallas_kernel_region"):
+        s, ys = jax.lax.scan(lambda s, i: run_chunk(s, i), state,
+                             (resh(r), resh(k), resh(v), resh(w)))
+    return jnp.moveaxis(ys.reshape(nc * chunk, B, H, D), 0, 1), s
+
+
+def rwkv_time_mix(params: Dict, x: jax.Array, *, chunk: int = 128,
+                  state: RWKVState | None = None
+                  ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array] | None]:
+    B, S, M = x.shape
+    H = M // HEAD_DIM
+    prev = state.att_shift if state is not None else None
+    xs = _shift(x, prev)
+    mix = lambda mu: (x + (xs - x) * mu).astype(x.dtype)
+
+    xw, xk, xv, xr, xg = (mix(params[f"mu_{n}"]) for n in "wkvrg")
+    # data-dependent per-channel decay (the Finch contribution)
+    dd = params["w0"] + jnp.tanh(xw @ params["w1"]).astype(jnp.float32) \
+        @ params["w2"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(jnp.clip(dd, -20.0, 1.0)))             # (B,S,M)
+
+    k = (xk @ params["wk"]).reshape(B, S, H, HEAD_DIM)
+    v = (xv @ params["wv"]).reshape(B, S, H, HEAD_DIM)
+    r = (xr @ params["wr"]).reshape(B, S, H, HEAD_DIM)
+    g = jax.nn.silu(xg @ params["wg"])
+    k = constrain(k, "batch", None, "heads", None)
+
+    out, new_wkv = _wkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                             v.astype(jnp.float32),
+                             w.reshape(B, S, H, HEAD_DIM), params["u"],
+                             chunk, state.wkv if state is not None else None)
+    # per-head group-norm (RWKV uses GN over heads)
+    mean = out.mean(-1, keepdims=True)
+    var = out.var(-1, keepdims=True)
+    out = (out - mean) * jax.lax.rsqrt(var + 64e-5)
+    out = out.reshape(B, S, M) * params["ln_x"]
+    y = (out.astype(x.dtype) * g) @ params["wo"]
+    if state is None:
+        return y, None
+    return y, (x[:, -1, :], new_wkv)
+
+
+def rwkv_channel_mix(params: Dict, x: jax.Array,
+                     state: RWKVState | None = None
+                     ) -> Tuple[jax.Array, jax.Array | None]:
+    prev = state.ffn_shift if state is not None else None
+    xs = _shift(x, prev)
+    xk = x + (xs - x) * params["cm_mu_k"]
+    xr = x + (xs - x) * params["cm_mu_r"]
+    k = jnp.square(jax.nn.relu(xk.astype(x.dtype) @ params["cm_wk"]))
+    k = constrain(k, "batch", None, "ff")
+    v = k @ params["cm_wv"]
+    y = jax.nn.sigmoid(xr.astype(x.dtype) @ params["cm_wr"]) * v
+    return y, (x[:, -1, :] if state is not None else None)
+
+
+def init_rwkv_state(batch: int, d_model: int, dtype=jnp.float32) -> RWKVState:
+    H = d_model // HEAD_DIM
+    return RWKVState(
+        att_shift=jnp.zeros((batch, d_model), dtype),
+        ffn_shift=jnp.zeros((batch, d_model), dtype),
+        wkv=jnp.zeros((batch, H, HEAD_DIM, HEAD_DIM), jnp.float32),
+    )

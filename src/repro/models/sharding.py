@@ -1,0 +1,103 @@
+"""Logical-axis sharding annotations threaded through the model code.
+
+Model code calls ``constrain(x, "batch", "seq", None)`` with *logical* axis
+names; the active rule set (installed by the train/serve step factories via
+``use_sharding``) maps logical names to mesh axes.  Outside any context the
+calls are no-ops, so single-device smoke tests and the pure-jnp oracles run
+the exact same model code.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+# Megatron-style default: batch over (pod, data); heads/ff/experts/vocab over
+# model; sequence sharded over model *between* layers (sequence parallelism)
+# only when the rule set enables it.
+DEFAULT_RULES: Mapping[str, Axis] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_sp": None,          # layer-boundary sequence axis (SP off by default)
+    "dmodel": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "experts": "model",
+    "vocab": "model",
+    "state": None,
+    "inner": "model",        # SSM/RWKV channel axis
+}
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("lisa_sharding", default=None)
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: jax.sharding.Mesh, rules: Optional[Mapping[str, Axis]] = None):
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    # Drop mesh axes that don't exist on this mesh (e.g. "pod" on single-pod).
+    names = set(mesh.axis_names)
+
+    def filt(ax: Axis) -> Axis:
+        if ax is None:
+            return None
+        if isinstance(ax, str):
+            return ax if ax in names else None
+        kept = tuple(a for a in ax if a in names)
+        return kept if kept else None
+
+    token = _CTX.set((mesh, {k: filt(v) for k, v in merged.items()}))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def spec_for(*logical: Optional[str]) -> Optional[P]:
+    ctx = _CTX.get()
+    if ctx is None:
+        return None
+    _, rules = ctx
+    return P(*[rules.get(ax) if ax is not None else None for ax in logical])
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Apply a sharding constraint by logical axis names (no-op w/o context).
+
+    Axes that do not evenly divide the dimension are dropped (e.g. 4 KV heads
+    on a 16-way model axis -> replicated KV, Megatron-style) — forcing them
+    produces SPMD full-rematerialization copies.
+    """
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fit(ax, dim):
+        if ax is None:
+            return None
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        kept, total = [], 1
+        for a in axes:
+            if dim % (total * sizes[a]) == 0:
+                kept.append(a)
+                total *= sizes[a]
+        if not kept:
+            return None
+        return kept[0] if len(kept) == 1 else tuple(kept)
+
+    spec = P(*[fit(rules.get(ax) if ax is not None else None, d)
+               for ax, d in zip(logical, x.shape)])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def active() -> bool:
+    return _CTX.get() is not None

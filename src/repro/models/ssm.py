@@ -1,0 +1,155 @@
+"""Mamba (selective SSM) block — the Jamba hybrid's attention-free mixer.
+
+Training uses a chunked, rematerialised time scan (memory O(S/chunk) state
+carries instead of O(S) hidden-state history); decode is a single-step state
+update with a rolling conv buffer — state size is constant in context length,
+which is why the hybrid runs the long_500k shape.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.models.sharding import constrain
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array   # (B, d_conv-1, d_inner) — last inputs for causal conv
+    ssm: jax.Array    # (B, d_inner, d_state)
+
+
+def init_mamba_params(key: jax.Array, d_model: int, d_state: int = 16,
+                      d_conv: int = 4, expand: int = 2, dtype=jnp.float32
+                      ) -> Dict:
+    d_inner = expand * d_model
+    dt_rank = math.ceil(d_model / 16)
+    ks = jax.random.split(key, 6)
+    A = jnp.broadcast_to(jnp.arange(1, d_state + 1, dtype=jnp.float32),
+                         (d_inner, d_state))
+    return {
+        "in_proj": dense_init(ks[0], (d_model, 2 * d_inner), dtype=dtype),
+        "conv_w": dense_init(ks[1], (d_conv, d_inner), scale=d_conv ** -0.5,
+                             dtype=dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": dense_init(ks[2], (d_inner, dt_rank + 2 * d_state), dtype=dtype),
+        "dt_w": dense_init(ks[3], (dt_rank, d_inner), scale=dt_rank ** -0.5,
+                           dtype=dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.clip(jnp.exp(jax.random.uniform(ks[4], (d_inner,), jnp.float32)
+                             * (math.log(0.1) - math.log(0.001))
+                             + math.log(0.001)), 1e-4))).astype(jnp.float32),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[5], (d_inner, d_model), dtype=dtype),
+    }
+
+
+def _ssm_scan(dt, Bm, Cm, xs, A, chunk: int, h0=None):
+    """Selective scan.  dt/xs: (B,S,D), Bm/Cm: (B,S,N), A: (D,N).
+
+    Returns (y (B,S,D), h_final (B,D,N)).  Chunked + rematerialised: the
+    outer scan carries only the inter-chunk state; inner steps recompute on
+    the backward pass.
+    """
+    B, S, D = xs.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk -= 1
+    nc = S // chunk
+
+    def inner(h, inp):
+        dt_t, b_t, c_t, x_t = inp                       # (B,D) (B,N) (B,N) (B,D)
+        da = jnp.exp(dt_t[..., None] * A[None])         # (B,D,N)
+        h = da * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    @jax.checkpoint
+    def run_chunk(h, inp):
+        return jax.lax.scan(inner, h, inp)
+
+    resh = lambda a: jnp.moveaxis(
+        a.reshape(B, nc, chunk, a.shape[-1]), (1, 2), (0, 1))   # (nc,chunk,B,·)
+    if h0 is None:
+        h0 = jnp.zeros((B, D, N), jnp.float32)
+    # TPU path: a chunked selective-scan kernel (VMEM-resident h); marked for
+    # the roofline's kernel-adjusted memory accounting.
+    with jax.named_scope("pallas_kernel_region"):
+        h, ys = jax.lax.scan(lambda h, i: run_chunk(h, i), h0,
+                             (resh(dt), resh(Bm), resh(Cm), resh(xs)))
+    return jnp.moveaxis(ys.reshape(nc * chunk, B, D), 0, 1), h
+
+
+def _conv_causal(x: jax.Array, w: jax.Array, b: jax.Array,
+                 history: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv over time.  x: (B,S,D), w: (K,D)."""
+    K = w.shape[0]
+    if history is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([history.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def mamba_block(params: Dict, x: jax.Array, *, d_state: int, d_conv: int,
+                expand: int, chunk: int = 128,
+                state: MambaState | None = None,
+                ) -> Tuple[jax.Array, MambaState | None]:
+    """x: (B,S,M).  Training: state=None.  Decode: pass/return MambaState."""
+    B, S, M = x.shape
+    d_inner = expand * M
+    dt_rank = params["dt_w"].shape[0]
+
+    xz = x @ params["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in = constrain(x_in, "batch", None, "inner")
+
+    if state is None:
+        xc = _conv_causal(x_in, params["conv_w"], params["conv_b"])
+        new_conv = None
+    else:
+        xc = _conv_causal(x_in, params["conv_w"], params["conv_b"],
+                          history=state.conv)
+        new_conv = jnp.concatenate([state.conv, x_in], axis=1)[:, -(d_conv - 1):]
+    xc = jax.nn.silu(xc)
+
+    x_db = xc @ params["x_proj"]
+    dt_r = x_db[..., :dt_rank]
+    Bm = x_db[..., dt_rank:dt_rank + d_state].astype(jnp.float32)
+    Cm = x_db[..., dt_rank + d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus((dt_r @ params["dt_w"]).astype(jnp.float32)
+                         + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    if state is None:
+        y, _ = _ssm_scan(dt, Bm, Cm, xc.astype(jnp.float32), A, chunk)
+        new_state = None
+    elif S == 1:
+        da = jnp.exp(dt[:, 0, :, None] * A[None])                  # (B,D,N)
+        h = da * state.ssm + (dt[:, 0] * xc[:, 0].astype(jnp.float32)
+                              )[..., None] * Bm[:, 0, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])[:, None, :]
+        new_state = MambaState(conv=new_conv, ssm=h)
+    else:                                       # prefill: scan from state
+        y, h = _ssm_scan(dt, Bm, Cm, xc.astype(jnp.float32), A, chunk,
+                         h0=state.ssm)
+        new_state = MambaState(conv=new_conv, ssm=h)
+
+    y = (y + params["D"] * xc.astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ params["out_proj"], new_state
+
+
+def init_mamba_state(batch: int, d_model: int, d_state: int, d_conv: int,
+                     expand: int, dtype=jnp.float32) -> MambaState:
+    d_inner = expand * d_model
+    return MambaState(
+        conv=jnp.zeros((batch, d_conv - 1, d_inner), dtype),
+        ssm=jnp.zeros((batch, d_inner, d_state), jnp.float32),
+    )

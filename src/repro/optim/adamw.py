@@ -1,0 +1,84 @@
+"""AdamW with global-norm clipping and warmup+cosine schedule (pure JAX).
+
+Moments are fp32 regardless of parameter dtype (bf16 training keeps fp32
+optimizer state — the standard large-scale recipe); the update is computed in
+fp32 and cast back, so bf16 parameters don't lose small updates to rounding
+inside the moment math.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+class OptState(NamedTuple):
+    m: Dict
+    v: Dict
+    count: jax.Array
+
+
+def init(params) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params),
+                    count=jnp.zeros((), jnp.int32))
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(jax.tree.map(
+        lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree))
+    return jnp.sqrt(sum(leaves))
+
+
+def update(cfg: OptConfig, grads, state: OptState, params
+           ) -> Tuple[Dict, OptState, Dict[str, jax.Array]]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    count = state.count + 1
+    lr = schedule(cfg, count)
+    b1c = 1 - cfg.beta1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.beta2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.beta1 * m + (1 - cfg.beta1) * g
+        v = cfg.beta2 * v + (1 - cfg.beta2) * jnp.square(g)
+        step_ = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        decay = cfg.weight_decay if p.ndim >= 2 else 0.0
+        newp = p.astype(jnp.float32) - lr * (step_ + decay * p.astype(jnp.float32))
+        return newp.astype(p.dtype), m, v
+
+    flat = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(new_m, new_v, count), {
+        "grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,74 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+    compute    = HLO_FLOPs / peak_FLOP/s          (per chip: SPMD program)
+    memory     = HLO_bytes / HBM_bw
+    collective = sum(ring link_bytes per op) / ICI link bw
+
+FLOPs/bytes/collective traffic come from the loop-aware HLO cost model
+(``repro.roofline.hlo``) because ``compiled.cost_analysis()`` counts while
+bodies once (scan-based models undercount by the trip count); the raw
+cost_analysis numbers are recorded alongside for reference.
+
+All terms are per-chip (the SPMD program is per-device), so the task
+formula's "chips x" denominators cancel against global numerators.
+MODEL_FLOPS / (HLO_FLOPs x chips) measures how much compiled compute is
+useful — it catches remat recompute, MoE dispatch overhead, and attention
+FLOPs that 6*N*D does not credit.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ModelConfig, ShapeConfig, param_count
+
+PEAK_BF16_FLOPS = 197e12     # per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_LINK_BW = 50e9           # bytes/s per link
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6*N*D (train) / 2*N_active*D (inference), D = tokens processed."""
+    n_active = param_count(cfg, active_only=True)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch          # one decode step
+
+
+def roofline_terms(hlo_cost: Dict, n_chips: int, cfg: ModelConfig,
+                   shape: ShapeConfig) -> Dict:
+    flops = float(hlo_cost["flops"])
+    byts = float(hlo_cost["bytes"])
+    byts_k = float(hlo_cost.get("bytes_kernel_adjusted", byts))
+    coll_bytes = float(hlo_cost["link_bytes_total"])
+
+    compute_s = flops / PEAK_BF16_FLOPS
+    memory_s = byts / HBM_BW                 # pure-XLA lowering
+    memory_s_kernel = byts_k / HBM_BW        # Pallas kernels for attn/ssm/rwkv
+    collective_s = coll_bytes / ICI_LINK_BW
+
+    mf = model_flops(cfg, shape)
+    hlo_global = flops * n_chips
+
+    def _frac(mem):
+        bound = max(compute_s, mem, collective_s)
+        return mf / (bound * n_chips * PEAK_BF16_FLOPS) if bound > 0 else 0.0
+
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    terms_k = {"compute_s": compute_s, "memory_s": memory_s_kernel,
+               "collective_s": collective_s}
+    return {
+        **terms,
+        "memory_s_kernel": memory_s_kernel,
+        "dominant": max(terms, key=terms.get),
+        "dominant_kernel": max(terms_k, key=terms_k.get),
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_flops_ratio": mf / hlo_global if hlo_global else 0.0,
+        "collective_link_bytes": coll_bytes,
+        # useful global FLOPs over what the binding term allows at peak
+        "roofline_fraction": _frac(memory_s),
+        "roofline_fraction_kernel": _frac(memory_s_kernel),
+    }

@@ -1,0 +1,71 @@
+"""Weighted byte/flop attribution over the optimized HLO — the "profile"
+the perf loop reads (no real-TPU timings exist on this container; this is
+the lowered-IR profile the task prescribes).
+
+  PYTHONPATH=src python -m repro.roofline.attribution /tmp/some_hlo.txt
+"""
+from __future__ import annotations
+
+import sys
+from collections import defaultdict
+from typing import Dict
+
+from repro.roofline import hlo as H
+
+
+def attribute(hlo_text: str, top: int = 20) -> Dict[str, float]:
+    hc = H.HloCost(hlo_text)
+    acc: Dict[str, float] = defaultdict(float)
+
+    def visit(name: str, weight: float) -> None:
+        comp = hc.comps.get(name)
+        if comp is None:
+            return
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "while":
+                m = H._WHILE_PARTS.search(op.rest)
+                if m:
+                    tm = H._TRIP.search(op.rest)
+                    visit(m.group(2),
+                          weight * (int(tm.group(1)) if tm else 1))
+                continue
+            if oc in H._BYTES_SKIP_OPS or oc.endswith("-done"):
+                continue
+            if oc == "fusion":
+                m = H._CALLS.search(op.rest)
+                callee = hc.comps.get(m.group(1)) if m else None
+                rb = H._bytes_of_type(op.type_text)
+                opb = sum(H._bytes_of_type(hc._type_of(comp, o))
+                          for o in op.operand_names)
+                dus = H._dus_update_bytes(callee) if callee is not None else None
+                b = (max(opb - dus[1], 0) + 2 * dus[0]) if dus else rb + opb
+            elif oc == "dynamic-slice":
+                b = 2 * H._bytes_of_type(op.type_text)
+            elif oc == "dynamic-update-slice":
+                upd = op.operand_names[1] if len(op.operand_names) > 1 else None
+                ub = H._bytes_of_type(hc._type_of(comp, upd)) if upd else 0
+                b = 2 * ub if ub else H._bytes_of_type(op.type_text)
+            else:
+                b = H._bytes_of_type(op.type_text) + sum(
+                    H._bytes_of_type(hc._type_of(comp, o))
+                    for o in op.operand_names)
+            if hc._in_kernel_region(op):
+                key = "PALLAS_KERNEL_REGION"
+            else:
+                nm = H._OPNAME.search(op.rest)
+                key = nm.group(1) if nm else f"<none> {oc} in {name[:30]}"
+            acc[key] += b * weight
+
+    visit(hc.entry.name, 1.0)
+    return dict(sorted(acc.items(), key=lambda kv: -kv[1])[:top])
+
+
+def main() -> None:
+    txt = open(sys.argv[1]).read()
+    for k, v in attribute(txt).items():
+        print(f"{v:.3e}  {k[:150]}")
+
+
+if __name__ == "__main__":
+    main()

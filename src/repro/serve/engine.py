@@ -1,0 +1,161 @@
+"""Continuous-batching decode engine with LISA-VILLA session caching.
+
+Slots hold active requests (one batched KV cache across slots); finished or
+paused sessions are *suspended* into a tiered store driven by the paper's
+exact VILLA policy — hot sessions (frequent resumes: chat turns, shared
+prefixes) live in the fast tier, cold ones in the bulk tier.  Suspension /
+resumption moves whole KV snapshots: exactly the bulk data movement LISA
+accelerates (on TPU the move is `kernels/rbm_copy`; on the mesh it is a
+`core.lisa.rbm.lisa_copy` hop chain between replicas).
+
+Pure-JAX state; greedy sampling; CPU-runnable at reduced configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.dram.villa import VillaConfig
+from repro.core.lisa import villa_cache as VC
+from repro.models import lm
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray
+    max_new: int
+    generated: Optional[List[int]] = None
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 max_len: int = 128, n_sessions: int = 64,
+                 villa: Optional[VillaConfig] = None):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.active: Dict[int, Request] = {}        # slot -> request
+        self.pos = np.zeros(slots, np.int32)
+
+        self.cache = lm.init_cache(cfg, slots, max_len=max_len)
+        self._decode = jax.jit(partial(lm.decode_step, cfg))
+        self._prefill1 = jax.jit(partial(self._prefill_one))
+
+        # session store: suspended KV snapshots, VILLA-tiered
+        flat, self._cache_def = jax.tree_util.tree_flatten(
+            self._slot_slice(self.cache, 0))
+        self._leaf_shapes = [l.shape for l in flat]
+        self._leaf_dtypes = [l.dtype for l in flat]
+        sizes = [int(np.prod(s)) for s in self._leaf_shapes]
+        self._leaf_sizes = sizes
+        self.villa_cfg = villa or VillaConfig(
+            n_counters=n_sessions, n_hot=max(n_sessions // 4, 2),
+            n_slots=max(n_sessions // 4, 2), epoch_len=8)
+        slow = jnp.zeros((n_sessions, sum(sizes)), jnp.float32)
+        self.sessions = VC.make_store(slow, self.villa_cfg)
+        self.session_pos: Dict[int, int] = {}
+        self.stats = {"decoded_tokens": 0, "suspends": 0, "resumes": 0}
+
+    # ---- cache <-> flat session snapshots --------------------------------
+    def _slot_slice(self, cache, slot):
+        return jax.tree.map(lambda x: x[:, slot], cache)   # leading dim = reps
+
+    def _snapshot(self, slot) -> jax.Array:
+        leaves = jax.tree_util.tree_flatten(self._slot_slice(self.cache, slot))[0]
+        return jnp.concatenate([l.astype(jnp.float32).reshape(-1)
+                                for l in leaves])
+
+    def _restore_snapshot(self, slot, vec: jax.Array) -> None:
+        leaves = []
+        off = 0
+        for shape, dtype, size in zip(self._leaf_shapes, self._leaf_dtypes,
+                                      self._leaf_sizes):
+            leaves.append(vec[off:off + size].reshape(shape).astype(dtype))
+            off += size
+        piece = jax.tree_util.tree_unflatten(self._cache_def, leaves)
+        self.cache = jax.tree.map(
+            lambda full, p: full.at[:, slot].set(p), self.cache, piece)
+
+    def _prefill_one(self, params, cache1, tokens):
+        return lm.prefill(self.cfg, params, tokens, cache1)
+
+    # ---- scheduling -------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [s for s in range(self.slots) if s not in self.active]
+
+    def submit(self, req: Request) -> int:
+        slot = self.free_slots()[0]
+        req.generated = []
+        # fresh single-slot cache WITH the position sentinel (2**30) intact —
+        # zeros would unmask unwritten slots (kv_pos=0 passes the causal mask)
+        cache1 = lm.init_cache(self.cfg, 1, max_len=self.max_len)
+        logits, cache1 = self._prefill1(self.params, cache1,
+                                        jnp.asarray(req.prompt)[None])
+        self.cache = jax.tree.map(
+            lambda full, p: full.at[:, slot:slot + 1].set(p),
+            self.cache, cache1)
+        nxt = int(jnp.argmax(logits[0, -1]))
+        req.generated.append(nxt)
+        self.active[slot] = req
+        self.pos[slot] = len(req.prompt)
+        return slot
+
+    def step(self) -> None:
+        """Decode one token for every active slot (uniform position per
+        micro-group: slots at different positions run in position groups)."""
+        if not self.active:
+            return
+        groups: Dict[int, List[int]] = {}
+        for s in self.active:
+            groups.setdefault(int(self.pos[s]), []).append(s)
+        for pos, ss in groups.items():
+            toks = np.zeros((self.slots, 1), np.int32)
+            for s in ss:
+                toks[s, 0] = self.active[s].generated[-1]
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              jnp.asarray(toks),
+                                              jnp.int32(pos))
+            for s in ss:
+                nxt = int(jnp.argmax(logits[s, 0]))
+                self.active[s].generated.append(nxt)
+                self.pos[s] += 1
+                self.stats["decoded_tokens"] += 1
+        for s, req in list(self.active.items()):
+            if len(req.generated) >= req.max_new:
+                self.suspend(s)
+
+    # ---- VILLA session tiering --------------------------------------------
+    def suspend(self, slot: int) -> None:
+        req = self.active.pop(slot)
+        vec = self._snapshot(slot)
+        self.sessions = VC.write(self.sessions, req.uid % len(
+            self.sessions.slow), vec)
+        self.session_pos[req.uid] = int(self.pos[slot])
+        self.stats["suspends"] += 1
+
+    def resume(self, uid: int, extra_new: int) -> int:
+        """Bring a suspended session back: the tiered store access promotes
+        hot sessions to the fast tier (paper policy) — hit rate is the
+        serving-level VILLA metric."""
+        self.sessions, vec, hit = VC.access(
+            self.sessions, uid % len(self.sessions.slow), self.villa_cfg)
+        slot = self.free_slots()[0]
+        self._restore_snapshot(slot, vec)
+        req = Request(uid=uid, prompt=np.zeros(0, np.int32),
+                      max_new=extra_new)
+        req.generated = [0]
+        self.active[slot] = req
+        self.pos[slot] = self.session_pos[uid]
+        self.stats["resumes"] += 1
+        return slot
+
+    def hit_rate(self) -> float:
+        return float(VC.hit_rate(self.sessions))

@@ -1,0 +1,151 @@
+"""Parameter / cache / batch PartitionSpecs (FSDP x TP, path-based rules).
+
+TP (Megatron) over "model": attention heads, FFN hidden, experts, vocab.
+FSDP (ZeRO-3) over "data" (+"pod"): the remaining large dim of every matrix,
+gathered per-layer on use.  Stacked layer dims (leading axes added by
+scan-over-layers) are never sharded — rules match the *trailing* dims.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (regex on the param path, spec for the trailing dims) — ORDERED: the first
+# match wins, so expert (3-D) rules must precede the generic 2-D matmul rules
+# they would otherwise be shadowed by.
+_PARAM_RULES = [
+    # MoE experts (E over model = EP; fsdp over d_model)
+    (r"mlp/wi_gate$|mlp/wi_up$", ("model", "fsdp", None)),
+    (r"mlp/wo$", ("model", None, "fsdp")),
+    (r"router$", (None, None)),
+    # embeddings / head
+    (r"embed$", ("model", "fsdp")),                  # (V, M)
+    (r"head$", ("fsdp", "model")),                   # (M, V)
+    # attention (column-parallel in, row-parallel out)
+    (r"wq$|wk$|wv$", ("fsdp", "model")),
+    (r"wo$", ("model", "fsdp")),
+    (r"bq$|bk$|bv$", ("model",)),
+    # MLA
+    (r"q_a$|kv_a$", ("fsdp", None)),
+    (r"q_b$|kv_b$", (None, "model")),
+    # dense MLP
+    (r"wi_gate$|wi_up$", ("fsdp", "model")),
+    # Mamba
+    (r"in_proj$", ("fsdp", "model")),
+    (r"conv_w$", (None, "model")),
+    (r"conv_b$|dt_bias$|D$", ("model",)),
+    (r"x_proj$", ("model", None)),
+    (r"dt_w$", (None, "model")),
+    (r"A_log$", ("model", None)),
+    (r"out_proj$", ("model", "fsdp")),
+    # RWKV
+    (r"w1$", ("fsdp", None)),
+    (r"w2$", (None, "model")),
+    (r"u$", ("model", None)),
+    (r"cm_wk$", ("fsdp", "model")),
+    (r"cm_wv$", ("model", "fsdp")),
+    (r"cm_wr$", ("fsdp", "model")),
+]
+
+_CACHE_RULES = [
+    (r"k_scale$|v_scale$", (("pod", "data"), None, "kv_model")),
+    (r"cc_scale$|cr_scale$", (("pod", "data"), None)),
+    (r"/k$|/v$|enc_k$|enc_v$", (("pod", "data"), None, "kv_model", None)),
+    (r"/pos$|enc_pos$", (("pod", "data"), None)),
+    (r"/cc$|/cr$", (("pod", "data"), None, None)),
+    (r"conv$", (("pod", "data"), None, "model")),
+    (r"ssm$", (("pod", "data"), "model", None)),
+    (r"att_shift$|ffn_shift$", (("pod", "data"), None)),
+    (r"wkv$", (("pod", "data"), "model", None, None)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+    return "/".join(parts)
+
+
+def _resolve(axis, mesh_axes, fsdp: bool, divisor_ok) -> Any:
+    if axis == "fsdp":
+        if not fsdp:
+            return None
+        cand = tuple(a for a in ("pod", "data") if a in mesh_axes)
+        return cand if cand else None
+    if axis == "kv_model":
+        return "model" if "model" in mesh_axes else None
+    if isinstance(axis, tuple):
+        kept = tuple(a for a in axis if a in mesh_axes)
+        return kept if kept else None
+    if isinstance(axis, str):
+        return axis if axis in mesh_axes else None
+    return None
+
+
+def _fit_spec(spec, shape, mesh: Mesh):
+    """Drop axes that don't divide the dim (e.g. kv heads < |model|)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for ax, dim in zip(spec, shape):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else ax
+        total = 1
+        kept = []
+        for a in axes:
+            if dim % (total * sizes[a]) == 0:
+                kept.append(a)
+                total *= sizes[a]
+        out.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+    return P(*out)
+
+
+def param_spec(path, leaf, mesh: Mesh, fsdp: bool = True) -> P:
+    s = _path_str(path)
+    for pat, trailing in _PARAM_RULES:
+        if re.search(pat, s):
+            resolved = [_resolve(a, mesh.axis_names, fsdp, None)
+                        for a in trailing]
+            lead = leaf.ndim - len(resolved)
+            spec = [None] * lead + resolved
+            return _fit_spec(spec, leaf.shape, mesh)
+    return P(*([None] * leaf.ndim))
+
+
+def cache_spec(path, leaf, mesh: Mesh) -> P:
+    s = _path_str(path)
+    for pat, trailing in _CACHE_RULES:
+        if re.search(pat, s):
+            resolved = [_resolve(a, mesh.axis_names, True, None)
+                        for a in trailing]
+            lead = leaf.ndim - len(resolved)
+            spec = [None] * lead + resolved
+            return _fit_spec(spec, leaf.shape, mesh)
+    return P(*([None] * leaf.ndim))
+
+
+def tree_shardings(tree, mesh: Mesh, spec_fn, **kw):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, spec_fn(p, l, mesh, **kw)), tree)
+
+
+def batch_specs(mesh: Mesh, batch_tree, dp_axes=("pod", "data")):
+    dp = tuple(a for a in dp_axes if a in mesh.axis_names)
+    def spec(path, leaf):
+        s = [dp if dp else None] + [None] * (leaf.ndim - 1)
+        # M-RoPE positions are (3, B, S): batch is dim 1
+        if _path_str(path).endswith("positions") and leaf.ndim == 3:
+            s = [None, dp if dp else None, None]
+        return NamedSharding(mesh, _fit_spec(s, leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(spec, batch_tree)

@@ -1,0 +1,181 @@
+"""Train / serve step factories: jit with explicit in/out shardings.
+
+``make_train_step`` builds the full SPMD training step (fwd + bwd + AdamW)
+with FSDP x TP x (optional SP / PP-over-pod) sharding; ``make_serve_step``
+builds the decode step over a sharded KV cache.  Both are what the multi-pod
+dry-run lowers and compiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.lisa import compression as COMP
+from repro.models import lm
+from repro.models.sharding import use_sharding
+from repro.optim import adamw
+from repro.train import shardings as SH
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelConfig:
+    fsdp: bool = True
+    tensor_parallel: bool = True      # False: pure DPxFSDP over all axes
+    sequence_parallel: bool = False   # shard layer-boundary activations on S
+    grad_compress: bool = False       # int8 error-feedback DP all-reduce
+    moe_groups: int = 0
+    aux_weight: float = 0.01
+    z_weight: float = 1e-4
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.OptState
+    step: jax.Array
+    err_fb: Any                        # error-feedback residuals (or None)
+
+
+def init_train_state(cfg: ModelConfig, key: jax.Array, pcfg: ParallelConfig,
+                     dtype=jnp.float32) -> TrainState:
+    params = lm.init_lm(cfg, key, dtype)
+    return TrainState(
+        params=params, opt=adamw.init(params),
+        step=jnp.zeros((), jnp.int32),
+        err_fb=COMP.init_error(params) if pcfg.grad_compress else None)
+
+
+def sharding_rules(pcfg: ParallelConfig) -> Dict[str, Any]:
+    rules: Dict[str, Any] = {}
+    if pcfg.sequence_parallel:
+        rules["seq_sp"] = "model"
+    if not pcfg.tensor_parallel:
+        # pure DP x FSDP: batch over every mesh axis, no compute sharding of
+        # heads/ff/vocab (weights stay fully sharded and are gathered on use;
+        # EP stays on "model" — it is DP-compatible).
+        rules.update(batch=("pod", "data", "model"), heads=None,
+                     kv_heads=None, ff=None, vocab=None, inner=None)
+    return rules
+
+
+def loss_fn(cfg: ModelConfig, pcfg: ParallelConfig, params, batch
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux, _ = lm.forward(
+        cfg, params, batch["tokens"], positions=batch.get("positions"),
+        enc_embeds=batch.get("enc_embeds"), moe_groups=pcfg.moe_groups)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, batch["labels"][..., None],
+                              axis=-1)[..., 0]
+    ce = (logz - tgt).mean()
+    zloss = jnp.square(logz).mean()
+    loss = ce + pcfg.aux_weight * aux + pcfg.z_weight * zloss
+    return loss, {"ce": ce, "aux": aux, "zloss": zloss}
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh, pcfg: ParallelConfig,
+                    ocfg: Optional[adamw.OptConfig] = None,
+                    donate: bool = True):
+    ocfg = ocfg or adamw.OptConfig()
+
+    def step_fn(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        with use_sharding(mesh, sharding_rules(pcfg)):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: loss_fn(cfg, pcfg, p, batch), has_aux=True
+            )(state.params)
+            if pcfg.grad_compress:
+                # int8 error-feedback re-quantisation of the DP-reduced
+                # gradient (jit's psum already averaged over data; the
+                # quantised payload is what a LISA ring would carry).
+                def q(g, e):
+                    qv, s, ne = COMP.compress(g, e)
+                    return COMP.decompress(qv, s).astype(g.dtype), ne
+                pairs = jax.tree.map(q, grads, state.err_fb)
+                grads = jax.tree.map(lambda t: t[0], pairs,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+                err_fb = jax.tree.map(lambda t: t[1], pairs,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+            else:
+                err_fb = state.err_fb
+            params, opt, om = adamw.update(ocfg, grads, state.opt, state.params)
+            metrics = dict(metrics, loss=loss, **om)
+            return TrainState(params, opt, state.step + 1, err_fb), metrics
+
+    def state_shardings(state_shapes: TrainState) -> TrainState:
+        ps = SH.tree_shardings(state_shapes.params, mesh, SH.param_spec,
+                               fsdp=pcfg.fsdp)
+        return TrainState(
+            params=ps,
+            opt=adamw.OptState(
+                m=jax.tree.map(lambda _, s: s, state_shapes.opt.m, ps),
+                v=jax.tree.map(lambda _, s: s, state_shapes.opt.v, ps),
+                count=NamedSharding(mesh, P())),
+            step=NamedSharding(mesh, P()),
+            err_fb=None if state_shapes.err_fb is None else jax.tree.map(
+                lambda _, s: s, state_shapes.err_fb, ps))
+
+    def compile_step(state_shapes, batch_shapes):
+        ss = state_shardings(state_shapes)
+        dp = ("pod", "data") if pcfg.tensor_parallel else \
+            ("pod", "data", "model")
+        bs = SH.batch_specs(mesh, batch_shapes, dp_axes=dp)
+        rep = NamedSharding(mesh, P())       # prefix spec: all metric leaves
+        return jax.jit(step_fn, in_shardings=(ss, bs), out_shardings=(ss, rep),
+                       donate_argnums=(0,) if donate else ())
+
+    return step_fn, compile_step, state_shardings
+
+
+def _logits_sharding(cfg: ModelConfig, mesh: Mesh, batch: int) -> NamedSharding:
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    spec = SH._fit_spec([dp if dp else None, None, "model"],
+                        (batch, 1, cfg.vocab_size), mesh)
+    return NamedSharding(mesh, spec)
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh, pcfg: ParallelConfig):
+    """Inference-prefill: causal forward + KV-cache population."""
+    def step_fn(params, cache, batch):
+        with use_sharding(mesh, sharding_rules(pcfg)):
+            logits, _, new_cache = lm.forward(
+                cfg, params, batch["tokens"],
+                positions=batch.get("positions"),
+                enc_embeds=batch.get("enc_embeds"),
+                cache=cache, mode="prefill", moe_groups=pcfg.moe_groups)
+        return logits, new_cache
+
+    def compile_step(param_shapes, cache_shapes, batch_shapes):
+        ps = SH.tree_shardings(param_shapes, mesh, SH.param_spec,
+                               fsdp=pcfg.fsdp)
+        cs = SH.tree_shardings(cache_shapes, mesh, SH.cache_spec)
+        bs = SH.batch_specs(mesh, batch_shapes)
+        lg = _logits_sharding(cfg, mesh, batch_shapes["tokens"].shape[0])
+        return jax.jit(step_fn, in_shardings=(ps, cs, bs),
+                       out_shardings=(lg, cs), donate_argnums=(1,))
+
+    return step_fn, compile_step
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Mesh, pcfg: ParallelConfig):
+    def step_fn(params, cache, tokens, pos):
+        with use_sharding(mesh, sharding_rules(pcfg)):
+            logits, new_cache = lm.decode_step(cfg, params, cache, tokens,
+                                               pos, moe_groups=pcfg.moe_groups)
+        return logits, new_cache
+
+    def compile_step(param_shapes, cache_shapes, token_shapes):
+        ps = SH.tree_shardings(param_shapes, mesh, SH.param_spec,
+                               fsdp=pcfg.fsdp)
+        cs = SH.tree_shardings(cache_shapes, mesh, SH.cache_spec)
+        ts = SH.batch_specs(mesh, token_shapes)
+        rep = NamedSharding(mesh, P())
+        lg = _logits_sharding(
+            cfg, mesh, jax.tree.leaves(token_shapes)[0].shape[0])
+        return jax.jit(step_fn, in_shardings=(ps, cs, ts, rep),
+                       out_shardings=(lg, cs), donate_argnums=(1,))
+
+    return step_fn, compile_step

@@ -1,0 +1,81 @@
+"""Checkpointing: roundtrip, atomicity, GC, resume determinism, elastic."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _multidev import run_with_devices
+from repro.checkpoint import manager as ckpt
+from repro.configs import get_reduced
+from repro.train.step import ParallelConfig, init_train_state
+
+
+def _state():
+    return init_train_state(get_reduced("tinyllama-1.1b"),
+                            jax.random.key(0), ParallelConfig(fsdp=False))
+
+
+def test_roundtrip(tmp_path):
+    state = _state()
+    ckpt.save(state, str(tmp_path), 7)
+    assert ckpt.latest_step(str(tmp_path)) == 7
+    back = ckpt.restore(state, str(tmp_path))
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(back)):
+        assert np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_gc_keeps_last_k(tmp_path):
+    state = _state()
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(state, str(tmp_path), s, keep_last=2)
+    assert ckpt.all_steps(str(tmp_path)) == [4, 5]
+
+
+def test_no_tmp_left_behind(tmp_path):
+    state = _state()
+    ckpt.save(state, str(tmp_path), 1)
+    assert not [d for d in os.listdir(tmp_path) if d.startswith(".tmp")]
+
+
+def test_restore_specific_step(tmp_path):
+    state = _state()
+    s1 = state._replace(step=jnp.int32(1))
+    ckpt.save(s1, str(tmp_path), 1)
+    s2 = state._replace(step=jnp.int32(2))
+    ckpt.save(s2, str(tmp_path), 2)
+    back = ckpt.restore(state, str(tmp_path), step=1)
+    assert int(back.step) == 1
+
+
+def test_missing_dir_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(_state(), str(tmp_path / "nope"))
+
+
+ELASTIC = r"""
+import jax, jax.numpy as jnp, numpy as np, sys
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.checkpoint import manager as ckpt
+
+tmp = sys.argv[1]
+tree = {"w": jnp.arange(64.0).reshape(8, 8), "b": jnp.ones(8)}
+ckpt.save(tree, tmp, 1)
+
+# restore onto a 2x4 mesh (elastic rescale: different layout than writer)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+sh = {"w": NamedSharding(mesh, P("data", "model")),
+      "b": NamedSharding(mesh, P("model"))}
+back = ckpt.restore(tree, tmp, shardings=sh)
+assert np.allclose(np.asarray(back["w"]), np.arange(64.0).reshape(8, 8))
+assert back["w"].sharding.spec == P("data", "model")
+print("ELASTIC_OK")
+"""
+
+
+def test_elastic_restore_different_mesh(tmp_path):
+    import sys
+    code = ELASTIC.replace("sys.argv[1]", repr(str(tmp_path)))
+    out = run_with_devices(code, 8)
+    assert "ELASTIC_OK" in out

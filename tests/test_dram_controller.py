@@ -1,0 +1,82 @@
+"""System-level orderings the paper claims (Figs. 2-4), on synthetic traces."""
+import jax
+import pytest
+
+from repro.core.dram.controller import (MechanismConfig, simulate_jit,
+                                        weighted_speedup)
+from repro.core.dram.traces import TraceConfig, generate
+
+TCFG = TraceConfig(n_requests=8192)
+
+
+@pytest.fixture(scope="module")
+def results():
+    tr = generate(jax.random.key(1), TCFG)
+    cfgs = {
+        "base": MechanismConfig(copy_mech="memcpy"),
+        "rc": MechanismConfig(copy_mech="rc_intersa"),
+        "lisa": MechanismConfig(copy_mech="lisa"),
+        "villa": MechanismConfig(copy_mech="lisa", use_villa=True),
+        "comb": MechanismConfig(copy_mech="lisa", use_villa=True,
+                                use_lip=True),
+        "lip": MechanismConfig(copy_mech="memcpy", use_lip=True),
+        "rc_villa": MechanismConfig(copy_mech="memcpy", use_villa=True,
+                                    villa_copy_mech="rc_intersa"),
+    }
+    out = {k: simulate_jit(tr, TCFG, c) for k, c in cfgs.items()}
+    ws = {k: float(weighted_speedup(out["base"]["core_stall"],
+                                    r["core_stall"]))
+          for k, r in out.items()}
+    return out, ws
+
+
+def test_lisa_beats_rowclone_beats_memcpy(results):
+    _, ws = results
+    assert ws["lisa"] > ws["rc"] > ws["base"] == pytest.approx(1.0)
+
+
+def test_villa_adds_over_risc_alone(results):
+    _, ws = results
+    assert ws["villa"] > ws["lisa"]          # paper: +16.5% over RISC
+
+
+def test_lip_adds_over_risc_villa(results):
+    _, ws = results
+    assert ws["comb"] > ws["villa"]          # paper: +8.8% further
+
+
+def test_lip_alone_modest_gain(results):
+    _, ws = results
+    assert 1.0 < ws["lip"] < 1.5             # paper: +10.3%
+
+
+def test_rc_backed_villa_loses(results):
+    _, ws = results
+    assert ws["rc_villa"] < 1.0              # paper: -52.3%
+
+
+def test_combined_energy_reduction(results):
+    out, _ = results
+    red = 1 - float(out["comb"]["energy_uJ"]) / float(out["base"]["energy_uJ"])
+    assert red > 0.3                          # paper: -49% memory energy
+
+
+def test_villa_hit_rate_meaningful(results):
+    out, _ = results
+    assert float(out["villa"]["villa_hit_rate"]) > 0.3
+
+
+def test_workload_sweep_orderings_hold():
+    """Mini version of the paper's 50-workload sweep: orderings must hold
+    in the copy-heavy and locality-heavy corners too."""
+    for copy_prob, zipf in [(0.002, 1.0), (0.02, 1.6)]:
+        tcfg = TraceConfig(n_requests=4096, copy_prob=copy_prob, zipf_s=zipf)
+        tr = generate(jax.random.key(7), tcfg)
+        base = simulate_jit(tr, tcfg, MechanismConfig(copy_mech="memcpy"))
+        lisa = simulate_jit(tr, tcfg, MechanismConfig(copy_mech="lisa"))
+        comb = simulate_jit(tr, tcfg, MechanismConfig(
+            copy_mech="lisa", use_villa=True, use_lip=True))
+        ws_l = float(weighted_speedup(base["core_stall"], lisa["core_stall"]))
+        ws_c = float(weighted_speedup(base["core_stall"], comb["core_stall"]))
+        assert ws_l > 1.0
+        assert ws_c > ws_l * 0.95    # combined never collapses below RISC

@@ -1,0 +1,86 @@
+"""Data correctness of the functional DRAM bank (RBM semantics)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dram import substrate as S
+from repro.core.dram import timing as T
+
+
+def _bank(n_sa=8, rows=8, row_bytes=64, seed=0):
+    return S.make_bank(n_sa, rows, row_bytes, jax.random.key(seed))
+
+
+def test_activate_latches_row():
+    b = _bank()
+    b2 = S.activate(b, 3, 5)
+    assert (b2.row_buffer[3] == b.cells[3, 5]).all()
+    assert int(b2.open_row[3]) == 5
+
+
+def test_rbm_requires_adjacency_and_precharged_dst():
+    b = _bank()
+    b = S.activate(b, 2, 1)
+    far = S.rbm(b, 2, 5)                   # not adjacent: no-op on validity
+    assert not bool(far.rb_valid[5])
+    b_open = S.activate(b, 3, 0)           # dst open: rbm must not latch
+    blocked = S.rbm(b_open, 2, 3)
+    assert (blocked.row_buffer[3] == b_open.row_buffer[3]).all()
+    ok = S.rbm(b, 2, 3)                    # adjacent + precharged: latches
+    assert bool(ok.rb_valid[3])
+    assert (ok.row_buffer[3] == b.row_buffer[2]).all()
+
+
+@pytest.mark.parametrize("src_sa,src_row,dst_sa,dst_row",
+                         [(0, 0, 7, 7), (6, 3, 1, 2), (3, 1, 4, 1)])
+def test_lisa_risc_copy_moves_data(src_sa, src_row, dst_sa, dst_row):
+    b = _bank()
+    want = b.cells[src_sa, src_row]
+    b2, lat, ene = S.lisa_risc_copy(b, src_sa, src_row, dst_sa, dst_row)
+    assert (b2.cells[dst_sa, dst_row] == want).all()
+    hops = abs(dst_sa - src_sa)
+    assert lat == pytest.approx(T.latency_lisa_risc(hops))
+    assert ene == pytest.approx(T.energy_lisa_risc(hops))
+    # source row unchanged
+    assert (b2.cells[src_sa, src_row] == want).all()
+
+
+def test_broadcast_latches_all_destinations():
+    b = _bank()
+    want = b.cells[1, 4]
+    b2, lat, ene = S.lisa_broadcast(b, 1, 4, (0, 3, 6), 2)
+    for d in (0, 3, 6):
+        assert (b2.cells[d, 2] == want).all()
+    # cost: chains to 6 (5 hops fwd) and 0 (1 hop bwd) + 2 extra restores
+    assert lat == pytest.approx(T.latency_lisa_risc(6)
+                                + 2 * (T.DDR3.tRAS + T.DDR3.tRP))
+    # multicast beats N separate copies (the paper's 1-to-N argument)
+    separate = sum(T.latency_lisa_risc(abs(d - 1)) for d in (0, 3, 6))
+    assert lat < separate
+
+
+def test_rowclone_copy_correct_but_slow():
+    b = _bank()
+    want = b.cells[2, 3]
+    b2, lat, ene = S.rowclone_intersa_copy(b, 2, 3, 6, 1)
+    assert (b2.cells[6, 1] == want).all()
+    assert lat == pytest.approx(T.latency_rc_inter_sa())
+
+
+@settings(max_examples=20, deadline=None)
+@given(src=st.integers(0, 7), dst=st.integers(0, 7),
+       row_s=st.integers(0, 7), row_d=st.integers(0, 7),
+       seed=st.integers(0, 100))
+def test_copy_property_any_pair(src, dst, row_s, row_d, seed):
+    if src == dst:
+        return
+    b = _bank(seed=seed)
+    want = b.cells[src, row_s]
+    b2, lat, _ = S.lisa_risc_copy(b, src, row_s, dst, row_d)
+    assert (b2.cells[dst, row_d] == want).all()
+    # untouched subarrays keep their cells
+    for sa in range(8):
+        if sa not in (src, dst):
+            assert (b2.cells[sa] == b.cells[sa]).all()
+    assert lat >= T.latency_lisa_risc(1)

@@ -1,0 +1,73 @@
+"""Table 1 / Sec. 2 / Sec. 3.3 of the paper, reproduced exactly."""
+import math
+
+import pytest
+
+from repro.core.dram import timing as T
+
+# Table 1 (paper): mechanism -> (latency ns, energy uJ).  memcpy latency is
+# blank in the table; Fig. 2 shows it ~= RC-InterSA.
+TABLE1 = {
+    "RC-InterSA": (1363.75, 4.33),
+    "RC-Bank": (701.25, 2.08),
+    "RC-IntraSA": (83.75, 0.06),
+    "LISA-RISC-1": (148.5, 0.09),
+    "LISA-RISC-7": (196.5, 0.12),
+    "LISA-RISC-15": (260.5, 0.17),
+}
+
+
+def test_table1_latencies_exact():
+    got = T.table1()
+    for mech, (lat, _) in TABLE1.items():
+        assert got[mech][0] == pytest.approx(lat, abs=1e-9), mech
+
+
+def test_table1_energies_match_to_rounding():
+    got = T.table1()
+    for mech, (_, ene) in TABLE1.items():
+        assert round(got[mech][1], 2) == pytest.approx(ene, abs=1e-9), mech
+
+
+def test_memcpy_energy_exact_and_latency_close_to_intersa():
+    # energy 6.2 uJ exact; latency within 3% of RC-InterSA (Fig. 2).
+    assert T.energy_memcpy() == pytest.approx(6.2, abs=1e-9)
+    rel = abs(T.latency_memcpy() - T.latency_rc_inter_sa()) / T.latency_rc_inter_sa()
+    assert rel < 0.03
+
+
+def test_lisa_vs_rowclone_headline_numbers():
+    # paper: 9x latency and 48x energy reduction vs RC-InterSA (1-hop RISC
+    # is the headline; hop-7 keeps >6x latency)
+    assert T.latency_rc_inter_sa() / T.latency_lisa_risc(1) > 9.0
+    assert T.energy_rc_inter_sa() / T.energy_lisa_risc(1) == pytest.approx(
+        48.1, rel=0.01)
+    # 69x energy vs memcpy (Sec. 5.1)
+    assert T.energy_memcpy() / T.energy_lisa_risc(1) == pytest.approx(
+        68.9, rel=0.01)
+
+
+def test_rbm_bandwidth_claim():
+    # 500 GB/s vs 19.2 GB/s channel = 26x (Sec. 2)
+    assert T.RBM_BW_GBPS == pytest.approx(500.0, rel=1e-3)
+    assert T.RBM_BW_GBPS / T.CHANNEL_BW_GBPS == pytest.approx(26.04, rel=0.01)
+
+
+def test_lisa_risc_linear_in_hops():
+    lats = [T.latency_lisa_risc(h) for h in range(1, 16)]
+    diffs = {round(b - a, 6) for a, b in zip(lats, lats[1:])}
+    assert diffs == {8.0}
+
+
+def test_lip_precharge():
+    # 13 ns -> 5 ns, 2.6x (Sec. 3.3)
+    assert T.precharge_latency(False) == 13.0
+    assert T.precharge_latency(True) == 5.0
+    assert T.precharge_latency(False) / T.precharge_latency(True) == 2.6
+
+
+def test_invalid_hops_raise():
+    with pytest.raises(ValueError):
+        T.latency_lisa_risc(0)
+    with pytest.raises(ValueError):
+        T.energy_lisa_risc(0)

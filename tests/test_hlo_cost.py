@@ -1,0 +1,90 @@
+"""Unit tests for the loop-aware HLO cost model (roofline/hlo.py)."""
+import pytest
+
+from repro.roofline import hlo as H
+
+SYNTH = """HloModule test, num_partitions=16
+
+%cond.1 (arg: (s32[], f32[8,8])) -> pred[] {
+  %arg = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%body.1 (arg: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %arg = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%arg), index=1
+  %d = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ag = f32[8,128]{1,0} all-gather(%d), replica_groups=[1,16]<=[16], dimensions={1}
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%i2, %d)
+}
+
+ENTRY %main (p0: f32[8,8]) -> (s32[], f32[8,8]) {
+  %p0 = f32[8,8]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[8,8]) tuple(%z, %p0)
+  ROOT %w = (s32[], f32[8,8]) while(%t0), condition=%cond.1, body=%body.1
+}
+"""
+
+
+def test_while_trip_count_from_condition():
+    cost = H.HloCost(SYNTH).cost()
+    # dot: 2*8*8*8 = 1024 flops, x5 trips
+    assert cost.flops == pytest.approx(5 * 1024)
+
+
+def test_collectives_weighted_by_trips():
+    cost = H.HloCost(SYNTH).cost()
+    ag = cost.collectives["all-gather"]
+    assert ag["count"] == 5
+    assert ag["operand_bytes"] == 5 * 8 * 8 * 4
+    # ring all-gather: operand * (n-1) per link, n=16
+    assert ag["link_bytes"] == pytest.approx(5 * 8 * 8 * 4 * 15)
+
+
+def test_backend_config_trip_count_overrides():
+    txt = SYNTH.replace(
+        "condition=%cond.1, body=%body.1",
+        'condition=%cond.1, body=%body.1, '
+        'backend_config={"known_trip_count":{"n":"7"}}')
+    cost = H.HloCost(txt).cost()
+    assert cost.flops == pytest.approx(7 * 1024)
+
+
+def test_dus_bytes_only_charge_slice():
+    txt = """HloModule t2
+
+ENTRY %main (p: f32[100,8], u: f32[1,8]) -> f32[100,8] {
+  %p = f32[100,8]{1,0} parameter(0)
+  %u = f32[1,8]{1,0} parameter(1)
+  %z = s32[] constant(0)
+  ROOT %d = f32[100,8]{1,0} dynamic-update-slice(%p, %u, %z, %z)
+}
+"""
+    cost = H.HloCost(txt).cost()
+    assert cost.bytes == 2 * 1 * 8 * 4      # slice in + out, not the buffer
+
+
+def test_link_bytes_model():
+    assert H.link_bytes("all-gather", 100, 4) == 300
+    assert H.link_bytes("reduce-scatter", 100, 4) == pytest.approx(75)
+    assert H.link_bytes("all-reduce", 100, 4) == pytest.approx(150)
+    assert H.link_bytes("collective-permute", 100, 0) == 100
+
+
+def test_group_size_formats():
+    assert H._group_size("replica_groups={{0,1,2,3}}, x") == 4
+    assert H._group_size("replica_groups=[16,16]<=[16,16]T(1,0)") == 16
+
+
+def test_tuple_types_with_index_comments_parse():
+    line = ("  %w = (s32[], f32[16,1,1,64]{3,2,1,0}, /*index=5*/f32[2,3]{1,0})"
+            " while(%t), condition=%c, body=%b")
+    m = H._OP_LINE.match(line)
+    assert m and m.group("op") == "while"
+    assert H._bytes_of_type(m.group("type")) == 4 + 16 * 64 * 4 + 6 * 4

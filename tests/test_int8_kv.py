@@ -1,0 +1,55 @@
+"""int8-quantised KV caches (the §Perf C1 serving optimization)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import lm
+
+
+def _decode_err(cfg, dtype, S=8):
+    params = lm.init_lm(cfg, jax.random.key(3))
+    B = 2
+    toks = jax.random.randint(jax.random.key(4), (B, S), 0, cfg.vocab_size)
+    full, _, _ = lm.forward(cfg, params, toks)
+    cache = lm.init_cache(cfg, B, max_len=16, dtype=dtype)
+    outs = []
+    for t in range(S):
+        lg, cache = lm.decode_step(cfg, params, cache, toks[:, t:t + 1],
+                                   jnp.int32(t))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, 1)
+    return float(jnp.abs(dec - full).max() / (jnp.abs(full).max() + 1e-9))
+
+
+def test_gqa_int8_cache_close():
+    assert _decode_err(get_reduced("tinyllama-1.1b"), jnp.int8) < 0.05
+
+
+def test_mla_int8_cache_close():
+    ds = get_reduced("deepseek-v2-236b")
+    mla_only = dataclasses.replace(ds, n_experts=0, top_k=0,
+                                   n_shared_experts=0)
+    assert _decode_err(mla_only, jnp.int8) < 0.05
+
+
+def test_moe_int8_routing_flips_tolerated():
+    """Quantisation noise may flip top-k expert routing (discontinuous
+    outputs) — quality metric is greedy-token agreement, not logits."""
+    cfg = get_reduced("olmoe-1b-7b")
+    params = lm.init_lm(cfg, jax.random.key(3))
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.key(4), (B, S), 0, cfg.vocab_size)
+    outs = {}
+    for dtype in (jnp.float32, jnp.int8):
+        cache = lm.init_cache(cfg, B, max_len=16, dtype=dtype)
+        tok_out = []
+        for t in range(S):
+            lg, cache = lm.decode_step(cfg, params, cache, toks[:, t:t + 1],
+                                       jnp.int32(t))
+            tok_out.append(jnp.argmax(lg[:, 0], -1))
+        outs[dtype.__name__] = jnp.stack(tok_out, 1)
+    agree = float((outs["float32"] == outs["int8"]).mean())
+    assert agree >= 0.75, agree

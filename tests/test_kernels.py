@@ -1,0 +1,82 @@
+"""Pallas kernels (interpret mode) vs pure-jnp oracles: shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+
+KEY = jax.random.key(0)
+
+
+def _qkv(B, H, K, S, T, D, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), dtype)
+    k = jax.random.normal(ks[1], (B, K, T, D), dtype)
+    v = jax.random.normal(ks[2], (B, K, T, D), dtype)
+    return q, k, v
+
+
+SWEEP = [
+    # B, H, K, S,   T,   D,  causal, window, dtype
+    (1, 4, 2, 128, 128, 64, True, 0, jnp.float32),
+    (2, 8, 8, 64, 256, 32, True, 0, jnp.bfloat16),
+    (1, 4, 4, 100, 100, 64, True, 24, jnp.float32),   # ragged + window
+    (2, 2, 1, 1, 300, 128, True, 0, jnp.float32),     # decode shape
+    (1, 16, 4, 256, 256, 128, True, 0, jnp.bfloat16),  # MXU-aligned
+    (1, 2, 2, 64, 64, 64, False, 0, jnp.float32),     # bidirectional
+    (1, 4, 2, 72, 136, 64, True, 48, jnp.bfloat16),   # odd shapes + window
+]
+
+
+@pytest.mark.parametrize("B,H,K,S,T,D,causal,window,dtype", SWEEP)
+def test_flash_attention_sweep(B, H, K, S, T, D, causal, window, dtype):
+    q, k, v = _qkv(B, H, K, S, T, D, dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=64, block_k=64)
+    ref = ops.flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 3e-5
+    err = float(jnp.abs(out.astype(jnp.float32)
+                        - ref.astype(jnp.float32)).max())
+    assert err < tol, err
+
+
+@pytest.mark.parametrize("shape,dtype", [
+    ((1000, 333), jnp.float32),
+    ((7, 129, 65), jnp.bfloat16),
+    ((4096,), jnp.int32),
+    ((256, 128), jnp.int8),
+])
+def test_rbm_copy_sweep(shape, dtype):
+    if dtype in (jnp.int32, jnp.int8):
+        x = jax.random.randint(KEY, shape, -100, 100).astype(dtype)
+    else:
+        x = jax.random.normal(KEY, shape, dtype)
+    out = ops.rbm_copy(x, tile_rows=64)
+    assert out.dtype == x.dtype and out.shape == x.shape
+    assert (out == ops.rbm_copy_ref(x)).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(0, 15), min_size=1, max_size=12))
+def test_villa_gather_property(table):
+    pages = jax.random.normal(KEY, (16, 8, 128))
+    t = jnp.asarray(table, jnp.int32)
+    got = ops.villa_gather(pages, t)
+    assert np.allclose(got, ops.villa_gather_ref(pages, t))
+
+
+def test_flash_attention_grad_close_to_ref():
+    q, k, v = _qkv(1, 4, 2, 64, 64, 32, jnp.float32)
+
+    def loss_kernel(q, k, v):
+        return ops.flash_attention(q, k, v, block_q=32, block_k=32).sum()
+
+    def loss_ref(q, k, v):
+        return ops.flash_attention_ref(q, k, v).sum()
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        assert float(jnp.abs(a - b).max()) < 5e-4

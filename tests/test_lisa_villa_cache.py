@@ -1,0 +1,75 @@
+"""TPU-side tiered store: data correctness under the VILLA policy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dram.villa import VillaConfig
+from repro.core.lisa import villa_cache as VC
+from repro.core.lisa.topology import (MeshTopology, hop_chain_us,
+                                      host_path_us, migration_worthwhile,
+                                      ring_collective_us)
+
+CFG = VillaConfig(n_counters=32, n_hot=4, n_slots=4, epoch_len=8)
+
+
+def _store(seed=0, n=32, d=5):
+    slow = jax.random.normal(jax.random.key(seed), (n, d))
+    return VC.make_store(slow, CFG), slow
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 31), min_size=1, max_size=60),
+       st.integers(0, 5))
+def test_access_always_returns_truth(ids, seed):
+    store, slow = _store(seed)
+    for i in ids:
+        store, data, hit = VC.access(store, jnp.int32(i), CFG)
+        assert np.allclose(data, slow[i]), f"wrong data for {i} (hit={bool(hit)})"
+
+
+def test_hot_items_hit_fast_tier():
+    store, slow = _store()
+    ids = [3, 9] * 20
+    hits = 0
+    for i in ids:
+        store, data, hit = VC.access(store, jnp.int32(i), CFG)
+        hits += int(hit)
+    assert hits > 5
+    assert float(VC.hit_rate(store)) > 0.1
+
+
+def test_write_through_updates_both_tiers():
+    store, slow = _store()
+    for i in [7] * 12:                     # make 7 hot + resident
+        store, _, _ = VC.access(store, jnp.int32(i), CFG)
+    new = jnp.full((5,), 42.0)
+    store = VC.write(store, jnp.int32(7), new)
+    store, data, hit = VC.access(store, jnp.int32(7), CFG)
+    assert np.allclose(data, new)
+    assert np.allclose(store.slow[7], new)
+
+
+def test_topology_costs():
+    t = MeshTopology(16)
+    assert t.hops(0, 15) == 1              # wraparound
+    assert t.hops(0, 8) == 8
+    assert t.path(14, 1) == [15, 0, 1]
+    # linear-in-hops (Table 1 structure)
+    c1 = hop_chain_us(1, 1 << 20)
+    c4 = hop_chain_us(4, 1 << 20)
+    assert abs(c4 - 4 * c1) < 1e-9
+    # neighbor chain beats the host path for few hops (the paper's point)
+    assert hop_chain_us(1, 8 << 20) < host_path_us(8 << 20)
+    # ring allreduce = 2x ring allgather steps
+    ag = ring_collective_us(16, 1 << 20, "all_gather")
+    ar = ring_collective_us(16, 1 << 20, "all_reduce")
+    assert abs(ar - 2 * ag) < 1e-9
+
+
+def test_migration_decision():
+    nbytes = 64 << 20
+    assert migration_worthwhile(nbytes, hops=1, expected_hits=100,
+                                fast_gain_us=1000)
+    assert not migration_worthwhile(nbytes, hops=8, expected_hits=1,
+                                    fast_gain_us=1.0)

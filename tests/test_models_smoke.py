@@ -1,0 +1,61 @@
+"""Per-architecture smoke: reduced config, one forward + one train step on
+CPU, asserting output shapes and no NaNs (task spec, deliverable f)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_NAMES, get_reduced
+from repro.data.pipeline import DataConfig, batch_at
+from repro.launch.mesh import make_local_mesh
+from repro.models import lm
+from repro.optim.adamw import OptConfig
+from repro.train.step import ParallelConfig, init_train_state, make_train_step
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_reduced(arch)
+    params = lm.init_lm(cfg, jax.random.key(0))
+    B, S = 2, 32
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    kw = {}
+    if cfg.encdec:
+        kw["enc_embeds"] = jax.random.normal(
+            jax.random.key(2), (B, 16, cfg.d_model)) * 0.02
+    logits, aux, _ = jax.jit(lambda p, t: lm.forward(cfg, p, t, **kw))(
+        params, toks)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_train_step_runs_and_is_finite(arch):
+    cfg = get_reduced(arch)
+    mesh = make_local_mesh(1, 1)
+    pcfg = ParallelConfig(fsdp=False)
+    state = init_train_state(cfg, jax.random.key(0), pcfg)
+    _, compile_step, _ = make_train_step(
+        cfg, mesh, pcfg, OptConfig(lr=1e-3, warmup_steps=1, total_steps=10))
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=2)
+    batch = batch_at(dcfg, 0)
+    if cfg.mrope:
+        pos = jnp.broadcast_to(jnp.arange(32, dtype=jnp.int32)[None, None],
+                               (3, 2, 32))
+        batch = dict(batch, positions=pos)
+    if cfg.encdec:
+        batch = dict(batch, enc_embeds=jax.random.normal(
+            jax.random.key(3), (2, 16, cfg.d_model)) * 0.02)
+    shapes = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                          (state, batch))
+    step_fn = compile_step(*shapes)
+    # snapshot before the step: the step donates its input state
+    import numpy as np
+    leaf0 = np.asarray(jax.tree_util.tree_leaves(state.params)[1])
+    state2, metrics = step_fn(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    assert int(state2.step) == 1
+    # params actually changed
+    leaf1 = np.asarray(jax.tree_util.tree_leaves(state2.params)[1])
+    assert not np.allclose(leaf0, leaf1)

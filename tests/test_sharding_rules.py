@@ -1,0 +1,62 @@
+"""Sharding rules: TP/FSDP specs, divisibility fallback, on a 16-dev mesh."""
+from _multidev import run_with_devices
+
+CODE = r"""
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.configs import get_reduced, get_config
+from repro.launch.mesh import make_local_mesh
+from repro.models import lm
+from repro.train import shardings as SH
+from repro.train.step import ParallelConfig, init_train_state, make_train_step
+from repro.data.pipeline import DataConfig, batch_at
+
+mesh = make_local_mesh(4, 4)
+cfg = get_reduced("tinyllama-1.1b")
+
+params = jax.eval_shape(lambda: lm.init_lm(cfg, jax.random.key(0)))
+sh = SH.tree_shardings(params, mesh, SH.param_spec, fsdp=True)
+
+# embed (V=512, M=64): vocab over model, fsdp over d
+assert sh["embed"].spec == P("model", "data"), sh["embed"].spec
+# attention out proj stacked (L, H*D, M): row-parallel
+assert sh["stage0"]["b0"]["mixer"]["wo"].spec[-2] == "model"
+# norms replicated
+assert all(s is None for s in sh["final_norm"].spec)
+
+# kv-head divisibility: n_kv=2 < model axis 4 -> wk output dim (2*16=32)
+# divides 4 -> sharded; force a case that doesn't divide:
+import dataclasses
+cfg3 = dataclasses.replace(cfg, n_kv_heads=1, head_dim=17)   # wk out = 17
+p3 = jax.eval_shape(lambda: lm.init_lm(cfg3, jax.random.key(0)))
+s3 = SH.tree_shardings(p3, mesh, SH.param_spec, fsdp=True)
+assert s3["stage0"]["b0"]["mixer"]["wk"].spec[-1] is None   # replicate
+
+# end-to-end: sharded train step runs on the 4x4 mesh and stays finite
+pcfg = ParallelConfig(fsdp=True)
+state = init_train_state(cfg, jax.random.key(0), pcfg)
+_, compile_step, _ = make_train_step(cfg, mesh, pcfg)
+dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8)
+batch = batch_at(dcfg, 0)
+shapes = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                      (state, batch))
+step = compile_step(*shapes)
+state2, metrics = step(state, batch)
+assert bool(jnp.isfinite(metrics["loss"])), metrics
+# loss agrees with the single-device run (SPMD correctness)
+mesh1 = make_local_mesh(1, 1)
+_, compile1, _ = make_train_step(cfg, mesh1, ParallelConfig(fsdp=False))
+state1 = init_train_state(cfg, jax.random.key(0), ParallelConfig(fsdp=False))
+step1 = compile1(*jax.tree.map(
+    lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), (state1, batch)))
+_, m1 = step1(state1, batch)
+import numpy as np
+assert abs(float(metrics["loss"]) - float(m1["loss"])) < 5e-3, (
+    float(metrics["loss"]), float(m1["loss"]))
+print("SHARD_OK")
+"""
+
+
+def test_sharding_rules_and_spmd_equivalence():
+    out = run_with_devices(CODE, 16, timeout=560)
+    assert "SHARD_OK" in out
