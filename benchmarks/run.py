@@ -52,66 +52,87 @@ def _time(fn, n=5, warmup=1):
 # ---------------------------------------------------------------------------
 def bench_table1():
     from repro.core.dram import substrate as S
-    from repro.core.dram import timing as T
+    from repro.core.dram.spec import DDR3_1600
 
-    bank = S.make_bank(16, 16, 1024, jax.random.key(0))
+    # Costs are reported from the full-geometry spec (Table-1 exact); the
+    # functional bank uses short 1 KB rows so the data-correct copy we *time*
+    # stays small.
+    spec = DDR3_1600
+    bank_spec = DDR3_1600.with_geometry(16, 16, 1024)
+    bank = S.make_bank(bank_spec, key=jax.random.key(0))
     paper = {"RC-InterSA": (1363.75, 4.33), "RC-Bank": (701.25, 2.08),
              "RC-IntraSA": (83.75, 0.06), "LISA-RISC-1": (148.5, 0.09),
              "LISA-RISC-7": (196.5, 0.12), "LISA-RISC-15": (260.5, 0.17),
              "memcpy": (None, 6.2)}
-    got = T.table1()
-    for mech, (lat, ene) in got.items():
+    # Table-1 row -> (registry mechanism, src_sa, src_row, dst_sa, dst_row):
+    # each row times the mechanism actually named, via execute_copy.
+    copies = {"memcpy": ("memcpy", 0, 1, 7, 2),
+              "RC-InterSA": ("rc_intersa", 0, 1, 7, 2),
+              "RC-Bank": ("rc_bank", 0, 1, 7, 2),
+              "RC-IntraSA": ("rc_intrasa", 0, 1, 0, 2),
+              "LISA-RISC-1": ("lisa", 0, 1, 1, 2),
+              "LISA-RISC-7": ("lisa", 0, 1, 7, 2),
+              "LISA-RISC-15": ("lisa", 0, 1, 15, 2)}
+    for mech, (lat, ene) in spec.table1().items():
         plat, pene = paper[mech]
+        name, *args = copies[mech]
         us = _time(lambda: jax.block_until_ready(
-            S.lisa_risc_copy(bank, 0, 1, 7, 2)[0].row_buffer)) \
-            if mech.startswith("LISA") else 0.0
+            S.execute_copy(bank, name, *args,
+                           spec=bank_spec).state.row_buffer))
         row(f"table1_{mech}", us,
             f"lat_ns={lat:.2f};paper={plat};energy_uJ={ene:.3f};paper={pene}")
+    lat1, e1 = spec.table1()["LISA-RISC-1"]
     row("fig2_latency_ratio_vs_rowclone", 0.0,
-        f"{T.latency_rc_inter_sa()/T.latency_lisa_risc(1):.1f}x;paper=9x")
+        f"{spec.copy_latency('rc_intersa')/lat1:.1f}x;paper=9x")
     row("fig2_energy_ratio_vs_rowclone", 0.0,
-        f"{T.energy_rc_inter_sa()/T.energy_lisa_risc(1):.1f}x;paper=48x")
+        f"{spec.copy_energy('rc_intersa')/e1:.1f}x;paper=48x")
     row("fig2_energy_ratio_vs_memcpy", 0.0,
-        f"{T.energy_memcpy()/T.energy_lisa_risc(1):.1f}x;paper=69x")
+        f"{spec.copy_energy('memcpy')/e1:.1f}x;paper=69x")
     row("rbm_bandwidth", 0.0,
-        f"{T.RBM_BW_GBPS:.0f}GB/s={T.RBM_BW_GBPS/T.CHANNEL_BW_GBPS:.1f}x_channel;paper=26x")
+        f"{spec.rbm_bw_gbps:.0f}GB/s="
+        f"{spec.rbm_bw_gbps/spec.channel_bw_gbps:.1f}x_channel;paper=26x")
 
 
 def bench_fig3_fig4():
-    from repro.core.dram.controller import (MechanismConfig, simulate_jit,
+    from repro.core.dram.controller import (MechanismConfig, simulate_grid,
                                             weighted_speedup)
-    from repro.core.dram.traces import TraceConfig, generate
+    from repro.core.dram.traces import TraceConfig, generate_batch
 
-    # "50 workloads": sweep copy-intensity x locality (5 x 5 x 2 seeds)
-    ws_all = {"lisa": [], "villa": [], "comb": [], "rc_villa": [], "lip": []}
-    hits = []
-    en_red = []
+    # "50 workloads": sweep copy-intensity x locality (5 x 5 x 2 seeds).
+    # All 50 traces are generated in one vmapped call (workload knobs are
+    # traced data) and the whole (mechanism x workload) grid runs as ONE
+    # vmapped execution of the single jitted simulator (mechanism config is
+    # traced data too), instead of re-jitting per cell.
     t0 = time.perf_counter()
-    for copy_prob in (0.002, 0.005, 0.01, 0.02, 0.04):
-        for zipf in (1.0, 1.2, 1.4, 1.6, 1.8):
-            for seed in (1, 2):
-                tcfg = TraceConfig(n_requests=4096, copy_prob=copy_prob,
-                                   zipf_s=zipf)
-                tr = generate(jax.random.key(seed), tcfg)
-                base = simulate_jit(tr, tcfg, MechanismConfig("memcpy"))
-                res = {
-                    "lisa": simulate_jit(tr, tcfg, MechanismConfig("lisa")),
-                    "villa": simulate_jit(tr, tcfg, MechanismConfig(
-                        "lisa", use_villa=True)),
-                    "comb": simulate_jit(tr, tcfg, MechanismConfig(
-                        "lisa", use_villa=True, use_lip=True)),
-                    "rc_villa": simulate_jit(tr, tcfg, MechanismConfig(
-                        "memcpy", use_villa=True,
-                        villa_copy_mech="rc_intersa")),
-                    "lip": simulate_jit(tr, tcfg, MechanismConfig(
-                        "memcpy", use_lip=True)),
-                }
-                for k, r in res.items():
-                    ws_all[k].append(float(weighted_speedup(
-                        base["core_stall"], r["core_stall"])))
-                hits.append(float(res["villa"]["villa_hit_rate"]))
-                en_red.append(1 - float(res["comb"]["energy_uJ"])
-                              / float(base["energy_uJ"]))
+    tcfg = TraceConfig(n_requests=4096)
+    cells = [(copy_prob, zipf, seed)
+             for copy_prob in (0.002, 0.005, 0.01, 0.02, 0.04)
+             for zipf in (1.0, 1.2, 1.4, 1.6, 1.8)
+             for seed in (1, 2)]
+    traces = generate_batch(
+        jnp.stack([jax.random.key(s) for _, _, s in cells]),
+        jnp.asarray([cp for cp, _, _ in cells]),
+        jnp.asarray([z for _, z, _ in cells]), tcfg)
+    names = ["base", "lisa", "villa", "comb", "rc_villa", "lip"]
+    grid = simulate_grid(traces, tcfg, [
+        MechanismConfig("memcpy"),
+        MechanismConfig("lisa"),
+        MechanismConfig("lisa", use_villa=True),
+        MechanismConfig("lisa", use_villa=True, use_lip=True),
+        MechanismConfig("memcpy", use_villa=True,
+                        villa_copy_mech="rc_intersa"),
+        MechanismConfig("memcpy", use_lip=True),
+    ])
+    jax.block_until_ready(grid)
+    base = {k: v[0] for k, v in grid.items()}
+    res = {n: {k: v[i] for k, v in grid.items()}
+           for i, n in enumerate(names) if n != "base"}
+    ws_all = {k: np.asarray(weighted_speedup(base["core_stall"],
+                                             r["core_stall"]))
+              for k, r in res.items()}
+    hits = np.asarray(res["villa"]["villa_hit_rate"])
+    en_red = 1 - np.asarray(res["comb"]["energy_uJ"]) / np.asarray(
+        base["energy_uJ"])
     total_us = (time.perf_counter() - t0) * 1e6 / 50
     gm = lambda xs: float(np.exp(np.mean(np.log(np.maximum(xs, 1e-9)))))
     row("fig3_villa_hit_rate", total_us,

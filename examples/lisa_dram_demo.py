@@ -1,28 +1,31 @@
 """Full reproduction demo: Table 1 + Figs. 3/4 orderings on synthetic
-multiprogrammed workloads (the paper's system evaluation, Sec. 3).
+multiprogrammed workloads (the paper's system evaluation, Sec. 3), under the
+`DramSpec` device-model API.
 
 Run:  PYTHONPATH=src python examples/lisa_dram_demo.py
 """
 import jax
 
-from repro.core.dram import timing as T
-from repro.core.dram.controller import (MechanismConfig, simulate_jit,
+from repro.core.dram.controller import (MechanismConfig, simulate,
                                         weighted_speedup)
+from repro.core.dram.spec import DDR3_1600, DDR4_2400
 from repro.core.dram.traces import TraceConfig, generate
 
-print("=== Table 1 (8 KB copy) ===")
+spec = DDR3_1600
+print(f"=== Table 1 (8 KB copy, preset {spec.name}) ===")
 print(f"{'mechanism':14s} {'latency ns':>10s} {'energy uJ':>10s}")
-for mech, (lat, ene) in T.table1().items():
+for mech, (lat, ene) in spec.table1().items():
     print(f"{mech:14s} {lat:10.2f} {ene:10.4f}")
-print(f"\nRBM bandwidth: {T.RBM_BW_GBPS:.0f} GB/s = "
-      f"{T.RBM_BW_GBPS/T.CHANNEL_BW_GBPS:.1f}x a DDR4-2400 channel (paper: 26x)")
-print(f"LIP precharge: {T.precharge_latency(False):.0f} ns -> "
-      f"{T.precharge_latency(True):.0f} ns (paper: 2.6x)")
+print(f"\nRBM bandwidth: {spec.rbm_bw_gbps:.0f} GB/s = "
+      f"{spec.rbm_bw_gbps/spec.channel_bw_gbps:.1f}x a DDR4-2400 channel "
+      f"(paper: 26x)")
+print(f"LIP precharge: {spec.precharge_latency(False):.0f} ns -> "
+      f"{spec.precharge_latency(True):.0f} ns (paper: 2.6x)")
 
 print("\n=== System evaluation (4-core synthetic workloads) ===")
 tcfg = TraceConfig(n_requests=16384)
-tr = generate(jax.random.key(1), tcfg)
-base = simulate_jit(tr, tcfg, MechanismConfig("memcpy"))
+tr = generate(jax.random.key(1), tcfg, spec)
+base = simulate(tr, tcfg, MechanismConfig("memcpy"), spec)
 for name, mcfg, paper in [
     ("RowClone-InterSA", MechanismConfig("rc_intersa"), ""),
     ("LISA-RISC", MechanismConfig("lisa"), "paper: +59.6%"),
@@ -34,8 +37,16 @@ for name, mcfg, paper in [
                                          villa_copy_mech="rc_intersa"),
      "paper: -52.3% (slow copies kill caching)"),
 ]:
-    r = simulate_jit(tr, tcfg, mcfg)
+    r = simulate(tr, tcfg, mcfg, spec)
     ws = float(weighted_speedup(base["core_stall"], r["core_stall"]))
     ene = 1 - float(r["energy_uJ"]) / float(base["energy_uJ"])
     hit = float(r["villa_hit_rate"])
     print(f"{name:18s} WS {ws:6.3f}x  energy {ene:+.1%}  hit {hit:.2f}  {paper}")
+
+# Every simulate() above — all mechanisms, VILLA, LIP — reused ONE jitted
+# compilation (mechanism config is traced data).  Other presets are one
+# argument away:
+print(f"\n=== Preset sweep: LISA-RISC-7 latency across devices ===")
+for s in (DDR3_1600, DDR4_2400):
+    print(f"{s.name:12s} {s.copy_latency('lisa', 7):8.2f} ns "
+          f"(RC-InterSA {s.copy_latency('rc_intersa'):8.2f} ns)")

@@ -12,21 +12,23 @@ import jax.numpy as jnp
 
 # --- 1. DRAM substrate: LISA-RISC copy ------------------------------------
 from repro.core.dram import substrate as S
-from repro.core.dram import timing as T
+from repro.core.dram.spec import DDR3_1600
 
-bank = S.make_bank(n_subarrays=16, rows_per_subarray=16, row_bytes=1024,
-                   key=jax.random.key(0))
+# full 8 KB rows so every modeled cost is Table-1 exact (2 MB of cells)
+spec = DDR3_1600.with_geometry(16, 16)
+bank = S.make_bank(spec, key=jax.random.key(0))
 bank2, lat, ene = S.lisa_risc_copy(bank, src_sa=1, src_row=3,
-                                   dst_sa=8, dst_row=5)
+                                   dst_sa=8, dst_row=5, spec=spec)
 assert (bank2.cells[8, 5] == bank.cells[1, 3]).all()
 print(f"LISA-RISC copy  (7 hops): {lat:.2f} ns, {ene:.4f} uJ "
       f"(paper Table 1: 196.5 ns / 0.12 uJ)")
-print(f"RowClone InterSA baseline: {T.latency_rc_inter_sa():.2f} ns "
-      f"/ {T.energy_rc_inter_sa():.2f} uJ -> "
-      f"{T.latency_rc_inter_sa()/lat:.1f}x slower")
+print(f"RowClone InterSA baseline: {spec.copy_latency('rc_intersa'):.2f} ns "
+      f"/ {spec.copy_energy('rc_intersa'):.2f} uJ -> "
+      f"{spec.copy_latency('rc_intersa')/lat:.1f}x slower")
 
 # --- 2. 1-to-N multicast (paper Sec. 5.2) ----------------------------------
-bank3, lat_b, _ = S.lisa_broadcast(bank, 1, 3, dsts=(4, 9, 14), dst_row=2)
+bank3, lat_b, _ = S.lisa_broadcast(bank, 1, 3, dst_sas=(4, 9, 14), dst_row=2,
+                                   spec=spec)
 assert all((bank3.cells[d, 2] == bank.cells[1, 3]).all() for d in (4, 9, 14))
 print(f"1-to-3 multicast via intermediate latching: {lat_b:.2f} ns "
       f"(vs 3 separate copies: {3*lat:.2f} ns)")

@@ -1,10 +1,23 @@
 """Faithful reproduction of the LISA DRAM substrate (HPCA'16 / 2018 summary).
 
 Modules:
-  timing      — DDR3-1600 + LISA timing/energy models (Table 1, exact)
+  spec        — the `DramSpec` device-model API: geometry + timing/energy
+                presets (DDR3_1600 calibrated to Table 1, DDR4/LPDDR) and the
+                `CopyMechanism` registry (DESIGN.md Sec. 6)
+  timing      — back-compat shim over the default preset (Table 1, exact)
   substrate   — data-correct functional DRAM bank with RBM / RISC / multicast
   villa       — the VILLA hot-row caching policy (Sec. 3.2.1, exact)
-  controller  — command-level multi-core system simulator (Figs. 3/4 orderings)
+  controller  — command-level multi-core system simulator (Figs. 3/4
+                orderings); mechanism config is traced data, one jitted
+                simulate covers all mechanisms and vmaps over workloads
   traces      — synthetic workload generation (SPEC traces are not shippable)
 """
-from repro.core.dram import timing, substrate, villa, controller, traces  # noqa: F401
+from repro.core.dram import (  # noqa: F401
+    controller,
+    spec,
+    substrate,
+    timing,
+    traces,
+    villa,
+)
+from repro.core.dram.spec import DDR3_1600, DDR4_2400, DramSpec  # noqa: F401

@@ -14,29 +14,99 @@ Models the system-level effects the paper evaluates on Ramulator:
     (counters/epochs/benefit replacement), insertions charged to the
     configured copy mechanism (LISA vs RC-InterSA — Fig. 3's comparison).
 
+Mechanism parameters are **traced data** (:class:`MechanismParams` — the
+hop-linear cost coefficients from the :class:`~repro.core.dram.spec`
+``CopyMechanism`` registry, LIP precharge latency, VILLA on/off and fast-tier
+timings), so ONE jitted :func:`simulate_params` serves every copy mechanism
+and every ``DramSpec`` preset, and ``jax.vmap`` batches whole workload sweeps
+(:func:`simulate_sweep`) instead of re-jitting per configuration.  The only
+static arguments are shapes: bank/core counts and the VILLA table geometry.
+
 "Weighted speedup" is reported as in the paper's WS metric [14,93], with each
 core's IPC proxied by the reciprocal of its total memory stall time.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, NamedTuple
+from functools import partial
+from typing import Dict, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.dram import timing as T
 from repro.core.dram import villa as V
+from repro.core.dram.spec import DDR3_1600, DramSpec, get_mechanism
 from repro.core.dram.traces import Trace, TraceConfig
 
 
 @dataclasses.dataclass(frozen=True)
 class MechanismConfig:
-    copy_mech: str = "memcpy"         # memcpy | rc_intersa | lisa
+    copy_mech: str = "memcpy"         # any registered CopyMechanism name
     use_villa: bool = False
     use_lip: bool = False
     villa_copy_mech: str = "lisa"     # lisa | rc_intersa  (Fig. 3 comparison)
     villa: V.VillaConfig = dataclasses.field(default_factory=V.VillaConfig)
+
+
+class MechanismParams(NamedTuple):
+    """Everything the jitted simulator needs, as traced f32/i32 scalars.
+
+    ``copy_*`` / ``ins_*`` are hop-linear cost coefficients
+    (``cost(h) = base + per_hop * max(h, 1)``) for the bulk-copy mechanism
+    and the VILLA-insertion mechanism; the rest are the spec's access-path
+    timings.  Build with :func:`mechanism_params`; stack instances (e.g. via
+    ``jax.tree.map(jnp.stack, ...)``) to vmap over configurations.
+    """
+
+    copy_lat_base: jax.Array
+    copy_lat_hop: jax.Array
+    copy_e_base: jax.Array
+    copy_e_hop: jax.Array
+    copy_on_chan: jax.Array     # bool: copy occupies the off-chip channel
+    ins_lat_base: jax.Array
+    ins_lat_hop: jax.Array
+    ins_e_base: jax.Array
+    ins_e_hop: jax.Array
+    use_villa: jax.Array        # bool
+    t_pre: jax.Array            # precharge latency (LIP-shortened or not)
+    lat_hit: jax.Array
+    lat_closed: jax.Array
+    lat_fast_hit: jax.Array
+    lat_fast_open: jax.Array
+    lat_fast_closed: jax.Array
+    e_hit: jax.Array
+    e_miss: jax.Array
+    t_burst: jax.Array
+    rows_per_subarray: jax.Array  # i32
+
+
+def mechanism_params(mcfg: MechanismConfig,
+                     spec: DramSpec = DDR3_1600) -> MechanismParams:
+    """Lower a (spec, config) pair to the traced-data form of the simulator."""
+    copy_m = get_mechanism(mcfg.copy_mech)
+    ins_m = get_mechanism(mcfg.villa_copy_mech)
+    c_lat0, c_lath, c_e0, c_eh, c_chan = copy_m.coefficients(spec)
+    i_lat0, i_lath, i_e0, i_eh, _ = ins_m.coefficients(spec)
+    t, e, v = spec.timing, spec.energy, mcfg.villa
+    f32 = jnp.float32
+    return MechanismParams(
+        copy_lat_base=f32(c_lat0), copy_lat_hop=f32(c_lath),
+        copy_e_base=f32(c_e0), copy_e_hop=f32(c_eh),
+        copy_on_chan=jnp.asarray(bool(c_chan)),
+        ins_lat_base=f32(i_lat0), ins_lat_hop=f32(i_lath),
+        ins_e_base=f32(i_e0), ins_e_hop=f32(i_eh),
+        use_villa=jnp.asarray(mcfg.use_villa),
+        t_pre=f32(spec.precharge_latency(mcfg.use_lip)),
+        lat_hit=f32(t.tCL),
+        lat_closed=f32(t.tRCD + t.tCL),
+        lat_fast_hit=f32(v.tCL_fast),
+        lat_fast_open=f32(v.tRP_fast + v.tRCD_fast + v.tCL_fast),
+        lat_fast_closed=f32(v.tRCD_fast + v.tCL_fast),
+        e_hit=f32(e.e_col_internal + e.e_col_channel),
+        e_miss=f32(e.e_act_pre + e.e_col_internal + e.e_col_channel),
+        t_burst=f32(t.tBURST),
+        rows_per_subarray=jnp.int32(spec.rows_per_subarray),
+    )
 
 
 class SimState(NamedTuple):
@@ -44,111 +114,109 @@ class SimState(NamedTuple):
     chan_free: jax.Array     # () f32
     open_row: jax.Array      # (banks,) i32, -1 closed
     fast_open: jax.Array     # (banks,) i32 — open row in the fast subarray
-    villa: V.VillaState      # stacked over banks
+    tags: jax.Array          # (banks, n_slots) i32 — VILLA resident rows
+    benefit: jax.Array       # (banks, n_slots) i32 — VILLA benefit counters
     core_stall: jax.Array    # (cores,) f32
     energy: jax.Array        # () f32 uJ
     villa_hits: jax.Array    # () i32
     villa_accesses: jax.Array  # () i32
 
 
-def _copy_cost(mech: str, hops: jax.Array):
-    """(latency ns, energy uJ, occupies_channel) for an 8 KB copy."""
-    hops = jnp.maximum(hops, 1).astype(jnp.float32)
-    if mech == "memcpy":
-        return (jnp.float32(T.latency_memcpy()), jnp.float32(T.energy_memcpy()), True)
-    if mech == "rc_intersa":
-        return (jnp.float32(T.latency_rc_inter_sa()),
-                jnp.float32(T.energy_rc_inter_sa()), False)
-    if mech == "lisa":
-        base = T.LISA.risc_base(T.DDR3)
-        lat = base + T.LISA.t_rbm_hop * hops
-        ene = T.ENERGY.e_risc_base + (hops - 1.0) * T.ENERGY.e_rbm_hop
-        return (lat, ene, False)
-    raise ValueError(f"unknown copy mechanism: {mech}")
+@partial(jax.jit, static_argnames=("n_banks", "n_cores", "villa_cfg", "unroll"))
+def simulate_params(trace: Trace, p: MechanismParams, *, n_banks: int,
+                    n_cores: int, villa_cfg: V.VillaConfig,
+                    unroll: int = 4) -> Dict[str, jax.Array]:
+    """THE jitted simulator: one compilation serves all copy mechanisms,
+    LIP/VILLA settings, and DRAM presets (all traced via ``p``); recompiles
+    only when a shape changes.
 
+    Per-request quantities with no serial dependence — subarray/hop
+    distances, copy costs, and VILLA hotness (``villa.hot_for_sequence``) —
+    are precomputed vectorized; the scan carries only the serialized state
+    (bank/channel occupancy, open rows, VILLA tags/benefit), with the VILLA
+    branch behind ``lax.cond`` so disabled runs skip it at runtime within
+    the same compilation.
+    """
+    # ---- vectorized precomputation (no serial dependence) ---------------
+    sa_v = trace.row // p.rows_per_subarray
+    dst_sa_v = trace.dst_row // p.rows_per_subarray
+    hops_v = jnp.maximum(jnp.abs(dst_sa_v - sa_v), 1).astype(jnp.float32)
+    copy_lat_v = p.copy_lat_base + p.copy_lat_hop * hops_v
+    copy_ene_v = p.copy_e_base + p.copy_e_hop * hops_v
+    sa_f = jnp.maximum(sa_v, 1).astype(jnp.float32)
+    ins_lat_v = p.ins_lat_base + p.ins_lat_hop * sa_f
+    ins_ene_v = p.ins_e_base + p.ins_e_hop * sa_f
+    is_hot_v = V.hot_for_sequence(trace.bank, trace.row, n_banks, villa_cfg)
 
-def simulate(trace: Trace, tcfg: TraceConfig, mcfg: MechanismConfig) -> Dict[str, jax.Array]:
-    t = T.DDR3
-    tPRE = jnp.float32(T.precharge_latency(mcfg.use_lip))
-    lat_hit = jnp.float32(t.tCL)
-    lat_closed = jnp.float32(t.tRCD + t.tCL)
-    lat_fast_hit = jnp.float32(mcfg.villa.tCL_fast)
-    lat_fast_open = jnp.float32(mcfg.villa.tRP_fast + mcfg.villa.tRCD_fast
-                                + mcfg.villa.tCL_fast)
-    lat_fast_closed = jnp.float32(mcfg.villa.tRCD_fast + mcfg.villa.tCL_fast)
+    def villa_on(args):
+        (tags, benefit, bank, row, is_hot, fast_open_b, ins_lat, ins_ene,
+         lat_normal, e_normal) = args
+        tags_b, ben_b, vhit, vinsert = V.tags_access(
+            tags[bank], benefit[bank], row, is_hot)
+        # The fast subarray has its own row buffer (it *is* a subarray).
+        f_hit = fast_open_b == row
+        f_open = fast_open_b >= 0
+        lat_fast = jnp.where(f_hit, p.lat_fast_hit,
+                             jnp.where(f_open, p.lat_fast_open,
+                                       p.lat_fast_closed))
+        # An insertion reuses the row buffer the access just activated:
+        # the requestor is served at slow latency; the RBM + restore then
+        # occupies the *bank* in the background (charged by the caller),
+        # not the request's critical path.
+        lat_normal = jnp.where(vhit, lat_fast, lat_normal)
+        bank_extra = jnp.where(vinsert, ins_lat, 0.0)
+        e_normal = jnp.where(vhit, p.e_hit,
+                             e_normal + jnp.where(vinsert, ins_ene, 0.0))
+        new_fast = jnp.where(vhit | vinsert, row, fast_open_b).astype(
+            jnp.int32)
+        return (tags.at[bank].set(tags_b), benefit.at[bank].set(ben_b),
+                vhit, lat_normal, e_normal, bank_extra, new_fast,
+                jnp.ones((), jnp.int32))
 
-    e_access_miss = jnp.float32(T.ENERGY.e_act_pre + T.ENERGY.e_col_internal
-                                + T.ENERGY.e_col_channel)
-    e_access_hit = jnp.float32(T.ENERGY.e_col_internal + T.ENERGY.e_col_channel)
+    def villa_off(args):
+        (tags, benefit, bank, row, is_hot, fast_open_b, ins_lat, ins_ene,
+         lat_normal, e_normal) = args
+        return (tags, benefit, jnp.zeros((), bool), lat_normal, e_normal,
+                jnp.zeros((), jnp.float32), fast_open_b,
+                jnp.zeros((), jnp.int32))
 
     def step(state: SimState, req):
-        arrival, core, bank, row, is_copy, dst_row = req
-        sa = row // tcfg.rows_per_subarray
-        dst_sa = dst_row // tcfg.rows_per_subarray
+        (arrival, core, bank, row, is_copy, is_hot, copy_lat, copy_ene,
+         ins_lat, ins_ene) = req
 
         t0 = jnp.maximum(arrival, state.bank_free[bank])
 
         # ---- normal access latency (open-row policy) --------------------
         is_hit = state.open_row[bank] == row
         is_open = state.open_row[bank] >= 0
-        lat_conflict = tPRE + lat_closed
-        lat_normal = jnp.where(is_hit, lat_hit,
-                               jnp.where(is_open, lat_conflict, lat_closed))
-        e_normal = jnp.where(is_hit, e_access_hit, e_access_miss)
+        lat_conflict = p.t_pre + p.lat_closed
+        lat_normal = jnp.where(is_hit, p.lat_hit,
+                               jnp.where(is_open, lat_conflict, p.lat_closed))
+        e_normal = jnp.where(is_hit, p.e_hit, p.e_miss)
 
-        # ---- VILLA ------------------------------------------------------
-        if mcfg.use_villa:
-            vbank = jax.tree.map(lambda x: x[bank], state.villa)
-            vbank2, vhit, vinsert, _ = V.villa_access(vbank, row, mcfg.villa)
-            new_villa = jax.tree.map(
-                lambda full, leaf: full.at[bank].set(leaf), state.villa, vbank2)
-            ins_lat, ins_ene, _ = _copy_cost(mcfg.villa_copy_mech,
-                                             jnp.maximum(sa, 1))
-            # The fast subarray has its own row buffer (it *is* a subarray).
-            f_hit = state.fast_open[bank] == row
-            f_open = state.fast_open[bank] >= 0
-            lat_fast = jnp.where(f_hit, lat_fast_hit,
-                                 jnp.where(f_open, lat_fast_open,
-                                           lat_fast_closed))
-            # An insertion reuses the row buffer the access just activated:
-            # the requestor is served at slow latency; the RBM + restore then
-            # occupies the *bank* in the background (charged below), not the
-            # request's critical path.
-            lat_normal = jnp.where(vhit, lat_fast, lat_normal)
-            bank_extra = jnp.where(vinsert, ins_lat, 0.0)
-            e_normal = jnp.where(vhit, e_access_hit,
-                                 e_normal + jnp.where(vinsert, ins_ene, 0.0))
-            new_fast_open = jnp.where(vhit | vinsert, row,
-                                      state.fast_open[bank]).astype(jnp.int32)
-            villa_hits = state.villa_hits + vhit.astype(jnp.int32)
-            villa_acc = state.villa_accesses + 1
-        else:
-            vhit = jnp.zeros((), bool)
-            bank_extra = jnp.zeros((), jnp.float32)
-            new_villa = state.villa
-            new_fast_open = state.fast_open[bank]
-            villa_hits, villa_acc = state.villa_hits, state.villa_accesses
+        # ---- VILLA (same compilation; skipped at runtime when off) -------
+        (new_tags, new_benefit, vhit, lat_normal, e_normal, bank_extra,
+         new_fast_open, acc) = jax.lax.cond(
+            p.use_villa, villa_on, villa_off,
+            (state.tags, state.benefit, bank, row, is_hot,
+             state.fast_open[bank], ins_lat, ins_ene, lat_normal, e_normal))
+        villa_hits = state.villa_hits + vhit.astype(jnp.int32)
+        villa_acc = state.villa_accesses + acc
 
         # ---- bulk copy --------------------------------------------------
-        hops = jnp.abs(dst_sa - sa)
-        copy_lat, copy_ene, copy_on_chan = _copy_cost(mcfg.copy_mech, hops)
-
         lat = jnp.where(is_copy, copy_lat, lat_normal)
         ene = jnp.where(is_copy, copy_ene, e_normal)
 
         # ---- channel occupancy ------------------------------------------
         # Normal reads burst 64 B at the end of the access; memcpy copies own
         # the channel for their whole duration; in-DRAM copies never touch it.
-        if copy_on_chan:
-            chan_start_copy = jnp.maximum(t0, state.chan_free)
-            t_end_copy = chan_start_copy + lat
-            chan_after_copy = t_end_copy
-        else:
-            t_end_copy = t0 + lat
-            chan_after_copy = state.chan_free
+        chan_start_copy = jnp.maximum(t0, state.chan_free)
+        t_end_copy = jnp.where(p.copy_on_chan, chan_start_copy + lat, t0 + lat)
+        chan_after_copy = jnp.where(p.copy_on_chan, t_end_copy,
+                                    state.chan_free)
 
-        burst = jnp.maximum(t0 + lat - t.tBURST, state.chan_free)
-        t_end_normal = burst + t.tBURST
+        burst = jnp.maximum(t0 + lat - p.t_burst, state.chan_free)
+        t_end_normal = burst + p.t_burst
         chan_after_normal = t_end_normal
 
         t_end = jnp.where(is_copy, t_end_copy, t_end_normal)
@@ -164,7 +232,8 @@ def simulate(trace: Trace, tcfg: TraceConfig, mcfg: MechanismConfig) -> Dict[str
             chan_free=chan_free,
             open_row=state.open_row.at[bank].set(new_open),
             fast_open=state.fast_open.at[bank].set(new_fast_open),
-            villa=new_villa,
+            tags=new_tags,
+            benefit=new_benefit,
             core_stall=state.core_stall.at[core].add(t_end - arrival),
             energy=state.energy + ene,
             villa_hits=villa_hits,
@@ -172,20 +241,21 @@ def simulate(trace: Trace, tcfg: TraceConfig, mcfg: MechanismConfig) -> Dict[str
         )
         return state, t_end - arrival
 
-    villa0 = jax.vmap(lambda _: V.villa_init(mcfg.villa))(jnp.arange(tcfg.n_banks))
     init = SimState(
-        bank_free=jnp.zeros((tcfg.n_banks,), jnp.float32),
+        bank_free=jnp.zeros((n_banks,), jnp.float32),
         chan_free=jnp.zeros((), jnp.float32),
-        open_row=jnp.full((tcfg.n_banks,), -1, jnp.int32),
-        fast_open=jnp.full((tcfg.n_banks,), -1, jnp.int32),
-        villa=villa0,
-        core_stall=jnp.zeros((tcfg.n_cores,), jnp.float32),
+        open_row=jnp.full((n_banks,), -1, jnp.int32),
+        fast_open=jnp.full((n_banks,), -1, jnp.int32),
+        tags=jnp.full((n_banks, villa_cfg.n_slots), -1, jnp.int32),
+        benefit=jnp.zeros((n_banks, villa_cfg.n_slots), jnp.int32),
+        core_stall=jnp.zeros((n_cores,), jnp.float32),
         energy=jnp.zeros((), jnp.float32),
         villa_hits=jnp.zeros((), jnp.int32),
         villa_accesses=jnp.zeros((), jnp.int32),
     )
-    xs = (trace.t, trace.core, trace.bank, trace.row, trace.is_copy, trace.dst_row)
-    final, lat_trace = jax.lax.scan(step, init, xs)
+    xs = (trace.t, trace.core, trace.bank, trace.row, trace.is_copy,
+          is_hot_v, copy_lat_v, copy_ene_v, ins_lat_v, ins_ene_v)
+    final, lat_trace = jax.lax.scan(step, init, xs, unroll=unroll)
     return {
         "core_stall": final.core_stall,
         "energy_uJ": final.energy,
@@ -196,9 +266,77 @@ def simulate(trace: Trace, tcfg: TraceConfig, mcfg: MechanismConfig) -> Dict[str
     }
 
 
+def simulate(trace: Trace, tcfg: TraceConfig, mcfg: MechanismConfig,
+             spec: DramSpec = DDR3_1600) -> Dict[str, jax.Array]:
+    """Convenience wrapper: lower ``(spec, mcfg)`` to traced params and run
+    the single jitted core.  Repeated calls with different mechanisms (or
+    presets) reuse one compilation."""
+    return simulate_params(trace, mechanism_params(mcfg, spec),
+                           n_banks=tcfg.n_banks, n_cores=tcfg.n_cores,
+                           villa_cfg=mcfg.villa)
+
+
+# The historical name: the wrapper already runs jitted, so keep the alias for
+# call sites written against the old `jax.jit(simulate, static_argnums=...)`.
+simulate_jit = simulate
+
+
+def stack_traces(traces: Sequence[Trace]) -> Trace:
+    """Stack same-shape traces along a new leading axis for vmapped sweeps."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *traces)
+
+
+def stack_params(params: Sequence[MechanismParams]) -> MechanismParams:
+    """Stack MechanismParams along a new leading axis (vmap over configs)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *params)
+
+
+@partial(jax.jit, static_argnames=("n_banks", "n_cores", "villa_cfg"))
+def _simulate_vmapped(traces: Trace, p: MechanismParams, *, n_banks: int,
+                      n_cores: int, villa_cfg: V.VillaConfig):
+    return jax.vmap(
+        lambda tr: simulate_params(tr, p, n_banks=n_banks, n_cores=n_cores,
+                                   villa_cfg=villa_cfg, unroll=1))(traces)
+
+
+def simulate_sweep(traces: Trace, tcfg: TraceConfig, mcfg: MechanismConfig,
+                   spec: DramSpec = DDR3_1600) -> Dict[str, jax.Array]:
+    """Batch a whole workload sweep: ``traces`` is a stacked Trace (leading
+    axis = workloads, see :func:`stack_traces`); one vmapped execution of the
+    single jitted simulator replaces per-workload re-jitting.  Results gain a
+    leading workload axis."""
+    return _simulate_vmapped(traces, mechanism_params(mcfg, spec),
+                             n_banks=tcfg.n_banks, n_cores=tcfg.n_cores,
+                             villa_cfg=mcfg.villa)
+
+
+@partial(jax.jit, static_argnames=("n_banks", "n_cores", "villa_cfg"))
+def _simulate_grid(traces: Trace, p: MechanismParams, *, n_banks: int,
+                   n_cores: int, villa_cfg: V.VillaConfig):
+    return jax.vmap(lambda one_p: jax.vmap(
+        lambda tr: simulate_params(tr, one_p, n_banks=n_banks,
+                                   n_cores=n_cores, villa_cfg=villa_cfg,
+                                   unroll=1))(traces))(p)
+
+
+def simulate_grid(traces: Trace, tcfg: TraceConfig,
+                  mcfgs: Sequence[MechanismConfig],
+                  spec: DramSpec = DDR3_1600) -> Dict[str, jax.Array]:
+    """The full cross product in one execution: stacked ``traces``
+    (workload axis) x a list of mechanism configs (stacked into a params
+    axis).  Results carry leading axes ``(len(mcfgs), n_workloads)`` —
+    this is the fig3/fig4 "50 workloads x all mechanisms" sweep as a single
+    dispatch of the single compiled simulator."""
+    villa_cfg = mcfgs[0].villa
+    if any(m.villa != villa_cfg for m in mcfgs):
+        raise ValueError("simulate_grid requires a shared VillaConfig "
+                         "(its table geometry is a static shape)")
+    params = stack_params([mechanism_params(m, spec) for m in mcfgs])
+    return _simulate_grid(traces, params, n_banks=tcfg.n_banks,
+                          n_cores=tcfg.n_cores, villa_cfg=villa_cfg)
+
+
 def weighted_speedup(base_stall: jax.Array, mech_stall: jax.Array) -> jax.Array:
-    """WS proxy: sum over cores of IPC_mech/IPC_base with IPC ~ 1/stall."""
-    return (base_stall / jnp.maximum(mech_stall, 1e-3)).mean()
-
-
-simulate_jit = jax.jit(simulate, static_argnums=(1, 2))
+    """WS proxy: mean over cores of IPC_mech/IPC_base with IPC ~ 1/stall.
+    Works element-wise over leading batch axes (reduces the last axis)."""
+    return (base_stall / jnp.maximum(mech_stall, 1e-3)).mean(axis=-1)

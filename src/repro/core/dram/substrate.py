@@ -4,9 +4,10 @@ This is the *semantic* half of the reproduction: a pure-JAX state machine whose
 operations mirror the DRAM commands the paper reasons about —
 ACTIVATE / PRECHARGE / RBM (row buffer movement) / column READ / WRITE — plus
 the composed LISA-RISC copy and the 1-to-N multicast enabled by intermediate
-row-buffer latching (paper Sec. 5.2).  Timing/energy accounting comes from
-``timing.py``; this module guarantees the *data movement itself* is correct,
-including the adjacency and precharge-state preconditions of RBM.
+row-buffer latching (paper Sec. 5.2).  Geometry and all command costs come
+from a :class:`repro.core.dram.spec.DramSpec`; this module guarantees the
+*data movement itself* is correct, including the adjacency and precharge-state
+preconditions of RBM.  Composed copies return a typed :class:`CopyResult`.
 
 State layout (one bank):
   cells        (n_subarrays, rows_per_subarray, row_bytes)  uint8
@@ -17,12 +18,23 @@ State layout (one bank):
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.dram import timing as T
+from repro.core.dram.spec import DDR3_1600, DramSpec, get_mechanism
+
+
+class CopyResult(NamedTuple):
+    """Typed result of a composed copy: new state + modeled cost.
+
+    Unpacks like the historical ``(state, latency_ns, energy_uj)`` tuple.
+    """
+
+    state: "BankState"
+    latency_ns: float
+    energy_uj: float
 
 
 @jax.tree_util.register_pytree_node_class
@@ -53,18 +65,19 @@ class BankState:
         return self.cells.shape[2]
 
 
-def make_bank(n_subarrays: int = 16, rows_per_subarray: int = 64,
-              row_bytes: int = T.ROW_BYTES, key: jax.Array | None = None) -> BankState:
+def make_bank(spec: DramSpec = DDR3_1600, *,
+              key: jax.Array | None = None) -> BankState:
+    """Construct one bank with the spec's geometry (zeroed or random cells)."""
+    shape = (spec.n_subarrays, spec.rows_per_subarray, spec.row_bytes)
     if key is None:
-        cells = jnp.zeros((n_subarrays, rows_per_subarray, row_bytes), jnp.uint8)
+        cells = jnp.zeros(shape, jnp.uint8)
     else:
-        cells = jax.random.randint(
-            key, (n_subarrays, rows_per_subarray, row_bytes), 0, 256, jnp.uint8)
+        cells = jax.random.randint(key, shape, 0, 256, jnp.uint8)
     return BankState(
         cells=cells,
-        row_buffer=jnp.zeros((n_subarrays, row_bytes), jnp.uint8),
-        rb_valid=jnp.zeros((n_subarrays,), bool),
-        open_row=jnp.full((n_subarrays,), -1, jnp.int32),
+        row_buffer=jnp.zeros((spec.n_subarrays, spec.row_bytes), jnp.uint8),
+        rb_valid=jnp.zeros((spec.n_subarrays,), bool),
+        open_row=jnp.full((spec.n_subarrays,), -1, jnp.int32),
     )
 
 
@@ -111,11 +124,15 @@ def precharge(state: BankState, sa: jax.Array) -> BankState:
 def rbm(state: BankState, src_sa: jax.Array, dst_sa: jax.Array) -> BankState:
     """Row Buffer Movement between *adjacent* subarrays (the LISA primitive).
 
-    Preconditions (checked with ``checkify``-style masking — the op is a no-op
-    with ``rb_valid[dst]=False`` if violated, so property tests can detect
-    misuse): |src-dst| == 1, src buffer valid, dst subarray precharged.
-    The activated source row buffer drives the precharged destination
-    bitlines; the destination senses and latches (paper Sec. 2).
+    Preconditions (checked with ``checkify``-style masking): |src-dst| == 1,
+    src buffer valid, dst subarray precharged.  On success the activated
+    source row buffer drives the precharged destination bitlines; the
+    destination senses and latches (paper Sec. 2).  On a violated
+    precondition the destination's data is untouched but its buffer is
+    conservatively *invalidated* (``rb_valid[dst] = False``): a misfired RBM
+    disturbs the destination sense amplifiers, and marking the buffer invalid
+    makes misuse detectable by property tests instead of silently keeping
+    stale contents trustworthy.
     """
     src_sa = jnp.asarray(src_sa, jnp.int32)
     dst_sa = jnp.asarray(dst_sa, jnp.int32)
@@ -124,22 +141,24 @@ def rbm(state: BankState, src_sa: jax.Array, dst_sa: jax.Array) -> BankState:
     return BankState(
         cells=state.cells,
         row_buffer=state.row_buffer.at[dst_sa].set(moved),
-        rb_valid=state.rb_valid.at[dst_sa].set(ok | state.rb_valid[dst_sa]),
+        rb_valid=state.rb_valid.at[dst_sa].set(ok),
         open_row=state.open_row,
     )
 
 
-def read_line(state: BankState, sa: jax.Array, line: jax.Array) -> jax.Array:
-    """Column read of one 64 B cache line from the open row buffer."""
-    start = jnp.asarray(line, jnp.int32) * T.CACHE_LINE_BYTES
-    return jax.lax.dynamic_slice(state.row_buffer[sa], (start,), (T.CACHE_LINE_BYTES,))
+def read_line(state: BankState, sa: jax.Array, line: jax.Array,
+              spec: DramSpec = DDR3_1600) -> jax.Array:
+    """Column read of one cache line from the open row buffer."""
+    start = jnp.asarray(line, jnp.int32) * spec.cache_line_bytes
+    return jax.lax.dynamic_slice(state.row_buffer[sa], (start,),
+                                 (spec.cache_line_bytes,))
 
 
 def write_line(state: BankState, sa: jax.Array, line: jax.Array,
-               data: jax.Array) -> BankState:
-    """Column write of one 64 B cache line into the open row (and buffer)."""
+               data: jax.Array, spec: DramSpec = DDR3_1600) -> BankState:
+    """Column write of one cache line into the open row (and buffer)."""
     sa = jnp.asarray(sa, jnp.int32)
-    start = jnp.asarray(line, jnp.int32) * T.CACHE_LINE_BYTES
+    start = jnp.asarray(line, jnp.int32) * spec.cache_line_bytes
     buf = jax.lax.dynamic_update_slice(state.row_buffer[sa], data.astype(jnp.uint8), (start,))
     row = state.open_row[sa]
     return BankState(
@@ -151,7 +170,7 @@ def write_line(state: BankState, sa: jax.Array, line: jax.Array,
 
 
 # ---------------------------------------------------------------------------
-# Composed operations: LISA-RISC copy and 1-to-N multicast.
+# Composed operations: LISA-RISC copy, 1-to-N multicast, baselines.
 # ---------------------------------------------------------------------------
 
 def _hop_chain(state: BankState, src_sa: int, dst_sa: int) -> BankState:
@@ -164,8 +183,9 @@ def _hop_chain(state: BankState, src_sa: int, dst_sa: int) -> BankState:
 
 
 def lisa_risc_copy(state: BankState, src_sa: int, src_row: int,
-                   dst_sa: int, dst_row: int) -> Tuple[BankState, float, float]:
-    """Full LISA-RISC row copy.  Returns (state, latency_ns, energy_uJ).
+                   dst_sa: int, dst_row: int,
+                   spec: DramSpec = DDR3_1600) -> CopyResult:
+    """Full LISA-RISC row copy.
 
     ACTIVATE(src) -> RBM x hops -> ACTIVATE(dst, restore mode) -> PRE.
     Subarray indices are Python ints (command schedules are static), data is
@@ -179,12 +199,13 @@ def lisa_risc_copy(state: BankState, src_sa: int, src_row: int,
     state = precharge(state, src_sa)          # close source; dst buffer holds data
     state = activate(state, dst_sa, dst_row)  # restore-mode: buffer -> cells
     state = precharge(state, dst_sa)
-    return state, T.latency_lisa_risc(hops), T.energy_lisa_risc(hops)
+    return CopyResult(state, spec.copy_latency("lisa", hops),
+                      spec.copy_energy("lisa", hops))
 
 
 def lisa_broadcast(state: BankState, src_sa: int, src_row: int,
-                   dst_sas: Tuple[int, ...], dst_row: int
-                   ) -> Tuple[BankState, float, float]:
+                   dst_sas: Tuple[int, ...], dst_row: int,
+                   spec: DramSpec = DDR3_1600) -> CopyResult:
     """1-to-N multicast (paper Sec. 5.2): one hop chain to the farthest
     destination latches the data in *every* intermediate row buffer; a single
     ACTIVATE per destination then restores it into ``dst_row``.
@@ -206,31 +227,127 @@ def lisa_broadcast(state: BankState, src_sa: int, src_row: int,
         state = _hop_chain(state, src_sa, min(bwd))
         hops += src_sa - min(bwd)
     state = precharge(state, src_sa)
-    lat = T.latency_lisa_risc(hops)           # chains serialized (conservative)
-    ene = T.energy_lisa_risc(hops)
+    lat = spec.copy_latency("lisa", hops)     # chains serialized (conservative)
+    ene = spec.copy_energy("lisa", hops)
+    t = spec.timing
     for i, d in enumerate(sorted(dst_sas, key=lambda d: abs(d - src_sa))):
         state = activate(state, d, dst_row)   # restore latched buffer
         state = precharge(state, d)
         if i > 0:
-            lat += T.DDR3.tRAS + T.DDR3.tRP
-            ene += 2 * T.ENERGY.e_act_pre
-    return state, lat, ene
+            lat += t.tRAS + t.tRP
+            ene += 2 * spec.energy.e_act_pre
+    return CopyResult(state, lat, ene)
 
 
-def rowclone_intersa_copy(state: BankState, src_sa: int, src_row: int,
-                          dst_sa: int, dst_row: int) -> Tuple[BankState, float, float]:
-    """Baseline RowClone inter-subarray copy (via the narrow internal bus):
-    semantically a row copy; cost from the calibrated Table-1 model."""
+def _serial_copy(state: BankState, src_sa: int, src_row: int,
+                 dst_sa: int, dst_row: int) -> BankState:
+    """Data path shared by the serial baselines (RC-InterSA / RC-Bank /
+    memcpy): read the source row out through its buffer, write it into the
+    destination row.  Only the *cost* differs between those mechanisms."""
     state = activate(state, src_sa, src_row)
     data = state.row_buffer[src_sa]
     state = precharge(state, src_sa)
     state = activate(state, dst_sa, dst_row)
-    buf = data
-    state = BankState(
-        cells=state.cells.at[dst_sa, dst_row].set(buf),
-        row_buffer=state.row_buffer.at[dst_sa].set(buf),
+    return BankState(
+        cells=state.cells.at[dst_sa, dst_row].set(data),
+        row_buffer=state.row_buffer.at[dst_sa].set(data),
         rb_valid=state.rb_valid,
         open_row=state.open_row,
     )
-    state = precharge(state, dst_sa)
-    return state, T.latency_rc_inter_sa(), T.energy_rc_inter_sa()
+
+
+def rowclone_intersa_copy(state: BankState, src_sa: int, src_row: int,
+                          dst_sa: int, dst_row: int,
+                          spec: DramSpec = DDR3_1600) -> CopyResult:
+    """Baseline RowClone inter-subarray copy (via the narrow internal bus):
+    semantically a row copy; cost from the calibrated Table-1 model."""
+    state = precharge(_serial_copy(state, src_sa, src_row, dst_sa, dst_row),
+                      dst_sa)
+    return CopyResult(state, spec.copy_latency("rc_intersa"),
+                      spec.copy_energy("rc_intersa"))
+
+
+def memcpy_copy(state: BankState, src_sa: int, src_row: int,
+                dst_sa: int, dst_row: int,
+                spec: DramSpec = DDR3_1600) -> CopyResult:
+    """Baseline CPU memcpy: the row crosses the off-chip channel twice (read
+    phase + write phase).  Data path as the serial baselines; cost and
+    channel occupancy from the ``memcpy`` mechanism."""
+    state = precharge(_serial_copy(state, src_sa, src_row, dst_sa, dst_row),
+                      dst_sa)
+    return CopyResult(state, spec.copy_latency("memcpy"),
+                      spec.copy_energy("memcpy"))
+
+
+def rowclone_bank_copy(state: BankState, src_sa: int, src_row: int,
+                       dst_sa: int, dst_row: int,
+                       spec: DramSpec = DDR3_1600) -> CopyResult:
+    """Baseline RowClone PSM between banks, modeled within one bank state
+    (the pipelined internal-bus transfer has the same data semantics; only
+    the cost differs)."""
+    state = precharge(_serial_copy(state, src_sa, src_row, dst_sa, dst_row),
+                      dst_sa)
+    return CopyResult(state, spec.copy_latency("rc_bank"),
+                      spec.copy_energy("rc_bank"))
+
+
+def rowclone_intrasa_copy(state: BankState, sa: int, src_row: int,
+                          dst_row: int,
+                          spec: DramSpec = DDR3_1600) -> CopyResult:
+    """Baseline RowClone FPM: back-to-back ACTIVATEs within one subarray
+    copy ``src_row`` onto ``dst_row`` through the shared row buffer."""
+    state = activate(state, sa, src_row)
+    buf = state.row_buffer[sa]
+    state = BankState(
+        cells=state.cells.at[sa, dst_row].set(buf),
+        row_buffer=state.row_buffer,
+        rb_valid=state.rb_valid,
+        open_row=state.open_row.at[sa].set(dst_row),
+    )
+    state = precharge(state, sa)
+    return CopyResult(state, spec.copy_latency("rc_intrasa"),
+                      spec.copy_energy("rc_intrasa"))
+
+
+# Functional substrate op per registered mechanism name.  New mechanisms
+# (spec.register_mechanism) advertise a data path here via
+# register_copy_op; cost-model-only mechanisms simply have no entry.
+_COPY_OPS = {}
+
+
+def register_copy_op(mechanism: str, op) -> None:
+    """Attach a functional substrate op ``op(state, src_sa, src_row, dst_sa,
+    dst_row, spec) -> CopyResult`` to a registered mechanism name."""
+    get_mechanism(mechanism)            # validates the name
+    _COPY_OPS[mechanism] = op
+
+
+def execute_copy(state: BankState, mechanism: str, src_sa: int, src_row: int,
+                 dst_sa: int, dst_row: int,
+                 spec: DramSpec = DDR3_1600) -> CopyResult:
+    """Run one row copy under the named :class:`CopyMechanism` from the
+    registry — the functional dispatch point used by benchmarks and demos
+    (no string if/elif chains at call sites)."""
+    mech = get_mechanism(mechanism)     # validates the name
+    op = _COPY_OPS.get(mech.name)
+    if op is None:
+        raise ValueError(
+            f"mechanism {mech.name!r} has no functional substrate op "
+            f"(have: {sorted(_COPY_OPS)}); register one with "
+            "substrate.register_copy_op")
+    if mech.name == "rc_intrasa":
+        if src_sa != dst_sa:
+            raise ValueError("rc_intrasa copies within one subarray "
+                             f"(got {src_sa} -> {dst_sa})")
+    elif src_sa == dst_sa:
+        raise ValueError(f"{mech.name} requires distinct subarrays")
+    return op(state, src_sa, src_row, dst_sa, dst_row, spec)
+
+
+register_copy_op("lisa", lisa_risc_copy)
+register_copy_op("rc_intersa", rowclone_intersa_copy)
+register_copy_op("rc_bank", rowclone_bank_copy)
+register_copy_op("memcpy", memcpy_copy)
+register_copy_op("rc_intrasa",
+                 lambda state, src_sa, src_row, dst_sa, dst_row, spec:
+                 rowclone_intrasa_copy(state, src_sa, src_row, dst_row, spec))

@@ -1,180 +1,95 @@
-"""DRAM timing & energy model for the LISA substrate (HPCA'16 / 2018 summary).
+"""Back-compat shim over :mod:`repro.core.dram.spec` (the `DramSpec` API).
 
-Command-level model calibrated against JEDEC DDR3-1600 timings.  Every number in
-Table 1 of the paper is reproduced by the formulas below — the latency
-decompositions are documented inline; the energy components are a calibrated
-component model solved on the paper's anchor points (the paper reports SPICE
-results, not component breakdowns, so the per-component constants here are
-back-solved and documented as such).
+Historically this module *was* the device model: it exported `DDR3` / `LISA` /
+`ENERGY` singletons plus free functions that every other layer read directly.
+That hardwired one device and forced string dispatch; the model now lives in
+``spec.DramSpec`` with a preset registry (``DDR3_1600`` calibrated to Table 1,
+plus DDR4/LPDDR presets) and a ``CopyMechanism`` registry.
+
+This shim keeps the old names importable.  The singletons below are retained
+for interactive use only — **no repo module may read them**; every consumer
+takes a ``DramSpec``.  ``table1()`` stays as the canonical thin wrapper over
+the default preset and still reproduces the paper's exact numbers.
 
 Units: nanoseconds (ns) and microjoules (uJ) throughout.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, Tuple
 
-CACHE_LINE_BYTES = 64
-ROW_BYTES = 8192                      # 8 KB DRAM row (rank-level)
-LINES_PER_ROW = ROW_BYTES // CACHE_LINE_BYTES   # 128
+from repro.core.dram.spec import (  # noqa: F401  (re-exports)
+    DDR3_1600,
+    DramSpec,
+    DramTiming,
+    EnergyModel,
+    LisaTiming,
+    get_mechanism,
+    get_preset,
+)
+
+# Legacy class names.
+DDR3Timing = DramTiming
+LISATiming = LisaTiming
+
+# Legacy constants, all derived from the default preset.
+CACHE_LINE_BYTES = DDR3_1600.cache_line_bytes
+ROW_BYTES = DDR3_1600.row_bytes
+LINES_PER_ROW = DDR3_1600.lines_per_row
+CHANNEL_BW_GBPS = DDR3_1600.channel_bw_gbps
+RBM_BW_GBPS = DDR3_1600.rbm_bw_gbps
+
+# Legacy singletons — kept importable for back-compat/REPL use only; no
+# module in this repo reads them (consumers take a DramSpec).
+DDR3 = DDR3_1600.timing
+LISA = DDR3_1600.lisa
+ENERGY = DDR3_1600.energy
 
 
-@dataclasses.dataclass(frozen=True)
-class DDR3Timing:
-    """JEDEC DDR3-1600 (11-11-11) timing parameters, in ns."""
-
-    tCK: float = 1.25
-    tRCD: float = 13.75     # ACT -> column command
-    tRP: float = 13.75      # PRE -> ACT (baseline precharge latency)
-    tRAS: float = 35.0      # ACT -> PRE (restoration complete)
-    tCL: float = 13.75      # column read latency
-    tCWL: float = 12.5      # column write latency (CWL=10)
-    tCCD: float = 5.0       # column-to-column, 4 cycles
-    tBURST: float = 5.0     # 8-beat burst, 4 cycles
-    tWR: float = 15.0       # write recovery
-    tRTP: float = 7.5       # read -> precharge
-
-    @property
-    def tRC(self) -> float:
-        return self.tRAS + self.tRP
+def latency_rc_intra_sa(spec: DramSpec = DDR3_1600) -> float:
+    return spec.copy_latency("rc_intrasa")
 
 
-@dataclasses.dataclass(frozen=True)
-class LISATiming:
-    """LISA-specific timings from the paper's SPICE evaluation.
-
-    * ``t_rbm_hop`` — per-hop increment of a LISA-RISC copy.  Table 1:
-      (260.5 - 148.5) / 14 hops = 8 ns/hop exactly.
-    * ``t_rbm_row`` — time for one RBM row-buffer movement used for the
-      bandwidth claim: 8 KB / 500 GB/s = 16.384 ns (includes the paper's
-      conservative 60% margin).
-    * ``risc_base`` — hop-independent part of LISA-RISC: ACT(src, full tRAS)
-      + ACT(dst, amplify+restore tRAS) + PRE(tRP) + SPICE sensing margin.
-      Back-solved: 148.5 - 8 = 140.5;  margin = 140.5 - (35+35+13.75) = 56.75.
-    * ``t_pre_linked`` — LISA-LIP precharge: 13 ns -> 5 ns (2.6x, Sec. 3.3).
-    """
-
-    t_rbm_hop: float = 8.0
-    t_rbm_row: float = 16.384
-    sense_margin: float = 56.75
-    t_pre_baseline: float = 13.0
-    t_pre_linked: float = 5.0
-
-    def risc_base(self, t: DDR3Timing) -> float:
-        return t.tRAS + t.tRAS + t.tRP + self.sense_margin
+def latency_rc_bank(spec: DramSpec = DDR3_1600) -> float:
+    return spec.copy_latency("rc_bank")
 
 
-@dataclasses.dataclass(frozen=True)
-class EnergyModel:
-    """Component energy model (uJ), back-solved from Table 1 anchors.
-
-    * ``e_act_pre`` — one ACT(+share of PRE) row operation.  RC-IntraSA does
-      ACT->ACT->PRE and costs 0.06 uJ  =>  0.03 per row op (2 row ops).
-    * ``e_col_internal`` — one 64 B column transfer over the internal bus.
-      RC-Bank = 4 row ops + 256 col ops = 2.08  =>  (2.08-0.12)/256.
-    * ``e_intersa_extra`` — extra global-bus/driver energy of RowClone
-      inter-subarray serial mode (calibrated so RC-InterSA = 4.33 exactly).
-    * ``e_col_channel`` — extra channel+I/O energy per 64 B transfer for
-      memcpy: 128 lines out + 128 lines back = 256 channel transfers;
-      (6.2 - 4.33) / 256 ~= 14.3 pJ/bit, in line with DDR3 I/O energy.
-    * ``e_risc_base`` / ``e_rbm_hop`` — LISA-RISC energy: 0.09 at 1 hop,
-      +0.08/14 per extra hop (Table 1: 0.09 / 0.12 / 0.17 at 1/7/15 hops).
-    """
-
-    e_act_pre: float = 0.03
-    e_col_internal: float = (2.08 - 0.12) / 256.0
-    e_intersa_extra: float = 4.33 - (0.12 + 512 * (2.08 - 0.12) / 256.0)
-    e_col_channel: float = (6.2 - 4.33) / 256.0
-    e_risc_base: float = 0.09
-    e_rbm_hop: float = 0.08 / 14.0
+def latency_rc_inter_sa(spec: DramSpec = DDR3_1600) -> float:
+    return spec.copy_latency("rc_intersa")
 
 
-DDR3 = DDR3Timing()
-LISA = LISATiming()
-ENERGY = EnergyModel()
-
-# DDR4-2400 x64 channel, for the bandwidth-ratio claim (Sec. 2).
-CHANNEL_BW_GBPS = 19.2
-RBM_BW_GBPS = ROW_BYTES / LISA.t_rbm_row    # bytes/ns == GB/s -> 500.0
+def latency_memcpy(spec: DramSpec = DDR3_1600) -> float:
+    return spec.copy_latency("memcpy")
 
 
-# ---------------------------------------------------------------------------
-# Copy-mechanism latency / energy (8 KB row copy), Table 1.
-# ---------------------------------------------------------------------------
-
-def latency_rc_intra_sa(t: DDR3Timing = DDR3) -> float:
-    """RowClone FPM: ACT(src) tRAS -> ACT(dst) tRAS -> PRE.  = 83.75 ns."""
-    return t.tRAS + t.tRAS + t.tRP
+def latency_lisa_risc(hops: int, spec: DramSpec = DDR3_1600) -> float:
+    return spec.copy_latency("lisa", hops)
 
 
-def latency_rc_bank(t: DDR3Timing = DDR3) -> float:
-    """RowClone PSM across banks: ACT, first-read tCL, 128 pipelined col ops,
-    trailing burst, write recovery, PRE.  = 701.25 ns."""
-    return t.tRCD + t.tCL + LINES_PER_ROW * t.tCCD + t.tBURST + t.tWR + t.tRP
+def energy_rc_intra_sa(spec: DramSpec = DDR3_1600) -> float:
+    return spec.copy_energy("rc_intrasa")
 
 
-def latency_rc_inter_sa(t: DDR3Timing = DDR3) -> float:
-    """RowClone PSM within a bank: ACT(src) tRAS, 128 RD + 128 WR serialized
-    over the internal bus (no read/write overlap within one bank),
-    ACT/restore(dst) tRAS, PRE.  = 1363.75 ns."""
-    return 2 * LINES_PER_ROW * t.tCCD + t.tRAS + t.tRAS + t.tRP
+def energy_rc_bank(spec: DramSpec = DDR3_1600) -> float:
+    return spec.copy_energy("rc_bank")
 
 
-def latency_memcpy(t: DDR3Timing = DDR3) -> float:
-    """memcpy over the channel: read phase + write phase.  The paper's Fig. 2
-    shows memcpy ~= RC-InterSA; our command model gives 1393.75 ns (within
-    2.2% of RC-InterSA), Table 1 leaves the cell blank."""
-    read_phase = t.tRCD + t.tCL + LINES_PER_ROW * t.tCCD + t.tBURST + t.tRTP + t.tRP
-    write_phase = t.tRCD + t.tCWL + LINES_PER_ROW * t.tCCD + t.tBURST + t.tWR + t.tRP
-    return read_phase + write_phase
+def energy_rc_inter_sa(spec: DramSpec = DDR3_1600) -> float:
+    return spec.copy_energy("rc_intersa")
 
 
-def latency_lisa_risc(hops: int, t: DDR3Timing = DDR3, l: LISATiming = LISA) -> float:
-    """LISA-RISC: ACT(src) -> RBM x hops -> ACT(dst) -> PRE.
-    = 140.5 + 8*hops ns  (148.5 / 196.5 / 260.5 at 1 / 7 / 15 hops)."""
-    if hops < 1:
-        raise ValueError("LISA-RISC requires at least one hop (adjacent subarrays)")
-    return l.risc_base(t) + l.t_rbm_hop * hops
+def energy_memcpy(spec: DramSpec = DDR3_1600) -> float:
+    return spec.copy_energy("memcpy")
 
 
-def energy_rc_intra_sa(e: EnergyModel = ENERGY) -> float:
-    return 2 * e.e_act_pre                                    # 0.06
-
-
-def energy_rc_bank(e: EnergyModel = ENERGY) -> float:
-    return 4 * e.e_act_pre + 2 * LINES_PER_ROW * e.e_col_internal   # 2.08
-
-
-def energy_rc_inter_sa(e: EnergyModel = ENERGY) -> float:
-    return (4 * e.e_act_pre + 4 * LINES_PER_ROW * e.e_col_internal
-            + e.e_intersa_extra)                              # 4.33
-
-
-def energy_memcpy(e: EnergyModel = ENERGY) -> float:
-    # 128 lines read over the channel + 128 written back = 256 transfers.
-    return energy_rc_inter_sa(e) + 2 * LINES_PER_ROW * e.e_col_channel   # 6.2
-
-
-def energy_lisa_risc(hops: int, e: EnergyModel = ENERGY) -> float:
-    """0.09 at one hop, + 0.08/14 uJ per extra hop (0.09/0.12/0.17)."""
-    if hops < 1:
-        raise ValueError("LISA-RISC requires at least one hop")
-    return e.e_risc_base + (hops - 1) * e.e_rbm_hop
+def energy_lisa_risc(hops: int, spec: DramSpec = DDR3_1600) -> float:
+    return spec.copy_energy("lisa", hops)
 
 
 def table1() -> Dict[str, Tuple[float, float]]:
-    """Reproduce Table 1: mechanism -> (latency ns, DRAM energy uJ)."""
-    return {
-        "memcpy": (latency_memcpy(), energy_memcpy()),
-        "RC-InterSA": (latency_rc_inter_sa(), energy_rc_inter_sa()),
-        "RC-Bank": (latency_rc_bank(), energy_rc_bank()),
-        "RC-IntraSA": (latency_rc_intra_sa(), energy_rc_intra_sa()),
-        "LISA-RISC-1": (latency_lisa_risc(1), energy_lisa_risc(1)),
-        "LISA-RISC-7": (latency_lisa_risc(7), energy_lisa_risc(7)),
-        "LISA-RISC-15": (latency_lisa_risc(15), energy_lisa_risc(15)),
-    }
+    """Reproduce Table 1 under the default (calibrated) preset."""
+    return DDR3_1600.table1()
 
 
-def precharge_latency(linked: bool, l: LISATiming = LISA) -> float:
+def precharge_latency(linked: bool, spec: DramSpec = DDR3_1600) -> float:
     """LISA-LIP: linked precharge 13 ns -> 5 ns (2.6x)."""
-    return l.t_pre_linked if linked else l.t_pre_baseline
+    return spec.precharge_latency(linked)

@@ -8,16 +8,22 @@ the paper's results hinge on:
   * a Zipf-like hot-row access distribution (drives VILLA hit rate), and
   * a configurable fraction of bulk-copy operations (drives RISC gains).
 
-Benchmarks sweep these knobs across "50 workloads" and assert the paper's
-*orderings* (see DESIGN.md Sec. 5, assumption 5).
+Bank geometry (subarray count, rows per subarray) comes from the
+:class:`~repro.core.dram.spec.DramSpec` passed to :func:`generate`;
+:class:`TraceConfig` holds only the *workload* knobs.  Benchmarks sweep
+these knobs across "50 workloads" and assert the paper's *orderings*
+(see DESIGN.md Sec. 5, assumption 5).
 """
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.dram.spec import DDR3_1600, DramSpec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -25,8 +31,6 @@ class TraceConfig:
     n_requests: int = 8192
     n_cores: int = 4
     n_banks: int = 8
-    n_subarrays: int = 16
-    rows_per_subarray: int = 64
     copy_prob: float = 0.005         # fraction of requests that are bulk copies
     zipf_s: float = 1.4              # hot-row skew
     hot_rows: int = 64               # size of the hot set per bank
@@ -42,10 +46,34 @@ class Trace(NamedTuple):
     dst_row: jax.Array   # (N,) int32 copy destination row id
 
 
-def generate(key: jax.Array, cfg: TraceConfig) -> Trace:
+def generate(key: jax.Array, cfg: TraceConfig,
+             spec: DramSpec = DDR3_1600) -> Trace:
+    return _generate_traced(key, jnp.float32(cfg.copy_prob),
+                            jnp.float32(cfg.zipf_s), cfg, spec)
+
+
+def generate_batch(keys: jax.Array, copy_probs: jax.Array,
+                   zipf_ss: jax.Array, cfg: TraceConfig,
+                   spec: DramSpec = DDR3_1600) -> Trace:
+    """Generate a whole workload sweep in one vmapped call: ``keys`` /
+    ``copy_probs`` / ``zipf_ss`` share a leading workload axis (the two
+    workload knobs are traced data, so one compilation covers the sweep).
+    The result is a stacked :class:`Trace` ready for
+    ``controller.simulate_sweep``."""
+    return jax.vmap(
+        lambda k, p, z: _generate_traced(k, p, z, cfg, spec)
+    )(keys, jnp.asarray(copy_probs, jnp.float32),
+      jnp.asarray(zipf_ss, jnp.float32))
+
+
+@partial(jax.jit, static_argnames=("cfg", "spec"))
+def _generate_traced(key: jax.Array, copy_prob: jax.Array,
+                     zipf_s: jax.Array, cfg: TraceConfig,
+                     spec: DramSpec) -> Trace:
     k1, k2, k3, k4, k5, k6, k7 = jax.random.split(key, 7)
     n = cfg.n_requests
-    n_rows = cfg.n_subarrays * cfg.rows_per_subarray
+    rows_per_sa = spec.rows_per_subarray
+    n_rows = spec.n_rows
 
     gaps = jax.random.exponential(k1, (n,)) * cfg.mean_gap_ns
     t = jnp.cumsum(gaps).astype(jnp.float32)
@@ -56,23 +84,24 @@ def generate(key: jax.Array, cfg: TraceConfig) -> Trace:
     # Zipf over a hot set + uniform tail.  Hot set lives in the *slow*
     # subarrays (sa >= 1); subarray 0 is the fast (VILLA) subarray.
     ranks = jnp.arange(1, cfg.hot_rows + 1, dtype=jnp.float32)
-    p = ranks ** (-cfg.zipf_s)
+    p = ranks ** (-zipf_s)
     p = p / p.sum()
-    hot_pick = jax.random.choice(k4, cfg.hot_rows, (n,), p=p)
-    hot_rows = cfg.rows_per_subarray + hot_pick          # rows in subarray 1+
-    uniform_rows = jax.random.randint(k5, (n,), cfg.rows_per_subarray,
-                                      n_rows, jnp.int32)
+    # inverse-CDF categorical draw (compiles fast under vmap, unlike
+    # jax.random.choice with per-lane probabilities)
+    u = jax.random.uniform(k4, (n,))
+    hot_pick = jnp.searchsorted(jnp.cumsum(p), u).astype(jnp.int32)
+    hot_pick = jnp.minimum(hot_pick, cfg.hot_rows - 1)
+    hot_rows = rows_per_sa + hot_pick                    # rows in subarray 1+
+    uniform_rows = jax.random.randint(k5, (n,), rows_per_sa, n_rows, jnp.int32)
     take_hot = jax.random.bernoulli(k6, 0.8, (n,))
     row = jnp.where(take_hot, hot_rows, uniform_rows).astype(jnp.int32)
 
     kc, kd = jax.random.split(k7)
-    is_copy = jax.random.bernoulli(kc, cfg.copy_prob, (n,))
-    dst_row = jax.random.randint(kd, (n,), cfg.rows_per_subarray, n_rows,
-                                 jnp.int32)
+    is_copy = jax.random.bernoulli(kc, copy_prob, (n,))
+    dst_row = jax.random.randint(kd, (n,), rows_per_sa, n_rows, jnp.int32)
     # ensure copy src/dst land in different subarrays
-    same_sa = (dst_row // cfg.rows_per_subarray) == (row // cfg.rows_per_subarray)
-    dst_row = jnp.where(same_sa, (dst_row + cfg.rows_per_subarray) % n_rows,
-                        dst_row)
-    dst_row = jnp.maximum(dst_row, cfg.rows_per_subarray)
+    same_sa = (dst_row // rows_per_sa) == (row // rows_per_sa)
+    dst_row = jnp.where(same_sa, (dst_row + rows_per_sa) % n_rows, dst_row)
+    dst_row = jnp.maximum(dst_row, rows_per_sa)
     return Trace(t=t, core=core, bank=bank, row=row, is_copy=is_copy,
                  dst_row=dst_row)

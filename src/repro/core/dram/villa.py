@@ -95,3 +95,70 @@ def villa_access(state: VillaState, row_id: jax.Array, cfg: VillaConfig
     new = jax.lax.cond(new.tick >= cfg.epoch_len,
                        lambda s: villa_epoch(s, cfg), lambda s: s, new)
     return new, hit, insert, victim
+
+
+# ---------------------------------------------------------------------------
+# Split form of the policy, for the controller's jitted scan.
+#
+# The counter / hot-marking half of VILLA is *data-independent* of hits and
+# insertions: counters bump on every access, epochs fire every ``epoch_len``
+# accesses, and the hot set is a pure function of the access sequence.  The
+# controller therefore precomputes per-request hotness *vectorized* outside
+# its scan (``hot_for_sequence``) and keeps only the tiny tags/benefit half
+# (``tags_access``) inside — exactly equivalent to running ``villa_access``
+# per request, but without (n_counters,)-sized work per scan step.
+# ---------------------------------------------------------------------------
+
+def tags_access(tags: jax.Array, benefit: jax.Array, row_id: jax.Array,
+                is_hot: jax.Array) -> Tuple[jax.Array, jax.Array,
+                                            jax.Array, jax.Array]:
+    """The tags/benefit half of ``villa_access`` for one access.
+
+    ``is_hot`` is the precomputed hotness of the row's counter slot at this
+    access (see ``hot_for_sequence``).  Returns (tags, benefit, hit, insert).
+    """
+    row_id = jnp.asarray(row_id, jnp.int32)
+    hit_mask = tags == row_id
+    hit = hit_mask.any()
+    benefit = jnp.where(hit_mask, benefit + 1, benefit)
+    insert = is_hot & ~hit
+    victim = jnp.argmin(benefit)
+    tags = jnp.where(insert, tags.at[victim].set(row_id), tags)
+    benefit = jnp.where(insert, benefit.at[victim].set(1), benefit)
+    return tags, benefit, hit, insert
+
+
+def hot_for_sequence(bank: jax.Array, row: jax.Array, n_banks: int,
+                     cfg: VillaConfig) -> jax.Array:
+    """Per-request hotness for a whole access sequence, fully vectorized.
+
+    For request ``i`` touching ``bank[i]``/``row[i]``, replays the
+    counter/epoch half of the per-bank VILLA policy in dense ops:
+    the request's per-bank rank decides its epoch; per-(bank, epoch) counter
+    increments come from one scatter-add; the epoch loop (a short static
+    Python loop) applies saturation, top-k hot marking, and halving.
+    Returns ``is_hot`` of shape ``(n,)`` — ``hot[bank_i's epoch][row_i %
+    n_counters]`` exactly as ``villa_access`` would have read it.
+    """
+    n = bank.shape[0]
+    bank = jnp.asarray(bank, jnp.int32)
+    cidx = jnp.asarray(row, jnp.int32) % cfg.n_counters
+    onehot = (bank[:, None] == jnp.arange(n_banks)[None, :]).astype(jnp.int32)
+    rank = jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - onehot,
+                               bank[:, None], axis=1)[:, 0]     # prior count
+    epoch = rank // cfg.epoch_len
+    max_epochs = n // cfg.epoch_len
+    seg = bank * (max_epochs + 1) + jnp.minimum(epoch, max_epochs)
+    inc = jnp.zeros((n_banks * (max_epochs + 1), cfg.n_counters), jnp.int32)
+    inc = inc.at[seg, cidx].add(1).reshape(n_banks, max_epochs + 1,
+                                           cfg.n_counters)
+    hot_tab = [jnp.zeros((n_banks, cfg.n_counters), bool)]  # before 1st epoch
+    counters = jnp.zeros((n_banks, cfg.n_counters), jnp.int32)
+    for e in range(max_epochs):
+        counters = jnp.minimum(counters + inc[:, e], COUNTER_SATURATION)
+        topk_vals = jax.lax.top_k(counters, cfg.n_hot)[0]
+        threshold = jnp.maximum(topk_vals[:, -1], 1)
+        hot_tab.append(counters >= threshold[:, None])
+        counters = counters // 2
+    hot_tab = jnp.stack(hot_tab, axis=1)    # (banks, max_epochs+1, counters)
+    return hot_tab[bank, jnp.minimum(epoch, max_epochs), cidx]

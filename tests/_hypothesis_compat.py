@@ -1,0 +1,35 @@
+"""Degrade hypothesis property tests to skips when hypothesis is absent.
+
+Import ``given`` / ``settings`` / ``st`` from here instead of ``hypothesis``:
+with hypothesis installed this is a pass-through; without it, ``@given(...)``
+replaces the test with a zero-argument skip stub (so collection never errors
+and plain pytest tests in the same module still run), per the
+``pytest.importorskip``-style degradation the suite promises.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def _skip_decorator(*_args, **_kwargs):
+        def deco(fn):
+            def skipped():
+                pytest.skip("hypothesis not installed")
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+        return deco
+
+    given = settings = _skip_decorator
+
+    class _StrategyStub:
+        """Stands in for ``hypothesis.strategies``: any strategy call
+        returns None (never consumed — the test body is skipped)."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()

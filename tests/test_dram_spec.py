@@ -1,0 +1,169 @@
+"""The `DramSpec` device-model API: preset registry round-trips, Table-1
+golden values, traced-mechanism dispatch, and vmap-over-workloads
+equivalence of the single jitted controller."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.dram import spec as SP
+from repro.core.dram.controller import (MechanismConfig, mechanism_params,
+                                        simulate, simulate_params,
+                                        simulate_sweep, stack_params,
+                                        stack_traces, weighted_speedup)
+from repro.core.dram.spec import DDR3_1600, DDR4_2400
+from repro.core.dram.traces import TraceConfig, generate
+
+# Paper Table 1 golden values under the calibrated default preset.
+GOLDEN = {
+    "LISA-RISC-1": (148.5, 0.09),
+    "LISA-RISC-7": (196.5, 0.12),
+    "LISA-RISC-15": (260.5, 0.17),
+    "RC-InterSA": (1363.75, 4.33),
+}
+
+
+# ---------------------------------------------------------------------------
+# Preset registry.
+# ---------------------------------------------------------------------------
+
+def test_preset_registry_round_trip():
+    for name in SP.preset_names():
+        spec = SP.get_preset(name)
+        assert spec.name == name
+        assert SP.get_preset(spec.name) is spec
+    assert SP.get_preset("DDR3_1600") is DDR3_1600
+    assert SP.get_preset("DDR4_2400") is DDR4_2400
+    assert {"DDR3_1600", "DDR4_2400"} <= set(SP.preset_names())
+
+
+def test_unknown_preset_and_duplicate_registration():
+    with pytest.raises(ValueError, match="unknown DRAM preset"):
+        SP.get_preset("DDR9_9999")
+    with pytest.raises(ValueError, match="already registered"):
+        SP.register_preset(dataclasses.replace(DDR3_1600))
+    # explicit overwrite is allowed and round-trips
+    custom = dataclasses.replace(DDR3_1600, name="TEST_CUSTOM",
+                                 n_subarrays=64)
+    try:
+        assert SP.register_preset(custom) is custom
+        assert SP.get_preset("TEST_CUSTOM").n_subarrays == 64
+    finally:
+        SP._PRESETS.pop("TEST_CUSTOM", None)
+
+
+def test_with_geometry_keeps_timing_calibration():
+    small = DDR3_1600.with_geometry(8, 8, 64)
+    assert (small.n_subarrays, small.rows_per_subarray, small.row_bytes) == \
+        (8, 8, 64)
+    # timing/energy calibration untouched
+    assert small.copy_latency("lisa", 7) == \
+        DDR3_1600.copy_latency("lisa", 7)
+
+
+def test_table1_golden_values_default_preset():
+    got = DDR3_1600.table1()
+    for mech, (lat, ene) in GOLDEN.items():
+        assert got[mech][0] == pytest.approx(lat, abs=1e-9), mech
+        assert round(got[mech][1], 2) == pytest.approx(ene, abs=1e-9), mech
+
+
+def test_presets_differ_but_orderings_hold():
+    for spec in (DDR3_1600, DDR4_2400):
+        assert spec.copy_latency("lisa", 1) < spec.copy_latency("rc_intersa")
+        assert spec.copy_energy("lisa", 1) < spec.copy_energy("rc_intersa")
+    assert DDR4_2400.copy_latency("rc_intersa") != \
+        DDR3_1600.copy_latency("rc_intersa")
+
+
+# ---------------------------------------------------------------------------
+# CopyMechanism registry.
+# ---------------------------------------------------------------------------
+
+def test_mechanism_registry_ids_and_table():
+    names = SP.mechanism_names()
+    assert names == tuple(SP.get_mechanism(n).name for n in names)
+    ids = [SP.mechanism_id(n) for n in names]
+    assert ids == list(range(len(names)))           # dense table row order
+    table = DDR3_1600.mechanism_table()
+    assert table.shape == (len(names), 5)
+    for n in names:
+        m = SP.get_mechanism(n)
+        lat0, lath, e0, eh, chan = table[m.mech_id]
+        for hops in (1, 7, 15):
+            assert lat0 + lath * hops == pytest.approx(
+                m.latency(DDR3_1600, hops), rel=1e-6), (n, hops)
+            assert e0 + eh * hops == pytest.approx(
+                m.energy(DDR3_1600, hops), rel=1e-5), (n, hops)
+        assert bool(chan) == m.occupies_channel
+    assert SP.get_mechanism("memcpy").occupies_channel
+    assert not SP.get_mechanism("lisa").occupies_channel
+
+
+def test_unknown_mechanism_raises_with_choices():
+    with pytest.raises(ValueError, match="unknown copy mechanism"):
+        DDR3_1600.copy_latency("warp_drive")
+
+
+# ---------------------------------------------------------------------------
+# One jitted simulate: traced mechanism config + vmap over workloads.
+# ---------------------------------------------------------------------------
+
+TCFG = TraceConfig(n_requests=1024)
+CFGS = [MechanismConfig("memcpy"), MechanismConfig("rc_intersa"),
+        MechanismConfig("lisa"),
+        MechanismConfig("lisa", use_villa=True, use_lip=True)]
+
+
+def test_single_compilation_serves_all_mechanisms():
+    tr = generate(jax.random.key(0), TCFG)
+    before = simulate_params._cache_size()
+    outs = [simulate(tr, TCFG, c) for c in CFGS]
+    jax.block_until_ready(outs)
+    added = simulate_params._cache_size() - before
+    assert added <= 1, \
+        f"mechanism configs caused {added} compilations (want one)"
+    # and a different *preset* reuses it too (all-traced timing)
+    simulate(tr, TCFG, MechanismConfig("lisa"), DDR4_2400)
+    assert simulate_params._cache_size() - before <= 1
+
+
+def test_vmap_over_workloads_matches_per_config():
+    tcfgs = [TraceConfig(n_requests=1024, copy_prob=cp, zipf_s=z)
+             for cp, z in [(0.002, 1.0), (0.01, 1.4), (0.04, 1.8)]]
+    trs = [generate(jax.random.key(i), c) for i, c in enumerate(tcfgs)]
+    mcfg = MechanismConfig("lisa", use_villa=True)
+    swept = simulate_sweep(stack_traces(trs), TCFG, mcfg)
+    for i, tr in enumerate(trs):
+        one = simulate(tr, TCFG, mcfg)
+        for k in ("core_stall", "energy_uJ", "villa_hit_rate"):
+            np.testing.assert_allclose(np.asarray(swept[k][i]),
+                                       np.asarray(one[k]), rtol=1e-5,
+                                       err_msg=f"workload {i}, {k}")
+
+
+def test_vmap_over_mechanism_params():
+    """The other batching axis: stack MechanismParams and vmap configs."""
+    tr = generate(jax.random.key(3), TCFG)
+    params = stack_params([mechanism_params(c) for c in CFGS])
+    vsim = jax.vmap(lambda p: simulate_params(
+        tr, p, n_banks=TCFG.n_banks, n_cores=TCFG.n_cores,
+        villa_cfg=CFGS[0].villa))
+    batched = vsim(params)
+    for i, c in enumerate(CFGS):
+        one = simulate(tr, TCFG, c)
+        np.testing.assert_allclose(np.asarray(batched["core_stall"][i]),
+                                   np.asarray(one["core_stall"]), rtol=1e-5)
+
+
+def test_spec_threading_changes_system_results():
+    """A different preset must actually reach the simulator's cost model."""
+    tr = generate(jax.random.key(5), TraceConfig(n_requests=2048,
+                                                 copy_prob=0.02))
+    r3 = simulate(tr, TCFG, MechanismConfig("rc_intersa"), DDR3_1600)
+    r4 = simulate(tr, TCFG, MechanismConfig("rc_intersa"), DDR4_2400)
+    assert float(r3["avg_latency_ns"]) != float(r4["avg_latency_ns"])
+    base3 = simulate(tr, TCFG, MechanismConfig("memcpy"), DDR3_1600)
+    ws = float(weighted_speedup(base3["core_stall"], r3["core_stall"]).mean())
+    assert ws > 1.0

@@ -1,15 +1,16 @@
 """Data correctness of the functional DRAM bank (RBM semantics)."""
 import jax
-import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.dram import substrate as S
-from repro.core.dram import timing as T
+from repro.core.dram.spec import DDR3_1600
+
+SPEC = DDR3_1600.with_geometry(8, 8, 64)
 
 
-def _bank(n_sa=8, rows=8, row_bytes=64, seed=0):
-    return S.make_bank(n_sa, rows, row_bytes, jax.random.key(seed))
+def _bank(spec=SPEC, seed=0):
+    return S.make_bank(spec, key=jax.random.key(seed))
 
 
 def test_activate_latches_row():
@@ -32,16 +33,36 @@ def test_rbm_requires_adjacency_and_precharged_dst():
     assert (ok.row_buffer[3] == b.row_buffer[2]).all()
 
 
+def test_rbm_violation_invalidates_destination_buffer():
+    """Regression: a violated RBM must leave ``rb_valid[dst] = False`` even
+    when the destination buffer was previously valid (the docstring's
+    contract — a misfired RBM disturbs the destination sense amps, so the
+    stale buffer must not stay trustworthy)."""
+    b = _bank()
+    b = S.activate(b, 5, 1)                # dst buffer valid via its own ACT
+    b = S.precharge(b, 5)                  # ...then precharged
+    # rb_valid[5] was cleared by precharge; re-latch via a real RBM first:
+    b = S.activate(b, 4, 2)
+    b = S.rbm(b, 4, 5)                     # valid RBM: dst 5 now valid
+    assert bool(b.rb_valid[5])
+    bad = S.rbm(b, 1, 5)                   # not adjacent -> violated
+    assert not bool(bad.rb_valid[5]), \
+        "violated RBM must invalidate the destination buffer"
+    assert (bad.row_buffer[5] == b.row_buffer[5]).all()   # data untouched
+
+
 @pytest.mark.parametrize("src_sa,src_row,dst_sa,dst_row",
                          [(0, 0, 7, 7), (6, 3, 1, 2), (3, 1, 4, 1)])
 def test_lisa_risc_copy_moves_data(src_sa, src_row, dst_sa, dst_row):
     b = _bank()
     want = b.cells[src_sa, src_row]
-    b2, lat, ene = S.lisa_risc_copy(b, src_sa, src_row, dst_sa, dst_row)
+    res = S.lisa_risc_copy(b, src_sa, src_row, dst_sa, dst_row, spec=SPEC)
+    assert isinstance(res, S.CopyResult)
+    b2, lat, ene = res                     # CopyResult unpacks like a tuple
     assert (b2.cells[dst_sa, dst_row] == want).all()
     hops = abs(dst_sa - src_sa)
-    assert lat == pytest.approx(T.latency_lisa_risc(hops))
-    assert ene == pytest.approx(T.energy_lisa_risc(hops))
+    assert lat == pytest.approx(SPEC.copy_latency("lisa", hops))
+    assert ene == pytest.approx(SPEC.copy_energy("lisa", hops))
     # source row unchanged
     assert (b2.cells[src_sa, src_row] == want).all()
 
@@ -49,23 +70,40 @@ def test_lisa_risc_copy_moves_data(src_sa, src_row, dst_sa, dst_row):
 def test_broadcast_latches_all_destinations():
     b = _bank()
     want = b.cells[1, 4]
-    b2, lat, ene = S.lisa_broadcast(b, 1, 4, (0, 3, 6), 2)
+    b2, lat, ene = S.lisa_broadcast(b, 1, 4, (0, 3, 6), 2, spec=SPEC)
     for d in (0, 3, 6):
         assert (b2.cells[d, 2] == want).all()
     # cost: chains to 6 (5 hops fwd) and 0 (1 hop bwd) + 2 extra restores
-    assert lat == pytest.approx(T.latency_lisa_risc(6)
-                                + 2 * (T.DDR3.tRAS + T.DDR3.tRP))
+    t = SPEC.timing
+    assert lat == pytest.approx(SPEC.copy_latency("lisa", 6)
+                                + 2 * (t.tRAS + t.tRP))
     # multicast beats N separate copies (the paper's 1-to-N argument)
-    separate = sum(T.latency_lisa_risc(abs(d - 1)) for d in (0, 3, 6))
+    separate = sum(SPEC.copy_latency("lisa", abs(d - 1)) for d in (0, 3, 6))
     assert lat < separate
 
 
 def test_rowclone_copy_correct_but_slow():
     b = _bank()
     want = b.cells[2, 3]
-    b2, lat, ene = S.rowclone_intersa_copy(b, 2, 3, 6, 1)
+    b2, lat, ene = S.rowclone_intersa_copy(b, 2, 3, 6, 1, spec=SPEC)
     assert (b2.cells[6, 1] == want).all()
-    assert lat == pytest.approx(T.latency_rc_inter_sa())
+    assert lat == pytest.approx(SPEC.copy_latency("rc_intersa"))
+
+
+def test_execute_copy_dispatches_registry_mechanisms():
+    b = _bank()
+    want = b.cells[1, 2]
+    for mech in ("lisa", "rc_intersa", "rc_bank", "memcpy"):
+        res = S.execute_copy(b, mech, 1, 2, 4, 3, spec=SPEC)
+        assert (res.state.cells[4, 3] == want).all(), mech
+        assert res.latency_ns == pytest.approx(
+            SPEC.copy_latency(mech, 3)), mech
+    res = S.execute_copy(b, "rc_intrasa", 1, 2, 1, 5, spec=SPEC)
+    assert (res.state.cells[1, 5] == want).all()
+    with pytest.raises(ValueError, match="unknown copy mechanism"):
+        S.execute_copy(b, "teleport", 1, 2, 4, 3, spec=SPEC)
+    with pytest.raises(ValueError):
+        S.execute_copy(b, "rc_intrasa", 1, 2, 4, 3, spec=SPEC)
 
 
 @settings(max_examples=20, deadline=None)
@@ -77,10 +115,10 @@ def test_copy_property_any_pair(src, dst, row_s, row_d, seed):
         return
     b = _bank(seed=seed)
     want = b.cells[src, row_s]
-    b2, lat, _ = S.lisa_risc_copy(b, src, row_s, dst, row_d)
+    b2, lat, _ = S.lisa_risc_copy(b, src, row_s, dst, row_d, spec=SPEC)
     assert (b2.cells[dst, row_d] == want).all()
     # untouched subarrays keep their cells
     for sa in range(8):
         if sa not in (src, dst):
             assert (b2.cells[sa] == b.cells[sa]).all()
-    assert lat >= T.latency_lisa_risc(1)
+    assert lat >= SPEC.copy_latency("lisa", 1)

@@ -1,9 +1,9 @@
-"""Table 1 / Sec. 2 / Sec. 3.3 of the paper, reproduced exactly."""
-import math
-
+"""Table 1 / Sec. 2 / Sec. 3.3 of the paper, reproduced exactly under the
+default ``DDR3_1600`` preset (and via the back-compat ``timing`` shim)."""
 import pytest
 
 from repro.core.dram import timing as T
+from repro.core.dram.spec import DDR3_1600
 
 # Table 1 (paper): mechanism -> (latency ns, energy uJ).  memcpy latency is
 # blank in the table; Fig. 2 shows it ~= RC-InterSA.
@@ -18,56 +18,68 @@ TABLE1 = {
 
 
 def test_table1_latencies_exact():
-    got = T.table1()
+    got = DDR3_1600.table1()
     for mech, (lat, _) in TABLE1.items():
         assert got[mech][0] == pytest.approx(lat, abs=1e-9), mech
 
 
 def test_table1_energies_match_to_rounding():
-    got = T.table1()
+    got = DDR3_1600.table1()
     for mech, (_, ene) in TABLE1.items():
         assert round(got[mech][1], 2) == pytest.approx(ene, abs=1e-9), mech
 
 
+def test_timing_shim_table1_is_thin_wrapper():
+    """`timing.table1()` stays the canonical wrapper over the default preset."""
+    assert T.table1() == DDR3_1600.table1()
+
+
 def test_memcpy_energy_exact_and_latency_close_to_intersa():
     # energy 6.2 uJ exact; latency within 3% of RC-InterSA (Fig. 2).
-    assert T.energy_memcpy() == pytest.approx(6.2, abs=1e-9)
-    rel = abs(T.latency_memcpy() - T.latency_rc_inter_sa()) / T.latency_rc_inter_sa()
+    assert DDR3_1600.copy_energy("memcpy") == pytest.approx(6.2, abs=1e-9)
+    rc = DDR3_1600.copy_latency("rc_intersa")
+    rel = abs(DDR3_1600.copy_latency("memcpy") - rc) / rc
     assert rel < 0.03
 
 
 def test_lisa_vs_rowclone_headline_numbers():
     # paper: 9x latency and 48x energy reduction vs RC-InterSA (1-hop RISC
     # is the headline; hop-7 keeps >6x latency)
-    assert T.latency_rc_inter_sa() / T.latency_lisa_risc(1) > 9.0
-    assert T.energy_rc_inter_sa() / T.energy_lisa_risc(1) == pytest.approx(
-        48.1, rel=0.01)
+    s = DDR3_1600
+    assert s.copy_latency("rc_intersa") / s.copy_latency("lisa", 1) > 9.0
+    assert s.copy_energy("rc_intersa") / s.copy_energy("lisa", 1) == \
+        pytest.approx(48.1, rel=0.01)
     # 69x energy vs memcpy (Sec. 5.1)
-    assert T.energy_memcpy() / T.energy_lisa_risc(1) == pytest.approx(
-        68.9, rel=0.01)
+    assert s.copy_energy("memcpy") / s.copy_energy("lisa", 1) == \
+        pytest.approx(68.9, rel=0.01)
 
 
 def test_rbm_bandwidth_claim():
     # 500 GB/s vs 19.2 GB/s channel = 26x (Sec. 2)
-    assert T.RBM_BW_GBPS == pytest.approx(500.0, rel=1e-3)
-    assert T.RBM_BW_GBPS / T.CHANNEL_BW_GBPS == pytest.approx(26.04, rel=0.01)
+    assert DDR3_1600.rbm_bw_gbps == pytest.approx(500.0, rel=1e-3)
+    assert DDR3_1600.rbm_bw_gbps / DDR3_1600.channel_bw_gbps == \
+        pytest.approx(26.04, rel=0.01)
 
 
 def test_lisa_risc_linear_in_hops():
-    lats = [T.latency_lisa_risc(h) for h in range(1, 16)]
+    lats = [DDR3_1600.copy_latency("lisa", h) for h in range(1, 16)]
     diffs = {round(b - a, 6) for a, b in zip(lats, lats[1:])}
     assert diffs == {8.0}
 
 
 def test_lip_precharge():
     # 13 ns -> 5 ns, 2.6x (Sec. 3.3)
-    assert T.precharge_latency(False) == 13.0
-    assert T.precharge_latency(True) == 5.0
-    assert T.precharge_latency(False) / T.precharge_latency(True) == 2.6
+    assert DDR3_1600.precharge_latency(False) == 13.0
+    assert DDR3_1600.precharge_latency(True) == 5.0
+    assert (DDR3_1600.precharge_latency(False)
+            / DDR3_1600.precharge_latency(True)) == 2.6
 
 
 def test_invalid_hops_raise():
     with pytest.raises(ValueError):
-        T.latency_lisa_risc(0)
+        DDR3_1600.copy_latency("lisa", 0)
     with pytest.raises(ValueError):
-        T.energy_lisa_risc(0)
+        DDR3_1600.copy_energy("lisa", 0)
+    # the shim keeps the same contract
+    with pytest.raises(ValueError):
+        T.latency_lisa_risc(0)

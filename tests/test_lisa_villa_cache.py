@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.dram.villa import VillaConfig
 from repro.core.lisa import villa_cache as VC
@@ -73,3 +73,7 @@ def test_migration_decision():
                                 fast_gain_us=1000)
     assert not migration_worthwhile(nbytes, hops=8, expected_hits=1,
                                     fast_gain_us=1.0)
+    # zero hops: data already local, the move is free
+    assert hop_chain_us(0, nbytes) == 0.0
+    assert migration_worthwhile(nbytes, hops=0, expected_hits=1,
+                                fast_gain_us=1e-6)
