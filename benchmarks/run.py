@@ -180,6 +180,16 @@ def bench_kernels():
     ok = bool((ops.villa_gather(pages, table) == pages[table]).all())
     row("kernel_villa_gather_interpret", us_g, f"ok={ok}")
 
+    upd = jax.random.normal(jax.random.key(3), (16, 8, 128))
+    # non-donating non-jit entry so the timed region is the scatter alone
+    # (ops.villa_scatter donates its pages arg)
+    from repro.kernels.rbm_copy import villa_scatter as scatter_nodonate
+    scat = jax.jit(scatter_nodonate, static_argnames=("interpret",))
+    us_s = _time(lambda: jax.block_until_ready(scat(pages, table, upd)))
+    ok = bool((scat(pages, table, upd)
+               == ops.villa_scatter_ref(pages, table, upd)).all())
+    row("kernel_villa_scatter_interpret", us_s, f"ok={ok}")
+
 
 RING_BENCH = r"""
 import time, statistics, jax, jax.numpy as jnp
@@ -251,12 +261,86 @@ def bench_train_throughput():
         f"tokens_per_s={toks/dt:.0f};loss={float(m['loss']):.3f}")
 
 
-def bench_serve_throughput():
-    from repro.launch.serve import main as serve_main
-    out = serve_main(["--arch", "tinyllama-1.1b", "--reduced",
-                      "--requests", "6", "--resumes", "12"])
-    row("serve_throughput_reduced_cpu", 1e6 / max(out["tokens_per_s"], 1e-9),
-        f"tokens_per_s={out['tokens_per_s']};villa_hit_rate={out['villa_hit_rate']}")
+def bench_serve_throughput(out_path="BENCH_serve.json"):
+    """Serving hot path A/B: one-sync batched decode vs the pre-PR grouped
+    path, plus paged suspend/resume bandwidth.  Writes ``BENCH_serve.json``.
+
+    Prompt lengths are staggered so slot positions stay ragged — the
+    continuous-batching steady state, where the grouped path degrades to one
+    dispatch per distinct position plus one sync per slot."""
+    from repro.configs import get_reduced
+    from repro.models import lm as LM
+    from repro.serve.engine import Engine, Request
+
+    cfg = get_reduced("tinyllama-1.1b")
+    params = LM.init_lm(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, ln).astype(np.int32)
+               for ln in (6, 9, 12, 15)]
+    n_steps = 48
+
+    def run(step_name):
+        eng = Engine(cfg, params, slots=4, max_len=96, n_sessions=16)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=p, max_new=10**9))
+        step = getattr(eng, step_name)
+        step()                                   # warm the jit caches
+        t0 = time.perf_counter()
+        for _ in range(n_steps):
+            step()
+        jax.block_until_ready(eng.cache)
+        dt = time.perf_counter() - t0
+        return eng, n_steps * len(prompts) / dt, dt
+
+    eng_new, tps_new, dt_new = run("step")
+    eng_old, tps_old, dt_old = run("step_unbatched")
+    speedup = tps_new / tps_old
+
+    # suspend/resume bandwidth through the paged VILLA store (Pallas
+    # gather/scatter path); bytes are true dtype bytes, both directions.
+    eng = Engine(cfg, params, slots=4, max_len=96, n_sessions=16)
+    eng.submit(Request(uid=0, prompt=prompts[0], max_new=2))
+    while eng.active:
+        eng.step()
+    slot = eng.resume(0, extra_new=2)            # warm suspend/resume jits
+    eng.suspend(slot)
+    n_moves = 24
+    t0 = time.perf_counter()
+    for _ in range(n_moves):
+        eng.suspend(eng.resume(0, extra_new=2))
+    jax.block_until_ready(eng.sessions.slow)
+    dt_mv = time.perf_counter() - t0
+    gbps = 2 * n_moves * eng.snapshot_bytes / dt_mv / 1e9
+
+    bench = {
+        "decode_tokens_per_s": round(tps_new, 1),
+        "legacy_tokens_per_s": round(tps_old, 1),
+        "decode_speedup": round(speedup, 2),
+        "decode_dispatches_per_step": eng_new.stats["decode_dispatches"]
+        / (n_steps + 1),
+        "legacy_dispatches_per_step": eng_old.stats["decode_dispatches"]
+        / (n_steps + 1),
+        "suspend_resume_gbps": round(gbps, 4),
+        "snapshot_bytes": eng.snapshot_bytes,
+        # decode/prefill from the throughput engine, suspend/resume from the
+        # bandwidth engine (the one that exercised those paths)
+        "compile_counts": {**eng_new.compile_counts(),
+                           "suspend": eng.compile_counts()["suspend"],
+                           "resume": eng.compile_counts()["resume"]},
+        "config": {"arch": "tinyllama-1.1b-reduced", "slots": 4,
+                   "max_len": 96, "steps": n_steps,
+                   "prompt_lens": [len(p) for p in prompts]},
+    }
+    with open(out_path, "w") as f:
+        json.dump(bench, f, indent=2)
+    row("serve_decode_one_sync", 1e6 / max(tps_new, 1e-9),
+        f"tokens_per_s={tps_new:.1f};speedup_vs_grouped={speedup:.2f}x")
+    row("serve_decode_grouped_legacy", 1e6 / max(tps_old, 1e-9),
+        f"tokens_per_s={tps_old:.1f}")
+    row("serve_suspend_resume_paged", dt_mv / (2 * n_moves) * 1e6,
+        f"GB/s={gbps:.3f};snapshot_bytes={eng.snapshot_bytes}")
+    row("serve_decode_compile_count", 0.0,
+        f"{bench['compile_counts']['decode']}")
 
 
 def bench_roofline_summary():
@@ -284,15 +368,28 @@ def bench_roofline_summary():
     row("roofline_worst_cell", 0.0, f"{worst[0]}={worst[1]:.4f}")
 
 
-def main() -> None:
+BENCHES = {
+    "table1": bench_table1,
+    "fig34": bench_fig3_fig4,
+    "kernels": bench_kernels,
+    "ring": bench_ring_collectives,
+    "train": bench_train_throughput,
+    "serve": bench_serve_throughput,
+    "roofline": bench_roofline_summary,
+}
+
+
+def main(argv=None) -> None:
+    """Run all benches, or a subset: ``python benchmarks/run.py serve train``."""
+    sel = set(argv if argv is not None else sys.argv[1:])
+    unknown = sel - set(BENCHES)
+    if unknown:
+        raise SystemExit(f"unknown benches {sorted(unknown)}; "
+                         f"choose from {sorted(BENCHES)}")
     print("name,us_per_call,derived")
-    bench_table1()
-    bench_fig3_fig4()
-    bench_kernels()
-    bench_ring_collectives()
-    bench_train_throughput()
-    bench_serve_throughput()
-    bench_roofline_summary()
+    for name, fn in BENCHES.items():
+        if not sel or name in sel:
+            fn()
 
 
 if __name__ == "__main__":

@@ -11,6 +11,13 @@ The *policy* (counters / epochs / top-16 hot marking / benefit-based
 replacement) is literally ``repro.core.dram.villa`` — the same code drives the
 DRAM reproduction and the TPU runtime.  That reuse is the "LISA as substrate"
 claim made concrete.
+
+Items may be flat vectors or *paged*: a store whose items have shape
+(pages, P, d) — e.g. the serving engine's KV-snapshot pages
+(``repro.serve.paged_store``) — moves data through the Pallas RBM kernels
+(``villa_gather`` / ``villa_scatter``, scalar-prefetched page tables, LIP
+double buffering) instead of dense indexing, so tier movement is the wide
+in-DRAM transfer of the paper rather than a narrow-channel memcpy.
 """
 from __future__ import annotations
 
@@ -20,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dram.villa import VillaConfig, VillaState, villa_access, villa_init
+from repro.kernels.rbm_copy import villa_gather, villa_scatter
 
 
 class TieredStore(NamedTuple):
@@ -28,6 +36,29 @@ class TieredStore(NamedTuple):
     slow: jax.Array      # (n_items, *item_shape) — bulk tier
     hits: jax.Array      # () int32
     accesses: jax.Array  # () int32
+
+
+def _paged(arr: jax.Array) -> bool:
+    """Items of shape (pages, P, d) route through the RBM page kernels."""
+    return arr.ndim == 4
+
+
+def _read_item(arr: jax.Array, item_id: jax.Array) -> jax.Array:
+    if _paged(arr):
+        n, spp, P, d = arr.shape
+        table = item_id * spp + jnp.arange(spp, dtype=jnp.int32)
+        return villa_gather(arr.reshape(n * spp, P, d), table)
+    return arr[item_id]
+
+
+def _write_item(arr: jax.Array, item_id: jax.Array, data: jax.Array
+                ) -> jax.Array:
+    if _paged(arr):
+        n, spp, P, d = arr.shape
+        table = item_id * spp + jnp.arange(spp, dtype=jnp.int32)
+        return villa_scatter(arr.reshape(n * spp, P, d), table,
+                             data).reshape(arr.shape)
+    return arr.at[item_id].set(data)
 
 
 def make_store(slow: jax.Array, cfg: VillaConfig) -> TieredStore:
@@ -52,10 +83,11 @@ def access(store: TieredStore, item_id: jax.Array, cfg: VillaConfig
     """
     item_id = jnp.asarray(item_id, jnp.int32)
     policy, hit, insert, victim = villa_access(store.policy, item_id, cfg)
-    slow_data = store.slow[item_id]
-    fast = jnp.where(insert, store.fast.at[victim].set(slow_data), store.fast)
+    slow_data = _read_item(store.slow, item_id)
+    fast = jnp.where(insert, _write_item(store.fast, victim, slow_data),
+                     store.fast)
     slot = jnp.argmax(policy.tags == item_id)          # valid for hit & insert
-    data = jnp.where(hit, fast[slot], slow_data)
+    data = jnp.where(hit, _read_item(fast, slot), slow_data)
     return (TieredStore(policy=policy, fast=fast, slow=store.slow,
                         hits=store.hits + hit.astype(jnp.int32),
                         accesses=store.accesses + 1),
@@ -66,11 +98,45 @@ def write(store: TieredStore, item_id: jax.Array, data: jax.Array
           ) -> TieredStore:
     """Write-through: update the slow tier, and the fast slot if resident."""
     item_id = jnp.asarray(item_id, jnp.int32)
-    slow = store.slow.at[item_id].set(data)
+    slow = _write_item(store.slow, item_id, data)
     resident = store.policy.tags == item_id
     slot = jnp.argmax(resident)
-    fast = jnp.where(resident.any(), store.fast.at[slot].set(data), store.fast)
+    fast = jnp.where(resident.any(), _write_item(store.fast, slot, data),
+                     store.fast)
     return store._replace(slow=slow, fast=fast)
+
+
+def access_many(store: TieredStore, item_ids: jax.Array, cfg: VillaConfig
+                ) -> Tuple[TieredStore, jax.Array, jax.Array]:
+    """Batched :func:`access`: one jitted dispatch serves a whole wave of
+    reads (e.g. a burst of session resumes).  Policy updates apply
+    sequentially in ``item_ids`` order — exactly equivalent to a Python loop
+    of ``access`` calls, without the per-item dispatch/sync.
+
+    Returns (store', data (k, *item_shape), hits (k,)).
+    """
+    item_ids = jnp.asarray(item_ids, jnp.int32)
+
+    def body(st, i):
+        st, data, hit = access(st, i, cfg)
+        return st, (data, hit)
+
+    store, (data, hits) = jax.lax.scan(body, store, item_ids)
+    return store, data, hits
+
+
+def write_many(store: TieredStore, item_ids: jax.Array, data: jax.Array
+               ) -> TieredStore:
+    """Batched :func:`write`: one dispatch for a wave of write-throughs.
+    ``data``: (k, *item_shape), written in order (later duplicates win)."""
+    item_ids = jnp.asarray(item_ids, jnp.int32)
+
+    def body(st, xs):
+        i, d = xs
+        return write(st, i, d), None
+
+    store, _ = jax.lax.scan(body, store, (item_ids, data))
+    return store
 
 
 def hit_rate(store: TieredStore) -> jax.Array:

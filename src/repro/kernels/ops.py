@@ -13,7 +13,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
-from repro.kernels.rbm_copy import rbm_copy as _copy, villa_gather as _gather
+from repro.kernels.rbm_copy import (rbm_copy as _copy, villa_gather as _gather,
+                                    villa_scatter as _scatter)
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
@@ -56,8 +57,17 @@ def villa_gather(pages, table, *, interpret=None):
     return _gather(pages, table, interpret=interpret)
 
 
+@partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
+def villa_scatter(pages, table, updates, *, interpret=None):
+    """NOTE: ``pages`` is DONATED (it aliases the output, the whole point of
+    the in-place row-buffer write) — on backends that honor donation the
+    caller must not reuse it afterwards; pass ``pages + 0`` to keep a copy."""
+    return _scatter(pages, table, updates, interpret=interpret)
+
+
 # Oracles re-exported for benchmarks/tests.
 flash_attention_ref = jax.jit(ref.flash_attention_ref,
                               static_argnames=("causal", "window"))
 rbm_copy_ref = jax.jit(ref.rbm_copy_ref)
 villa_gather_ref = jax.jit(ref.villa_gather_ref)
+villa_scatter_ref = jax.jit(ref.villa_scatter_ref)

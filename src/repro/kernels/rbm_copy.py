@@ -82,3 +82,41 @@ def villa_gather(pages: jax.Array, table: jax.Array, *,
         interpret=interpret,
     )(table.astype(jnp.int32), pages)
     return out
+
+
+def _scatter_kernel(table_ref, pages_ref, upd_ref, out_ref):
+    # out block j is routed to pages[table[j]] by the scalar-prefetched
+    # table; the body is a pure VMEM store of the staged update tile.
+    out_ref[...] = upd_ref[...]
+
+
+def villa_scatter(pages: jax.Array, table: jax.Array, updates: jax.Array, *,
+                  interpret: Optional[bool] = None) -> jax.Array:
+    """Scatter whole pages by a page table: out = pages; out[table[j]] = updates[j].
+
+    pages: (N, P, d), updates: (n, P, d) — the VILLA fast-tier *write* path,
+    dual of :func:`villa_gather`.  The grid runs over updates only: page j+1's
+    DMA is in flight while page j stores (LIP double buffering, DESIGN.md
+    Sec. 5.4), and untouched pages never move — ``pages`` is aliased into the
+    output (the donated row buffer), so cost is O(touched pages), not O(N).
+    Duplicate table entries resolve in grid order (last write wins).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    from jax.experimental.pallas import tpu as pltpu
+    N, P, d = pages.shape
+    n_upd = updates.shape[0]
+
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n_upd,),
+            in_specs=[pl.BlockSpec((1, P, d), lambda j, table: (0, 0, 0)),
+                      pl.BlockSpec((1, P, d), lambda j, table: (j, 0, 0))],
+            out_specs=pl.BlockSpec((1, P, d), lambda j, table: (table[j], 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((N, P, d), pages.dtype),
+        input_output_aliases={1: 0},    # pages buffer IS the output
+        interpret=interpret,
+    )(table.astype(jnp.int32), pages, updates)

@@ -34,3 +34,9 @@ def rbm_copy_ref(x: jax.Array) -> jax.Array:
 def villa_gather_ref(pages: jax.Array, table: jax.Array) -> jax.Array:
     """Tiered-cache page gather oracle.  pages: (N, P, d), table: (n,)."""
     return jnp.take(pages, table, axis=0)
+
+
+def villa_scatter_ref(pages: jax.Array, table: jax.Array,
+                      updates: jax.Array) -> jax.Array:
+    """Tiered-cache page scatter oracle: pages with updates written by table."""
+    return pages.at[table].set(updates)

@@ -48,17 +48,27 @@ def main(argv=None) -> dict:
             eng.submit(pending.pop(0))
         eng.step()
     # phase 2: resume sessions with a skewed (hot) distribution — the
-    # VILLA policy should promote the frequently-resumed sessions.
+    # VILLA policy should promote the frequently-resumed sessions.  Resumes
+    # drain in waves: every wave of distinct uids is ONE batched
+    # tiered-store dispatch (engine.resume_many / villa_cache.access_many).
     hot = max(args.requests // 4, 1)
-    for i in range(args.resumes):
-        uid = int(rng.integers(0, hot)) if rng.random() < 0.8 \
-            else int(rng.integers(0, args.requests))
-        eng.resume(uid, extra_new=4)
+    left = args.resumes
+    while left > 0:
+        wave = []
+        wave_max = min(len(eng.free_slots()), left, args.requests)
+        while len(wave) < wave_max:
+            uid = int(rng.integers(0, hot)) if rng.random() < 0.8 \
+                else int(rng.integers(0, args.requests))
+            if uid not in wave:
+                wave.append(uid)
+        eng.resume_many(wave, extra_new=4)
+        left -= len(wave)
         while eng.active:
             eng.step()
     dt = time.time() - t0
     out = {**eng.stats, "villa_hit_rate": round(eng.hit_rate(), 3),
            "tokens_per_s": round(eng.stats["decoded_tokens"] / dt, 1),
+           "decode_compile_count": eng.compile_counts()["decode"],
            "seconds": round(dt, 1)}
     print(json.dumps(out))
     return out

@@ -15,6 +15,21 @@ from repro.models.sharding import constrain
 NEG_INF = -1e30
 
 
+def _cache_write(buf: jax.Array, val: jax.Array, idx) -> jax.Array:
+    """Write a one-token decode update into a cache buffer.
+
+    ``idx`` scalar: uniform batch position (shared slot, legacy path).
+    ``idx`` vector (B,): per-slot ragged positions — each batch row writes its
+    own slot (continuous batching, one dispatch for the whole ragged batch).
+    ``val``: (B, 1, ...) matching ``buf``: (B, T, ...).
+    """
+    val = val.astype(buf.dtype)
+    if jnp.ndim(idx) == 1:
+        return buf.at[jnp.arange(buf.shape[0]), idx].set(val[:, 0])
+    return jax.lax.dynamic_update_slice(buf, val,
+                                        (0, idx) + (0,) * (buf.ndim - 2))
+
+
 # ---------------------------------------------------------------------------
 # Chunked online-softmax attention core (flash-style, pure jnp).
 # ---------------------------------------------------------------------------
@@ -186,20 +201,15 @@ def gqa_block(params: Dict, x: jax.Array, positions: jax.Array, *,
                           ).astype(jnp.int8)
             vq = jnp.clip(jnp.round(v / v_s[..., None]), -127, 127
                           ).astype(jnp.int8)
-            ck = jax.lax.dynamic_update_slice(ck, kq, (0, idx, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cv, vq, (0, idx, 0, 0))
-            ks_buf = jax.lax.dynamic_update_slice(
-                ks_buf, k_s.astype(ks_buf.dtype), (0, idx, 0))
-            vs_buf = jax.lax.dynamic_update_slice(
-                vs_buf, v_s.astype(vs_buf.dtype), (0, idx, 0))
+            ck = _cache_write(ck, kq, idx)
+            cv = _cache_write(cv, vq, idx)
+            ks_buf = _cache_write(ks_buf, k_s, idx)
+            vs_buf = _cache_write(vs_buf, v_s, idx)
             new_scales = (ks_buf, vs_buf)
         else:
-            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
-                                              (0, idx, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
-                                              (0, idx, 0, 0))
-        cpos = jax.lax.dynamic_update_slice(
-            cpos, jnp.broadcast_to(tok_pos, (B, S)), (0, idx))
+            ck = _cache_write(ck, k, idx)
+            cv = _cache_write(cv, v, idx)
+        cpos = _cache_write(cpos, jnp.broadcast_to(tok_pos, (B, S)), idx)
         out = chunked_attention(
             q, ck, cv, tok_pos, cpos, causal=True, window=window, block=block,
             k_scale=new_scales[0] if new_scales else None,
@@ -288,20 +298,15 @@ def mla_block(params: Dict, x: jax.Array, positions: jax.Array, *,
                            ).astype(jnp.int8)
             r_q = jnp.clip(jnp.round(k_rope / r_s[..., None]), -127, 127
                            ).astype(jnp.int8)
-            cc = jax.lax.dynamic_update_slice(cc, c_q, (0, idx, 0))
-            cr = jax.lax.dynamic_update_slice(cr, r_q, (0, idx, 0))
-            cs_buf = jax.lax.dynamic_update_slice(
-                cs_buf, c_s.astype(cs_buf.dtype), (0, idx))
-            rs_buf = jax.lax.dynamic_update_slice(
-                rs_buf, r_s.astype(rs_buf.dtype), (0, idx))
+            cc = _cache_write(cc, c_q, idx)
+            cr = _cache_write(cr, r_q, idx)
+            cs_buf = _cache_write(cs_buf, c_s, idx)
+            rs_buf = _cache_write(rs_buf, r_s, idx)
             new_scales = (cs_buf, rs_buf)
         else:
-            cc = jax.lax.dynamic_update_slice(cc, c_kv.astype(cc.dtype),
-                                              (0, idx, 0))
-            cr = jax.lax.dynamic_update_slice(cr, k_rope.astype(cr.dtype),
-                                              (0, idx, 0))
-        cpos = jax.lax.dynamic_update_slice(
-            cpos, jnp.broadcast_to(positions, (B, S)), (0, idx))
+            cc = _cache_write(cc, c_kv, idx)
+            cr = _cache_write(cr, k_rope, idx)
+        cpos = _cache_write(cpos, jnp.broadcast_to(positions, (B, S)), idx)
         # Absorbed attention over the compressed cache — the fused
         # MLA-decode kernel on real TPUs (dequant inside the region).
         with jax.named_scope("pallas_kernel_region"):

@@ -424,8 +424,8 @@ def decode_step(cfg: ModelConfig, params: Dict, cache: Dict,
                 tokens: jax.Array, pos: jax.Array,
                 moe_groups: int = 0) -> Tuple[jax.Array, Dict]:
     """One decode step.  tokens: (B, 1); pos: scalar int32 (uniform batch
-    position — continuous-batching ragged positions are handled a level up,
-    see repro/serve).  Returns (logits (B,1,V), new_cache)."""
+    position; ragged continuous batching uses :func:`decode_step_batched`).
+    Returns (logits (B,1,V), new_cache)."""
     B, Sq = tokens.shape
     positions = jnp.broadcast_to(
         jnp.asarray(pos, jnp.int32)[None, None], (B, Sq))
@@ -445,10 +445,52 @@ def decode_step(cfg: ModelConfig, params: Dict, cache: Dict,
     return logits, new_cache
 
 
+def decode_step_batched(cfg: ModelConfig, params: Dict, cache: Dict,
+                        tokens: jax.Array, pos: jax.Array, active: jax.Array,
+                        moe_groups: int = 0) -> Tuple[jax.Array, Dict]:
+    """One continuous-batching decode step: ONE dispatch for a ragged batch.
+
+    tokens: (B,) int32 — last emitted token per slot; pos: (B,) int32 —
+    per-slot positions (need not be uniform: each row reads/writes its own
+    cache slot); active: (B,) bool — slots currently serving a request.
+    Greedy sampling runs in-graph, so the only device→host traffic per step
+    is the (B,) next-token vector.  Returns (next_tokens, new_cache);
+    next_tokens is -1 for inactive slots, whose cache rows are left bit-exact
+    (a suspended slot cannot be corrupted by a stale in-flight row).
+    """
+    B = tokens.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = pos[:, None]                                 # (B, 1)
+    if cfg.mrope:
+        positions = jnp.broadcast_to(positions[None], (3, B, 1))
+    x = embed(params["embed"], tokens[:, None]) * math.sqrt(cfg.d_model)
+
+    new_cache: Dict[str, Any] = {}
+    for i, (reps, group) in enumerate(stages_of(cfg)):
+        x, _, nci = _run_stage(cfg, reps, group, params[f"stage{i}"], x,
+                               positions, "decode", cache[f"stage{i}"],
+                               pos, None, moe_groups)
+        new_cache[f"stage{i}"] = nci
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"] if cfg.tie_embeddings else params["head"],
+                     x, tied=cfg.tie_embeddings)
+    nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+    nxt = jnp.where(active, nxt, -1)
+    # Cache leaves are (reps, batch, ...): inactive rows keep their old bits.
+    keep = lambda o, n: jnp.where(
+        active.reshape((1, B) + (1,) * (n.ndim - 2)), n, o)
+    new_cache = jax.tree.map(keep, cache, new_cache)
+    return nxt, new_cache
+
+
 def prefill(cfg: ModelConfig, params: Dict, tokens: jax.Array,
             cache: Dict, enc_embeds: Optional[jax.Array] = None,
-            moe_groups: int = 0) -> Tuple[jax.Array, Dict]:
-    logits, _, new_cache = forward(cfg, params, tokens, cache=cache,
-                                   enc_embeds=enc_embeds, mode="prefill",
-                                   moe_groups=moe_groups)
+            moe_groups: int = 0,
+            positions: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict]:
+    """Prefill the cache.  ``positions`` defaults to arange; bucketed serving
+    passes right-padded tokens with sentinel (2**30) positions for the pads,
+    which keeps them causally invisible forever (see serve/engine)."""
+    logits, _, new_cache = forward(cfg, params, tokens, positions=positions,
+                                   cache=cache, enc_embeds=enc_embeds,
+                                   mode="prefill", moe_groups=moe_groups)
     return logits, new_cache

@@ -1,14 +1,25 @@
 """Continuous-batching decode engine with LISA-VILLA session caching.
 
-Slots hold active requests (one batched KV cache across slots); finished or
-paused sessions are *suspended* into a tiered store driven by the paper's
-exact VILLA policy — hot sessions (frequent resumes: chat turns, shared
-prefixes) live in the fast tier, cold ones in the bulk tier.  Suspension /
-resumption moves whole KV snapshots: exactly the bulk data movement LISA
-accelerates (on TPU the move is `kernels/rbm_copy`; on the mesh it is a
-`core.lisa.rbm.lisa_copy` hop chain between replicas).
+The serving data path is device-resident (the serving-layer analogue of the
+paper's "move data over wide internal paths, not the narrow channel"):
 
-The movement itself is also *accounted*: the engine takes a
+  * ``step`` — ONE jitted dispatch and ONE device→host transfer per decode
+    step, regardless of how ragged the slot positions are: per-slot positions
+    and the active mask are traced data (``models/lm.decode_step_batched``),
+    greedy sampling runs in-graph, and the KV cache is donated so XLA updates
+    it in place instead of copying it every token.
+  * suspend / resume — KV snapshots live as dtype-preserving uint8 *pages*
+    (``serve/paged_store``) in a VILLA tiered store; movement runs through the
+    Pallas RBM kernels (``villa_gather`` / ``villa_scatter``, scalar-prefetched
+    page tables, LIP double buffering).  Hot sessions (frequent resumes: chat
+    turns, shared prefixes) are promoted to the fast tier by the paper's exact
+    policy.  ``resume_many`` drains a whole wave of resumes in one dispatch
+    (``villa_cache.access_many``).
+  * prefill — lengths are bucketed (next power of two) where the architecture
+    permits, bounding compilation count; pads carry sentinel positions so
+    they stay causally invisible forever.
+
+The movement is also *accounted*: the engine takes a
 :class:`~repro.core.dram.spec.DramSpec` and, per suspend/resume, charges the
 modeled cost of moving the KV snapshot under the ``lisa`` vs ``memcpy``
 mechanisms from the registry — the serving-level view of Table 1's gap.
@@ -19,8 +30,9 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from functools import partial
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +43,28 @@ from repro.core.dram.spec import DDR3_1600, DramSpec
 from repro.core.dram.villa import VillaConfig
 from repro.core.lisa import villa_cache as VC
 from repro.models import lm
+from repro.serve import paged_store as PS
+
+POS_SENTINEL = 2**30     # matches the cache init sentinel in models/lm.py
+
+
+def _quiet(fn, *args):
+    """Run one donated-buffer dispatch without the CPU backend's 'donated
+    buffers were not usable' warning (CPU XLA cannot honor donation; the
+    hint is still correct on TPU).  Scoped per call so other code keeps the
+    diagnostic for its own donation mistakes."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        return fn(*args)
+
+
+class EngineFull(RuntimeError):
+    """No free slot: the caller should drain a slot (or queue) and retry."""
+
+
+class UnknownSession(KeyError):
+    """resume() of a uid that was never suspended (or has been evicted)."""
 
 
 @dataclasses.dataclass
@@ -51,86 +85,167 @@ class Engine:
         self.spec = spec
         self.slots = slots
         self.max_len = max_len
+        self.n_sessions = n_sessions
         self.active: Dict[int, Request] = {}        # slot -> request
         self.pos = np.zeros(slots, np.int32)
 
         self.cache = lm.init_cache(cfg, slots, max_len=max_len)
-        self._decode = jax.jit(partial(lm.decode_step, cfg))
-        self._prefill1 = jax.jit(partial(self._prefill_one))
+        # ONE jitted decode for the whole ragged batch; the cache buffer is
+        # donated — XLA writes the new KV in place instead of copying it.
+        self._decode = jax.jit(partial(lm.decode_step_batched, cfg),
+                               donate_argnums=(1,))
+        self._decode_legacy = None      # built on first step_unbatched()
 
-        # session store: suspended KV snapshots, VILLA-tiered
-        flat, self._cache_def = jax.tree_util.tree_flatten(
-            self._slot_slice(self.cache, 0))
-        self._leaf_shapes = [l.shape for l in flat]
-        self._leaf_dtypes = [l.dtype for l in flat]
-        sizes = [int(np.prod(s)) for s in self._leaf_shapes]
-        self._leaf_sizes = sizes
+        # Prefill-length bucketing is sound when every layer's cache slot for
+        # token t is position-addressed (full attention / MLA): right-padded
+        # tokens carry sentinel positions and stay causally invisible, and
+        # later decodes overwrite exactly the pad slots.  Ring-buffer windows,
+        # scan states (mamba/rwkv), enc-dec and m-rope address by array index
+        # or consume pads statefully — those fall back to exact lengths.
+        self._can_bucket = (not cfg.encdec and not cfg.mrope and
+                            all(k in ("attn_full", "mla")
+                                for k in cfg.layer_kinds()))
+        self._prefill = jax.jit(self._prefill_insert, donate_argnums=(1,))
+
+        # Session store: suspended KV snapshots as dtype-preserving uint8
+        # pages in a VILLA tiered store (movement via the RBM page kernels).
+        self.page_spec = PS.PageSpec.for_cache(self.cache)
         self.villa_cfg = villa or VillaConfig(
             n_counters=n_sessions, n_hot=max(n_sessions // 4, 2),
             n_slots=max(n_sessions // 4, 2), epoch_len=8)
-        slow = jnp.zeros((n_sessions, sum(sizes)), jnp.float32)
-        self.sessions = VC.make_store(slow, self.villa_cfg)
-        self.session_pos: Dict[int, int] = {}
-        # Modeled cost of moving one KV snapshot (float32 bytes -> DRAM
-        # rows), under the in-DRAM hop chain vs the channel path.
-        snapshot_rows = max(1, math.ceil(sum(sizes) * 4 / spec.row_bytes))
+        self.sessions = PS.make_session_store(self.page_spec, n_sessions,
+                                              self.villa_cfg)
+        self.session_pos: Dict[int, int] = {}       # uid -> next position
+        self.session_tok: Dict[int, int] = {}       # uid -> last emitted token
+        self.store_uid: Dict[int, int] = {}         # store index -> live uid
+        self._suspend = jax.jit(self._suspend_fn, donate_argnums=(1,))
+        self._resume = jax.jit(self._resume_fn, donate_argnums=(0, 1))
+        self._resume_many = jax.jit(self._resume_many_fn,
+                                    donate_argnums=(0, 1))
+
+        # Modeled cost of moving one KV snapshot (true bytes -> DRAM rows),
+        # under the in-DRAM hop chain vs the channel path.
+        self.snapshot_bytes = self.page_spec.total_bytes
+        snapshot_rows = max(1, math.ceil(self.snapshot_bytes / spec.row_bytes))
         self._move_ns = {
             "lisa": snapshot_rows * spec.copy_latency("lisa", 1),
             "memcpy": snapshot_rows * spec.copy_latency("memcpy"),
         }
         self.stats = {"decoded_tokens": 0, "suspends": 0, "resumes": 0,
+                      "decode_dispatches": 0, "host_transfers": 0,
+                      "evictions": 0,
                       "modeled_move_ns_lisa": 0.0,
                       "modeled_move_ns_memcpy": 0.0}
 
-    # ---- cache <-> flat session snapshots --------------------------------
-    def _slot_slice(self, cache, slot):
-        return jax.tree.map(lambda x: x[:, slot], cache)   # leading dim = reps
+    # ---- jitted bodies (traced slot/store indices; donated buffers) -------
+    def _prefill_insert(self, params, cache, tokens, positions, true_len,
+                        slot):
+        """Prefill one request and insert its KV into ``slot``: one dispatch,
+        returns (next_token scalar, cache).  ``tokens`` may be right-padded
+        to a bucket length; pads carry sentinel positions."""
+        cache1 = lm.init_cache(self.cfg, 1, max_len=self.max_len)
+        logits, cache1 = lm.prefill(self.cfg, params, tokens, cache1,
+                                    positions=positions)
+        nxt = jnp.argmax(logits[0, true_len - 1]).astype(jnp.int32)
+        cache = jax.tree.map(
+            lambda full, p: jax.lax.dynamic_update_slice_in_dim(
+                full, p.astype(full.dtype), slot, axis=1), cache, cache1)
+        return nxt, cache
 
-    def _snapshot(self, slot) -> jax.Array:
-        leaves = jax.tree_util.tree_flatten(self._slot_slice(self.cache, slot))[0]
-        return jnp.concatenate([l.astype(jnp.float32).reshape(-1)
-                                for l in leaves])
+    def _suspend_fn(self, cache, store, slot, idx):
+        pages = PS.pack_slot(self.page_spec, cache, slot)
+        return VC.write(store, idx, pages)
 
-    def _restore_snapshot(self, slot, vec: jax.Array) -> None:
-        leaves = []
-        off = 0
-        for shape, dtype, size in zip(self._leaf_shapes, self._leaf_dtypes,
-                                      self._leaf_sizes):
-            leaves.append(vec[off:off + size].reshape(shape).astype(dtype))
-            off += size
-        piece = jax.tree_util.tree_unflatten(self._cache_def, leaves)
-        self.cache = jax.tree.map(
-            lambda full, p: full.at[:, slot].set(p), self.cache, piece)
+    def _resume_fn(self, cache, store, slot, idx):
+        store, pages, _hit = VC.access(store, idx, self.villa_cfg)
+        cache = PS.unpack_into_slot(self.page_spec, cache, slot, pages)
+        return cache, store
 
-    def _prefill_one(self, params, cache1, tokens):
-        return lm.prefill(self.cfg, params, tokens, cache1)
+    def _resume_many_fn(self, cache, store, slots, idxs):
+        store, pages, _hits = VC.access_many(store, idxs, self.villa_cfg)
+
+        def body(c, xs):
+            s, pg = xs
+            return PS.unpack_into_slot(self.page_spec, c, s, pg), None
+
+        cache, _ = jax.lax.scan(body, cache, (slots, pages))
+        return cache, store
 
     # ---- scheduling -------------------------------------------------------
     def free_slots(self) -> List[int]:
         return [s for s in range(self.slots) if s not in self.active]
 
+    def _take_slot(self) -> int:
+        free = self.free_slots()
+        if not free:
+            raise EngineFull(
+                f"all {self.slots} slots busy; suspend or finish a request "
+                f"first (active uids: {[r.uid for r in self.active.values()]})")
+        return free[0]
+
+    def _bucket_len(self, n: int) -> int:
+        if not self._can_bucket:
+            return n
+        return min(max(16, 1 << (n - 1).bit_length()), self.max_len)
+
     def submit(self, req: Request) -> int:
-        slot = self.free_slots()[0]
+        slot = self._take_slot()
+        n = len(req.prompt)
+        if n > self.max_len:
+            raise ValueError(f"prompt length {n} exceeds max_len={self.max_len}")
         req.generated = []
-        # fresh single-slot cache WITH the position sentinel (2**30) intact —
-        # zeros would unmask unwritten slots (kv_pos=0 passes the causal mask)
-        cache1 = lm.init_cache(self.cfg, 1, max_len=self.max_len)
-        logits, cache1 = self._prefill1(self.params, cache1,
-                                        jnp.asarray(req.prompt)[None])
-        self.cache = jax.tree.map(
-            lambda full, p: full.at[:, slot:slot + 1].set(p),
-            self.cache, cache1)
-        nxt = int(jnp.argmax(logits[0, -1]))
-        req.generated.append(nxt)
+        lb = self._bucket_len(n)
+        toks = np.zeros(lb, np.int32)
+        toks[:n] = req.prompt
+        if self.cfg.mrope:      # (3,B,S) layout — unbucketed, default arange
+            positions = None
+        else:
+            pos_arr = np.full(lb, POS_SENTINEL, np.int32)
+            pos_arr[:n] = np.arange(n)
+            positions = jnp.asarray(pos_arr)[None]
+        nxt, self.cache = _quiet(
+            self._prefill, self.params, self.cache, jnp.asarray(toks)[None],
+            positions, jnp.int32(n), jnp.int32(slot))
+        req.generated.append(int(nxt))
         self.active[slot] = req
-        self.pos[slot] = len(req.prompt)
+        self.pos[slot] = n
         return slot
 
     def step(self) -> None:
-        """Decode one token for every active slot (uniform position per
-        micro-group: slots at different positions run in position groups)."""
+        """Decode one token for every active slot: ONE jitted dispatch and
+        ONE device→host transfer, however ragged the slot positions are."""
         if not self.active:
             return
+        toks = np.zeros(self.slots, np.int32)
+        mask = np.zeros(self.slots, bool)
+        for s, req in self.active.items():
+            toks[s] = req.generated[-1]
+            mask[s] = True
+        nxt_dev, self.cache = _quiet(
+            self._decode, self.params, self.cache, jnp.asarray(toks),
+            jnp.asarray(self.pos), jnp.asarray(mask))
+        self.stats["decode_dispatches"] += 1
+        nxt = np.asarray(nxt_dev)               # the one device→host transfer
+        self.stats["host_transfers"] += 1
+        for s in self.active:
+            self.active[s].generated.append(int(nxt[s]))
+            self.pos[s] += 1
+            self.stats["decoded_tokens"] += 1
+        for s, req in list(self.active.items()):
+            if len(req.generated) >= req.max_new:
+                self.suspend(s)
+
+    def step_unbatched(self) -> None:
+        """Pre-PR reference path (kept for A/B benchmarking and migration):
+        splits slots into uniform-position groups — one dispatch per group
+        plus one sync per slot.  Equivalent to :meth:`step` ONLY at uniform
+        positions: with ragged positions each group's cache write lands in
+        every batch row and corrupts the other slots (the latent bug the
+        active-mask path fixes) — do not serve ragged batches with it."""
+        if not self.active:
+            return
+        if self._decode_legacy is None:
+            self._decode_legacy = jax.jit(partial(lm.decode_step, self.cfg))
         groups: Dict[int, List[int]] = {}
         for s in self.active:
             groups.setdefault(int(self.pos[s]), []).append(s)
@@ -138,11 +253,12 @@ class Engine:
             toks = np.zeros((self.slots, 1), np.int32)
             for s in ss:
                 toks[s, 0] = self.active[s].generated[-1]
-            logits, self.cache = self._decode(self.params, self.cache,
-                                              jnp.asarray(toks),
-                                              jnp.int32(pos))
+            logits, self.cache = self._decode_legacy(
+                self.params, self.cache, jnp.asarray(toks), jnp.int32(pos))
+            self.stats["decode_dispatches"] += 1
             for s in ss:
                 nxt = int(jnp.argmax(logits[s, 0]))
+                self.stats["host_transfers"] += 1
                 self.active[s].generated.append(nxt)
                 self.pos[s] += 1
                 self.stats["decoded_tokens"] += 1
@@ -151,31 +267,85 @@ class Engine:
                 self.suspend(s)
 
     # ---- VILLA session tiering --------------------------------------------
+    def _store_index(self, uid: int) -> int:
+        """Map uid -> store index, evicting an aliased session explicitly
+        (uid % n_sessions collisions must not silently corrupt state)."""
+        idx = uid % self.n_sessions
+        old = self.store_uid.get(idx)
+        if old is not None and old != uid:
+            self.session_pos.pop(old, None)
+            self.session_tok.pop(old, None)
+            self.stats["evictions"] += 1
+        self.store_uid[idx] = uid
+        return idx
+
     def suspend(self, slot: int) -> None:
+        if slot not in self.active:
+            raise ValueError(f"slot {slot} has no active request to suspend "
+                             f"(active slots: {sorted(self.active)})")
         req = self.active.pop(slot)
-        vec = self._snapshot(slot)
-        self.sessions = VC.write(self.sessions, req.uid % len(
-            self.sessions.slow), vec)
+        idx = self._store_index(req.uid)
+        self.sessions = _quiet(self._suspend, self.cache, self.sessions,
+                               jnp.int32(slot), jnp.int32(idx))
         self.session_pos[req.uid] = int(self.pos[slot])
+        self.session_tok[req.uid] = req.generated[-1] if req.generated else 0
         self.stats["suspends"] += 1
         self._charge_move()
 
-    def resume(self, uid: int, extra_new: int) -> int:
-        """Bring a suspended session back: the tiered store access promotes
-        hot sessions to the fast tier (paper policy) — hit rate is the
-        serving-level VILLA metric."""
-        self.sessions, vec, hit = VC.access(
-            self.sessions, uid % len(self.sessions.slow), self.villa_cfg)
-        slot = self.free_slots()[0]
-        self._restore_snapshot(slot, vec)
-        req = Request(uid=uid, prompt=np.zeros(0, np.int32),
-                      max_new=extra_new)
-        req.generated = [0]
+    def _check_resumable(self, uid: int) -> int:
+        for slot, r in self.active.items():
+            if r.uid == uid:
+                raise ValueError(
+                    f"uid {uid} is already active in slot {slot}; suspend it "
+                    f"before resuming it again (a second resume would fork a "
+                    f"stale snapshot and corrupt suspend bookkeeping)")
+        if uid not in self.session_pos:
+            raise UnknownSession(
+                f"uid {uid} has no suspended session (never suspended, or "
+                f"evicted by a store-index collision)")
+        return uid % self.n_sessions
+
+    def _activate(self, slot: int, uid: int, extra_new: int) -> None:
+        req = Request(uid=uid, prompt=np.zeros(0, np.int32), max_new=extra_new)
+        req.generated = [self.session_tok[uid]]
         self.active[slot] = req
         self.pos[slot] = self.session_pos[uid]
+
+    def resume(self, uid: int, extra_new: int) -> int:
+        """Bring a suspended session back: the tiered-store access promotes
+        hot sessions to the fast tier (paper policy) — hit rate is the
+        serving-level VILLA metric.  One jitted dispatch, no host sync."""
+        idx = self._check_resumable(uid)
+        slot = self._take_slot()
+        self.cache, self.sessions = _quiet(
+            self._resume, self.cache, self.sessions, jnp.int32(slot),
+            jnp.int32(idx))
+        self._activate(slot, uid, extra_new)
         self.stats["resumes"] += 1
         self._charge_move()
         return slot
+
+    def resume_many(self, uids: Sequence[int], extra_new: int) -> List[int]:
+        """Resume a wave of sessions in ONE dispatch: the page tables of all
+        sessions drive one batched tiered-store access."""
+        if not uids:
+            return []
+        if len(set(uids)) != len(uids):
+            raise ValueError(f"duplicate uids in resume wave: {list(uids)}")
+        idxs = [self._check_resumable(u) for u in uids]
+        free = self.free_slots()
+        if len(free) < len(uids):
+            raise EngineFull(f"{len(uids)} resumes requested but only "
+                             f"{len(free)} slots free")
+        slots = free[:len(uids)]
+        self.cache, self.sessions = _quiet(
+            self._resume_many, self.cache, self.sessions,
+            jnp.asarray(slots, jnp.int32), jnp.asarray(idxs, jnp.int32))
+        for slot, uid in zip(slots, uids):
+            self._activate(slot, uid, extra_new)
+            self.stats["resumes"] += 1
+            self._charge_move()
+        return slots
 
     def _charge_move(self) -> None:
         """Account one whole-snapshot movement under both mechanisms: the
@@ -186,3 +356,14 @@ class Engine:
 
     def hit_rate(self) -> float:
         return float(VC.hit_rate(self.sessions))
+
+    def compile_counts(self) -> Dict[str, int]:
+        """Jit-cache sizes of the hot-path entry points (compilations seen).
+        -1 when the jax build exposes no cache-size probe — asserters should
+        treat -1 as 'unknown', not as a regression."""
+        out = {}
+        for name, fn in [("decode", self._decode), ("prefill", self._prefill),
+                         ("suspend", self._suspend), ("resume", self._resume),
+                         ("resume_many", self._resume_many)]:
+            out[name] = fn._cache_size() if hasattr(fn, "_cache_size") else -1
+        return out

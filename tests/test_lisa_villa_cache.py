@@ -50,6 +50,55 @@ def test_write_through_updates_both_tiers():
     assert np.allclose(store.slow[7], new)
 
 
+def test_access_many_matches_sequential_access():
+    """One-dispatch batched access == the per-item Python loop, exactly."""
+    ids = [3, 9, 3, 9, 1, 3, 9, 30, 3, 9]
+    store_a, slow = _store()
+    seq_data, seq_hits = [], []
+    for i in ids:
+        store_a, data, hit = VC.access(store_a, jnp.int32(i), CFG)
+        seq_data.append(np.asarray(data))
+        seq_hits.append(bool(hit))
+    store_b, _ = _store()
+    store_b, data_b, hits_b = jax.jit(
+        lambda s, i: VC.access_many(s, i, CFG))(store_b,
+                                                jnp.asarray(ids, jnp.int32))
+    assert np.allclose(np.stack(seq_data), np.asarray(data_b))
+    assert seq_hits == [bool(h) for h in np.asarray(hits_b)]
+    assert int(store_a.hits) == int(store_b.hits)
+    assert np.array_equal(np.asarray(store_a.policy.tags),
+                          np.asarray(store_b.policy.tags))
+
+
+def test_write_many_matches_sequential_write():
+    store_a, _ = _store()
+    store_b, _ = _store()
+    ids = jnp.asarray([4, 17, 4], jnp.int32)          # duplicate: last wins
+    data = jnp.stack([jnp.full((5,), float(i)) for i in range(3)])
+    for i in range(3):
+        store_a = VC.write(store_a, ids[i], data[i])
+    store_b = jax.jit(VC.write_many)(store_b, ids, data)
+    assert np.allclose(store_a.slow, store_b.slow)
+    assert np.allclose(store_b.slow[4], 2.0)
+
+
+def test_paged_store_moves_through_kernels():
+    """A store with (pages, P, d) items uses the RBM gather/scatter path and
+    stays bit-exact under the same policy."""
+    slow = jax.random.randint(jax.random.key(0), (8, 3, 8, 128),
+                              0, 255).astype(jnp.uint8)
+    store = VC.make_store(slow, CFG)
+    for i in [5, 2] * 10 + [7]:
+        store, data, _ = VC.access(store, jnp.int32(i), CFG)
+        assert data.dtype == jnp.uint8
+        assert (data == slow[i]).all()
+    new = jnp.full((3, 8, 128), 9, jnp.uint8)
+    store = VC.write(store, jnp.int32(5), new)        # 5 is hot + resident
+    store, data, hit = VC.access(store, jnp.int32(5), CFG)
+    assert bool(hit) and (data == new).all()
+    assert (store.slow[5] == new).all()
+
+
 def test_topology_costs():
     t = MeshTopology(16)
     assert t.hops(0, 15) == 1              # wraparound

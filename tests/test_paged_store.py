@@ -1,0 +1,86 @@
+"""Paged KV snapshots: dtype preservation, bit-exact round-trips, tiering."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core.dram.villa import VillaConfig
+from repro.core.lisa import villa_cache as VC
+from repro.models import lm
+from repro.serve import paged_store as PS
+
+CFG = VillaConfig(n_counters=8, n_hot=2, n_slots=2, epoch_len=4)
+
+
+def _mixed_cache(slots=3):
+    """A cache-shaped pytree with float32 / int32 / int8 / bfloat16 leaves —
+    the dtype mix of fp, quantised-KV and position buffers."""
+    k = jax.random.key(0)
+    return {
+        "k": jax.random.normal(k, (2, slots, 7, 3), jnp.float32),
+        "pos": jax.random.randint(k, (2, slots, 7), 0, 2**30)
+        .astype(jnp.int32),
+        "kq": jax.random.randint(k, (1, slots, 5, 2), -127, 127)
+        .astype(jnp.int8),
+        "scale": jax.random.normal(k, (1, slots, 5), jnp.float32)
+        .astype(jnp.bfloat16),
+    }
+
+
+def test_pack_unpack_roundtrip_bit_exact_all_dtypes():
+    cache = _mixed_cache()
+    spec = PS.PageSpec.for_cache(cache)
+    pages = PS.pack_slot(spec, cache, jnp.int32(1))
+    assert pages.dtype == jnp.uint8
+    assert pages.shape == (spec.n_pages, 8, 128)
+    # true byte total: no float32 upcast anywhere
+    exact = sum(np.prod(l.shape[:1] + l.shape[2:]) * l.dtype.itemsize
+                for l in jax.tree.leaves(cache))
+    assert spec.total_bytes == exact
+
+    blank = jax.tree.map(jnp.zeros_like, cache)
+    out = PS.unpack_into_slot(spec, blank, jnp.int32(1), pages)
+    for name in cache:
+        got, want = out[name][:, 1], cache[name][:, 1]
+        assert got.dtype == want.dtype, name
+        assert (got == want).all(), name
+        # other slots untouched
+        assert (out[name][:, 0] == 0).all() and (out[name][:, 2] == 0).all()
+
+
+def test_pack_is_jit_traceable_over_slots():
+    cache = _mixed_cache()
+    spec = PS.PageSpec.for_cache(cache)
+    packer = jax.jit(lambda c, s: PS.pack_slot(spec, c, s))
+    p0 = packer(cache, jnp.int32(0))
+    p2 = packer(cache, jnp.int32(2))
+    assert packer._cache_size() == 1          # traced slot: one compilation
+    assert not (np.asarray(p0) == np.asarray(p2)).all()
+
+
+def test_session_store_suspend_resume_via_tiers():
+    cache = _mixed_cache()
+    spec = PS.PageSpec.for_cache(cache)
+    store = PS.make_session_store(spec, n_sessions=6, cfg=CFG)
+    pages1 = PS.pack_slot(spec, cache, jnp.int32(1))
+    store = VC.write(store, jnp.int32(4), pages1)
+    for _ in range(10):                        # make session 4 hot + resident
+        store, got, hit = VC.access(store, jnp.int32(4), CFG)
+        assert (got == pages1).all()
+    assert bool(hit)                           # resumed from the fast tier
+    out = PS.unpack_into_slot(spec, jax.tree.map(jnp.zeros_like, cache),
+                              jnp.int32(1), got)
+    for name in cache:
+        assert (out[name][:, 1] == cache[name][:, 1]).all(), name
+
+
+def test_real_model_cache_layout():
+    cfg = get_reduced("tinyllama-1.1b")
+    cache = lm.init_cache(cfg, 2, max_len=32)
+    spec = PS.PageSpec.for_cache(cache)
+    pages = PS.pack_slot(spec, cache, jnp.int32(0))
+    out = PS.unpack_into_slot(spec, jax.tree.map(jnp.zeros_like, cache),
+                              jnp.int32(0), pages)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(cache)):
+        assert a.dtype == b.dtype
+        assert (a[:, 0] == b[:, 0]).all()

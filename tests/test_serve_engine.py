@@ -6,7 +6,7 @@ import pytest
 
 from repro.configs import get_reduced
 from repro.models import lm
-from repro.serve.engine import Engine, Request
+from repro.serve.engine import Engine, EngineFull, Request, UnknownSession
 
 
 @pytest.fixture(scope="module")
@@ -78,6 +78,213 @@ def test_suspend_resume_roundtrip(setup):
     while eng.active:
         eng.step()
     assert eng.stats["resumes"] == 1
+
+
+def test_one_dispatch_one_transfer_per_step(setup):
+    """The tentpole invariant: however ragged the slot positions are, a step
+    is exactly ONE jitted dispatch and ONE device→host transfer, and the
+    decode function compiles exactly once."""
+    cfg, params = setup
+    rng = np.random.default_rng(4)
+    eng = Engine(cfg, params, slots=3, max_len=96)
+    # three different prompt lengths -> three different positions per step
+    for uid, ln in enumerate((5, 9, 13)):
+        eng.submit(Request(uid=uid, max_new=50,
+                           prompt=rng.integers(0, cfg.vocab_size, ln)
+                           .astype(np.int32)))
+    assert len(set(eng.pos[list(eng.active)])) == 3
+    d0, t0 = eng.stats["decode_dispatches"], eng.stats["host_transfers"]
+    for _ in range(6):
+        eng.step()
+    assert eng.stats["decode_dispatches"] - d0 == 6
+    assert eng.stats["host_transfers"] - t0 == 6
+    assert eng.compile_counts()["decode"] in (1, -1)   # -1: probe unavailable
+
+
+def test_engine_full_raises_clearly(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(5)
+    eng = Engine(cfg, params, slots=1, max_len=96, n_sessions=8)
+    prompt = rng.integers(0, cfg.vocab_size, 4).astype(np.int32)
+    eng.submit(Request(uid=0, prompt=prompt, max_new=30))
+    with pytest.raises(EngineFull):
+        eng.submit(Request(uid=1, prompt=prompt, max_new=2))
+    while eng.active:
+        eng.step()
+    eng.submit(Request(uid=1, prompt=prompt, max_new=30))  # slot freed
+    with pytest.raises(EngineFull):
+        eng.resume(0, extra_new=2)
+    while eng.active:
+        eng.step()
+    assert eng.resume(0, extra_new=2) == 0
+
+
+def test_resume_unknown_uid_is_rejected_without_mutation(setup):
+    cfg, params = setup
+    eng = Engine(cfg, params, slots=2, max_len=96, n_sessions=8)
+    before = jax.tree.map(np.asarray, eng.sessions)
+    with pytest.raises(UnknownSession):
+        eng.resume(99, extra_new=2)
+    after = jax.tree.map(np.asarray, eng.sessions)
+    for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        assert np.array_equal(a, b)            # store untouched by the error
+    assert not eng.active and eng.stats["resumes"] == 0
+
+
+def test_resume_of_active_uid_and_duplicate_wave_rejected(setup):
+    """A uid can only be resumed while suspended: resuming it twice (or
+    duplicating it in a wave) would fork a stale snapshot."""
+    cfg, params = setup
+    rng = np.random.default_rng(12)
+    eng = Engine(cfg, params, slots=3, max_len=96, n_sessions=8)
+    prompt = rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+    eng.submit(Request(uid=0, prompt=prompt, max_new=3))
+    eng.submit(Request(uid=1, prompt=prompt, max_new=3))
+    while eng.active:
+        eng.step()
+    eng.resume(0, extra_new=30)
+    with pytest.raises(ValueError, match="already active"):
+        eng.resume(0, extra_new=2)
+    with pytest.raises(ValueError, match="already active"):
+        eng.resume_many([1, 0], extra_new=2)
+    with pytest.raises(ValueError, match="duplicate"):
+        eng.resume_many([1, 1], extra_new=2)
+    assert [r.uid for r in eng.active.values()] == [0]  # failed waves: no-op
+
+
+def test_store_index_collision_evicts_explicitly(setup):
+    """uid and uid+n_sessions alias the same store index: the older session
+    must be evicted (stats + UnknownSession), never silently corrupted."""
+    cfg, params = setup
+    rng = np.random.default_rng(6)
+    eng = Engine(cfg, params, slots=2, max_len=96, n_sessions=4)
+    prompt = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+    for uid in (1, 5):                          # 5 % 4 == 1 % 4
+        eng.submit(Request(uid=uid, prompt=prompt, max_new=3))
+        while eng.active:
+            eng.step()
+    assert eng.stats["evictions"] == 1
+    with pytest.raises(UnknownSession):
+        eng.resume(1, extra_new=2)              # evicted by uid 5
+    eng.resume(5, extra_new=2)                  # survivor resumes fine
+    while eng.active:
+        eng.step()
+
+
+def test_suspend_resume_decode_matches_uninterrupted(setup):
+    """End-to-end equivalence: suspend→resume→decode produces exactly the
+    tokens an uninterrupted decode would have produced."""
+    cfg, params = setup
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, cfg.vocab_size, 9).astype(np.int32)
+    straight = _greedy_reference(cfg, params, prompt, 10)
+
+    eng = Engine(cfg, params, slots=2, max_len=96, n_sessions=8)
+    req = Request(uid=11, prompt=prompt, max_new=4)
+    eng.submit(req)
+    while eng.active:
+        eng.step()                              # emit 4, then auto-suspend
+    slot = eng.resume(11, extra_new=4)          # continue: 3 more tokens
+    r1 = eng.active[slot]
+    while eng.active:
+        eng.step()
+    slot = eng.resume(11, extra_new=4)          # and 3 more again
+    r2 = eng.active[slot]
+    while eng.active:
+        eng.step()
+    # generated[0] of a resumed request is the pre-suspension token (the
+    # decode seed), so the genuinely new tokens are generated[1:]
+    got = req.generated + r1.generated[1:] + r2.generated[1:]
+    assert got == straight
+    assert eng.stats["suspends"] == 3 and eng.stats["resumes"] == 2
+
+
+def test_suspend_resume_preserves_dtypes(setup):
+    """The session store holds raw bytes (uint8 pages) sized by the true leaf
+    dtypes — no float32 upcast — and restore is bit-exact."""
+    cfg, params = setup
+    rng = np.random.default_rng(8)
+    eng = Engine(cfg, params, slots=2, max_len=96, n_sessions=8)
+    assert eng.sessions.slow.dtype == jnp.uint8
+    exact = sum(np.prod(l.shape[:1] + l.shape[2:]) * l.dtype.itemsize
+                for l in jax.tree.leaves(eng.cache))
+    assert eng.snapshot_bytes == exact          # not 4x'd by an upcast
+    prompt = rng.integers(0, cfg.vocab_size, 7).astype(np.int32)
+    eng.submit(Request(uid=0, prompt=prompt, max_new=3))
+    while eng.active:
+        eng.step()
+    snap = jax.tree.map(lambda x: np.asarray(x[:, 0]), eng.cache)
+    slot = eng.resume(0, extra_new=2)
+    restored = jax.tree.map(lambda x: np.asarray(x[:, slot]), eng.cache)
+    for a, b in zip(jax.tree.leaves(snap), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        assert np.array_equal(a, b)             # bit-exact round trip
+
+
+def test_resume_many_single_wave_matches_sequential(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(9)
+    prompts = {uid: rng.integers(0, cfg.vocab_size, 6 + uid).astype(np.int32)
+               for uid in range(3)}
+
+    def serve(resume_batched):
+        eng = Engine(cfg, params, slots=3, max_len=96, n_sessions=8)
+        for uid, p in prompts.items():
+            eng.submit(Request(uid=uid, prompt=p, max_new=3))
+        while eng.active:
+            eng.step()
+        if resume_batched:
+            slots = eng.resume_many([0, 1, 2], extra_new=3)
+        else:
+            slots = [eng.resume(uid, extra_new=3) for uid in range(3)]
+        resumed = {eng.active[s].uid: eng.active[s] for s in slots}
+        while eng.active:
+            eng.step()
+        # post-resume tokens per uid — the state the wave restored
+        return {uid: r.generated for uid, r in resumed.items()}
+
+    seq = serve(False)
+    bat = serve(True)
+    assert set(bat) == {0, 1, 2}
+    assert all(len(t) == 3 for t in bat.values())
+    assert seq == bat
+
+
+def test_step_unbatched_reference_path_and_ragged_fix(setup):
+    """Uniform positions: the kept pre-PR path (position groups + per-slot
+    sync) emits the same tokens as the one-dispatch path.  Ragged positions:
+    the grouped path pays one dispatch per group AND corrupts neighbouring
+    slots (every group's cache write lands in all rows — the latent bug the
+    active-mask fixes), so there only the one-dispatch path tracks the
+    per-request greedy reference."""
+    cfg, params = setup
+    rng = np.random.default_rng(10)
+
+    def serve(step_name, lens):
+        prompts = [rng.integers(0, cfg.vocab_size, ln).astype(np.int32)
+                   for ln in lens]
+        eng = Engine(cfg, params, slots=3, max_len=96)
+        reqs = [Request(uid=i, prompt=p, max_new=5)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        while eng.active:
+            getattr(eng, step_name)()
+        refs = [_greedy_reference(cfg, params, p, 5) for p in prompts]
+        return [r.generated for r in reqs], refs, eng.stats["decode_dispatches"]
+
+    rng = np.random.default_rng(10)
+    toks_new, refs_new, d_new = serve("step", (7, 7, 7))
+    rng = np.random.default_rng(10)
+    toks_old, refs_old, d_old = serve("step_unbatched", (7, 7, 7))
+    assert toks_new == toks_old == refs_new     # uniform: paths agree
+    assert d_new == d_old == 4                  # one group per step
+
+    toks_new, refs, d_new = serve("step", (5, 8, 11))
+    assert toks_new == refs                     # ragged: one-sync path exact
+    toks_old, refs, d_old = serve("step_unbatched", (5, 8, 11))
+    assert d_old > d_new                        # one dispatch per group
+    assert toks_old != refs                     # the corruption being fixed
 
 
 def test_villa_hit_rate_with_hot_sessions(setup):
