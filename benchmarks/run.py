@@ -343,6 +343,142 @@ def bench_serve_throughput(out_path="BENCH_serve.json"):
         f"{bench['compile_counts']['decode']}")
 
 
+def bench_movement(out_path="BENCH_movement.json"):
+    """Movement-substrate A/B: the planned path (movement.plan/execute
+    inside the engine's jitted suspend/resume) vs the pre-redesign legacy
+    path (the same pack + VILLA policy + Pallas gather/scatter, called
+    directly without plans).  Both lower to the same XLA; the bench pins
+    the plan/execute indirection at <= 5% overhead (it is trace-time-only)
+    and records the plans' modeled MovementCost.  Writes
+    ``BENCH_movement.json``."""
+    import statistics as stats
+    import warnings as W
+    from functools import partial
+
+    from repro.configs import get_reduced
+    from repro.core.dram.villa import villa_access
+    from repro.kernels.rbm_copy import villa_gather, villa_scatter
+    from repro.models import lm as LM
+    from repro.serve import paged_store as PSm
+    from repro.serve.engine import Engine, Request
+
+    cfg = get_reduced("tinyllama-1.1b")
+    params = LM.init_lm(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+
+    def make_engine():
+        eng = Engine(cfg, params, slots=4, max_len=96, n_sessions=16)
+        eng.submit(Request(uid=0, prompt=prompt, max_new=2))
+        while eng.active:
+            eng.step()
+        return eng
+
+    eng = make_engine()
+    pspec, vcfg = eng.page_spec, eng.villa_cfg
+
+    # ---- legacy direct-call path: pre-redesign movement, no plans --------
+    def _read(arr, i):
+        n_, spp, P, d = arr.shape
+        tbl = i * spp + jnp.arange(spp, dtype=jnp.int32)
+        return villa_gather(arr.reshape(n_ * spp, P, d), tbl)
+
+    def _write(arr, i, data):
+        n_, spp, P, d = arr.shape
+        tbl = i * spp + jnp.arange(spp, dtype=jnp.int32)
+        return villa_scatter(arr.reshape(n_ * spp, P, d), tbl,
+                             data).reshape(arr.shape)
+
+    @partial(jax.jit, donate_argnums=(1,))
+    def legacy_suspend(cache, store, slot, idx):
+        pages = PSm.pack_slot(pspec, cache, slot)
+        slow = _write(store.slow, idx, pages)
+        resident = store.policy.tags == idx
+        s = jnp.argmax(resident)
+        fast = jnp.where(resident.any(), _write(store.fast, s, pages),
+                         store.fast)
+        return store._replace(slow=slow, fast=fast)
+
+    @partial(jax.jit, donate_argnums=(0, 1))
+    def legacy_resume(cache, store, slot, idx):
+        policy, hit, insert, victim = villa_access(store.policy, idx, vcfg)
+        slow_data = _read(store.slow, idx)
+        fast = jnp.where(insert, _write(store.fast, victim, slow_data),
+                         store.fast)
+        s = jnp.argmax(policy.tags == idx)
+        pages = jnp.where(hit, _read(fast, s), slow_data)
+        store = store._replace(policy=policy, fast=fast,
+                               hits=store.hits + hit.astype(jnp.int32),
+                               accesses=store.accesses + 1)
+        return PSm.unpack_into_slot(pspec, cache, slot, pages), store
+
+    # Both paths driven at identical granularity: the jitted move bodies.
+    zero = jnp.int32(0)
+
+    def drive_planned(state, n):
+        cache, store = state
+        for _ in range(n):
+            cache, store = eng._resume(cache, store, zero, zero)
+            store = eng._suspend(cache, store, zero, zero)
+        jax.block_until_ready(store.slow)
+        return cache, store
+
+    def drive_legacy(state, n):
+        cache, store = state
+        for _ in range(n):
+            cache, store = legacy_resume(cache, store, zero, zero)
+            store = legacy_suspend(cache, store, zero, zero)
+        jax.block_until_ready(store.slow)
+        return cache, store
+
+    n_moves, rounds = 16, 5
+    with W.catch_warnings():
+        W.filterwarnings("ignore",
+                         message="Some donated buffers were not usable")
+        st_p = (eng.cache, eng.sessions)
+        eng2 = make_engine()
+        st_l = (eng2.cache, eng2.sessions)
+        st_p = drive_planned(st_p, 2)            # warm both jit caches
+        st_l = drive_legacy(st_l, 2)
+        t_planned, t_legacy = [], []
+        for _ in range(rounds):                  # interleave to share noise
+            t0 = time.perf_counter()
+            st_p = drive_planned(st_p, n_moves)
+            t_planned.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            st_l = drive_legacy(st_l, n_moves)
+            t_legacy.append(time.perf_counter() - t0)
+    us_planned = stats.median(t_planned) / (2 * n_moves) * 1e6
+    us_legacy = stats.median(t_legacy) / (2 * n_moves) * 1e6
+    ratio = us_planned / us_legacy
+
+    cc = eng.compile_counts()
+    bench = {
+        "planned_us_per_move": round(us_planned, 2),
+        "legacy_us_per_move": round(us_legacy, 2),
+        "planned_over_legacy": round(ratio, 4),
+        "within_5pct": bool(ratio <= 1.05),
+        # deterministic trace-time-only guard: the planned bodies compile
+        # once each, however many moves ran (-1 = no jit-cache probe)
+        "planned_compile_counts": {"suspend": cc["suspend"],
+                                   "resume": cc["resume"]},
+        "snapshot_bytes": eng.snapshot_bytes,
+        "plan_suspend": eng.plan_suspend.describe(),
+        "plan_resume": eng.plan_resume.describe(),
+        "modeled_ns_lisa_per_move": eng.plan_resume.cost.ns_lisa,
+        "modeled_ns_memcpy_per_move": eng.plan_resume.cost.ns_memcpy,
+        "modeled_advantage": round(eng.plan_resume.cost.advantage, 2),
+        "config": {"arch": "tinyllama-1.1b-reduced", "n_moves": n_moves,
+                   "rounds": rounds, "workload": "serve suspend/resume"},
+    }
+    with open(out_path, "w") as f:
+        json.dump(bench, f, indent=2)
+    row("movement_planned_suspend_resume", us_planned,
+        f"ratio_vs_legacy={ratio:.3f};within_5pct={bench['within_5pct']}")
+    row("movement_legacy_suspend_resume", us_legacy,
+        f"modeled_advantage={bench['modeled_advantage']}x")
+
+
 def bench_roofline_summary():
     import glob
     cells = sorted(glob.glob("experiments/dryrun/*_baseline.json"))
@@ -375,6 +511,7 @@ BENCHES = {
     "ring": bench_ring_collectives,
     "train": bench_train_throughput,
     "serve": bench_serve_throughput,
+    "movement": bench_movement,
     "roofline": bench_roofline_summary,
 }
 

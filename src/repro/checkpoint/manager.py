@@ -7,6 +7,12 @@ structurally-equal target — and ``restore(..., shardings=...)`` lays the
 arrays out on a *different* mesh, which is the elastic-rescale path
 (checkpoint from a 256-chip run restores onto 128 or 512 chips; the
 cross-device movement is exactly the bulk transfer LISA accelerates).
+
+Device<->host staging is a planned movement: both directions lower through
+``movement.plan`` to a host-staging leg — the off-chip channel, the
+"memcpy" path the in-fabric legs are priced against — so checkpoint traffic
+is byte-accounted by the same substrate as every other bulk transfer
+(``last_move_cost()`` exposes the most recent plan's cost).
 """
 from __future__ import annotations
 
@@ -18,6 +24,26 @@ from typing import Any, Optional
 
 import jax
 import numpy as np
+
+from repro import movement as MV
+
+_LAST_COST: Optional[MV.MovementCost] = None
+
+
+def last_move_cost() -> Optional[MV.MovementCost]:
+    """MovementCost of the most recent save/restore staging (None before
+    any staging ran): checkpoint bytes over the modeled channel."""
+    return _LAST_COST
+
+
+def _stage(leaves, to_host: bool, shardings=None):
+    """Move a list of leaves across the channel via one host-staging plan."""
+    global _LAST_COST
+    src, dst = (("device", "host") if to_host else ("host", "device"))
+    p = MV.plan(MV.Transfer(MV.Tier(src), MV.Tier(dst),
+                            MV.Layout.tree(leaves)))
+    _LAST_COST = p.cost
+    return MV.execute(p, data=leaves, shardings=shardings)["data"]
 
 
 def _path_str(path) -> str:
@@ -36,9 +62,10 @@ def _path_str(path) -> str:
 
 def save(tree: Any, ckpt_dir: str, step: int, keep_last: int = 3) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
-    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
-    arrays = {_path_str(p): np.asarray(jax.device_get(l)) for p, l in flat
-              if l is not None}
+    flat = [(p, l) for p, l in jax.tree_util.tree_flatten_with_path(tree)[0]
+            if l is not None]
+    staged = _stage([l for _, l in flat], to_host=True)
+    arrays = {_path_str(p): a for (p, _), a in zip(flat, staged)}
     tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
     try:
         np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
@@ -95,16 +122,7 @@ def restore(tree_like: Any, ckpt_dir: str, step: Optional[int] = None,
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
     shard_flat = (jax.tree_util.tree_flatten(shardings)[0]
                   if shardings is not None else [None] * len(flat))
-    leaves = []
-    for (p, leaf), sh in zip(flat, shard_flat):
-        key = _path_str(p)
-        if leaf is None:
-            leaves.append(None)
-            continue
-        arr = data[key]
-        if sh is not None:
-            leaves.append(jax.device_put(arr, sh))
-        else:
-            leaves.append(jax.numpy.asarray(arr))
-    return jax.tree_util.tree_unflatten(
-        treedef, [l for (_, leaf), l in zip(flat, leaves)])
+    hosted = [None if leaf is None else data[_path_str(p)]
+              for (p, leaf) in flat]
+    leaves = _stage(hosted, to_host=False, shardings=shard_flat)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

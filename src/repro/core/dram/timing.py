@@ -1,20 +1,16 @@
-"""Back-compat shim over :mod:`repro.core.dram.spec` (the `DramSpec` API).
+"""DEPRECATED back-compat shim over :mod:`repro.core.dram.spec`.
 
-Historically this module *was* the device model: it exported `DDR3` / `LISA` /
-`ENERGY` singletons plus free functions that every other layer read directly.
-That hardwired one device and forced string dispatch; the model now lives in
-``spec.DramSpec`` with a preset registry (``DDR3_1600`` calibrated to Table 1,
-plus DDR4/LPDDR presets) and a ``CopyMechanism`` registry.
-
-This shim keeps the old names importable.  The singletons below are retained
-for interactive use only — **no repo module may read them**; every consumer
-takes a ``DramSpec``.  ``table1()`` stays as the canonical thin wrapper over
-the default preset and still reproduces the paper's exact numbers.
+Importing this module emits a :class:`DeprecationWarning`: the device model
+lives in ``spec.DramSpec`` (preset registry — ``DDR3_1600`` calibrated to
+Table 1 — plus a ``CopyMechanism`` registry); every repo module takes a
+``DramSpec``.  This shim only keeps the historical names importable for
+external/REPL users and will be removed once nothing imports it.
 
 Units: nanoseconds (ns) and microjoules (uJ) throughout.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict, Tuple
 
 from repro.core.dram.spec import (  # noqa: F401  (re-exports)
@@ -27,58 +23,41 @@ from repro.core.dram.spec import (  # noqa: F401  (re-exports)
     get_preset,
 )
 
-# Legacy class names.
-DDR3Timing = DramTiming
-LISATiming = LisaTiming
+warnings.warn(
+    "repro.core.dram.timing is deprecated: import DramSpec presets and the "
+    "CopyMechanism registry from repro.core.dram.spec instead",
+    DeprecationWarning, stacklevel=2)
 
-# Legacy constants, all derived from the default preset.
+# Legacy class names / constants / singletons, all from the default preset.
+DDR3Timing, LISATiming = DramTiming, LisaTiming
 CACHE_LINE_BYTES = DDR3_1600.cache_line_bytes
 ROW_BYTES = DDR3_1600.row_bytes
 LINES_PER_ROW = DDR3_1600.lines_per_row
 CHANNEL_BW_GBPS = DDR3_1600.channel_bw_gbps
 RBM_BW_GBPS = DDR3_1600.rbm_bw_gbps
-
-# Legacy singletons — kept importable for back-compat/REPL use only; no
-# module in this repo reads them (consumers take a DramSpec).
-DDR3 = DDR3_1600.timing
-LISA = DDR3_1600.lisa
-ENERGY = DDR3_1600.energy
+DDR3, LISA, ENERGY = DDR3_1600.timing, DDR3_1600.lisa, DDR3_1600.energy
 
 
-def latency_rc_intra_sa(spec: DramSpec = DDR3_1600) -> float:
-    return spec.copy_latency("rc_intrasa")
+def _alias(mechanism: str, kind: str):
+    def fn(spec: DramSpec = DDR3_1600) -> float:
+        return getattr(spec, f"copy_{kind}")(mechanism)
+    fn.__name__ = f"{kind}_{mechanism}"
+    fn.__doc__ = f"Deprecated alias for ``spec.copy_{kind}({mechanism!r})``."
+    return fn
 
 
-def latency_rc_bank(spec: DramSpec = DDR3_1600) -> float:
-    return spec.copy_latency("rc_bank")
-
-
-def latency_rc_inter_sa(spec: DramSpec = DDR3_1600) -> float:
-    return spec.copy_latency("rc_intersa")
-
-
-def latency_memcpy(spec: DramSpec = DDR3_1600) -> float:
-    return spec.copy_latency("memcpy")
+latency_rc_intra_sa = _alias("rc_intrasa", "latency")
+latency_rc_bank = _alias("rc_bank", "latency")
+latency_rc_inter_sa = _alias("rc_intersa", "latency")
+latency_memcpy = _alias("memcpy", "latency")
+energy_rc_intra_sa = _alias("rc_intrasa", "energy")
+energy_rc_bank = _alias("rc_bank", "energy")
+energy_rc_inter_sa = _alias("rc_intersa", "energy")
+energy_memcpy = _alias("memcpy", "energy")
 
 
 def latency_lisa_risc(hops: int, spec: DramSpec = DDR3_1600) -> float:
     return spec.copy_latency("lisa", hops)
-
-
-def energy_rc_intra_sa(spec: DramSpec = DDR3_1600) -> float:
-    return spec.copy_energy("rc_intrasa")
-
-
-def energy_rc_bank(spec: DramSpec = DDR3_1600) -> float:
-    return spec.copy_energy("rc_bank")
-
-
-def energy_rc_inter_sa(spec: DramSpec = DDR3_1600) -> float:
-    return spec.copy_energy("rc_intersa")
-
-
-def energy_memcpy(spec: DramSpec = DDR3_1600) -> float:
-    return spec.copy_energy("memcpy")
 
 
 def energy_lisa_risc(hops: int, spec: DramSpec = DDR3_1600) -> float:

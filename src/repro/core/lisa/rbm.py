@@ -45,10 +45,12 @@ def lisa_copy(x: jax.Array, src: int, dst: int, axis_name: str,
     if src == dst:
         return x
     fwd = (dst - src) % n
-    if wraparound and (n - fwd) < fwd:
-        step, hops = -1, n - fwd
+    if wraparound:
+        # Ring: take the shorter direction.
+        step, hops = ((-1, n - fwd) if (n - fwd) < fwd else (1, fwd))
     else:
-        step, hops = 1, fwd
+        # Linear chain (no wrap links): the direct route is the only route.
+        step, hops = ((1, dst - src) if dst >= src else (-1, src - dst))
     v = x
     cur = src
     for _ in range(hops):

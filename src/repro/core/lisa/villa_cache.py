@@ -12,22 +12,26 @@ replacement) is literally ``repro.core.dram.villa`` — the same code drives the
 DRAM reproduction and the TPU runtime.  That reuse is the "LISA as substrate"
 claim made concrete.
 
-Items may be flat vectors or *paged*: a store whose items have shape
-(pages, P, d) — e.g. the serving engine's KV-snapshot pages
-(``repro.serve.paged_store``) — moves data through the Pallas RBM kernels
-(``villa_gather`` / ``villa_scatter``, scalar-prefetched page tables, LIP
-double buffering) instead of dense indexing, so tier movement is the wide
-in-DRAM transfer of the paper rather than a narrow-channel memcpy.
+This module owns WHAT moves (the caching policy); HOW it moves is the
+movement substrate: every paged read/write lowers through
+``repro.movement.plan`` to page gather/scatter legs executed by the Pallas
+RBM kernels (scalar-prefetched page tables, LIP double buffering,
+input/output aliasing), so tier movement is the wide in-DRAM transfer of
+the paper rather than a narrow-channel memcpy.  In return this module
+registers the policy-mediated ``tier_read`` / ``tier_write`` legs with the
+movement registry, so higher layers (the serving engine) can plan whole
+suspend/resume transfers that route through the policy.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro import movement as MV
 from repro.core.dram.villa import VillaConfig, VillaState, villa_access, villa_init
-from repro.kernels.rbm_copy import villa_gather, villa_scatter
 
 
 class TieredStore(NamedTuple):
@@ -43,21 +47,43 @@ def _paged(arr: jax.Array) -> bool:
     return arr.ndim == 4
 
 
-def _read_item(arr: jax.Array, item_id: jax.Array) -> jax.Array:
+@functools.lru_cache(maxsize=None)
+def _pool_plan(direction: str, tier: str, spp: int, P: int, d: int,
+               dtype_name: str) -> MV.MovementPlan:
+    """One item's worth of raw page movement, planned once per pool shape.
+
+    ``direction``: "read" lowers to a page-gather leg, "write" to a
+    page-scatter leg; ``tier`` names the pool being addressed ("slow" or
+    "fast") so the plan's transfer — and its ``describe()`` — reports the
+    tier the movement actually touches.  Both are priced at one item's
+    true bytes.  (An explicit whole-item promotion is the composite
+    slow->fast plan: gather from ``src_pool``, scatter into ``dst_pool``,
+    priced as one copy.)"""
+    layout = MV.Layout.raw_pages(spp, P, d, dtype_name)
+    src, dst = ((tier, "compute") if direction == "read"
+                else ("compute", tier))
+    return MV.plan(MV.Transfer(MV.Tier(src), MV.Tier(dst), layout))
+
+
+def _read_item(arr: jax.Array, item_id: jax.Array,
+               tier: str = "slow") -> jax.Array:
     if _paged(arr):
         n, spp, P, d = arr.shape
         table = item_id * spp + jnp.arange(spp, dtype=jnp.int32)
-        return villa_gather(arr.reshape(n * spp, P, d), table)
+        p = _pool_plan("read", tier, spp, P, d, str(arr.dtype))
+        return MV.execute(p, pool=arr.reshape(n * spp, P, d),
+                          table=table)["data"]
     return arr[item_id]
 
 
-def _write_item(arr: jax.Array, item_id: jax.Array, data: jax.Array
-                ) -> jax.Array:
+def _write_item(arr: jax.Array, item_id: jax.Array, data: jax.Array,
+                tier: str = "slow") -> jax.Array:
     if _paged(arr):
         n, spp, P, d = arr.shape
         table = item_id * spp + jnp.arange(spp, dtype=jnp.int32)
-        return villa_scatter(arr.reshape(n * spp, P, d), table,
-                             data).reshape(arr.shape)
+        p = _pool_plan("write", tier, spp, P, d, str(arr.dtype))
+        return MV.execute(p, pool=arr.reshape(n * spp, P, d), table=table,
+                          data=data)["pool"].reshape(arr.shape)
     return arr.at[item_id].set(data)
 
 
@@ -78,16 +104,17 @@ def access(store: TieredStore, item_id: jax.Array, cfg: VillaConfig
 
     Returns (store', data, hit).  Hot items are promoted on access (the
     paper's "cache them when they are accessed the next time"), evicting the
-    minimum-benefit slot.  Promotion copies slow->fast — the bulk movement
-    that LISA-RISC (hop chains / rbm_copy kernel) performs on hardware.
+    minimum-benefit slot.  Promotion copies slow->fast — a gather+scatter
+    movement plan, the bulk transfer LISA-RISC performs on hardware.
     """
     item_id = jnp.asarray(item_id, jnp.int32)
     policy, hit, insert, victim = villa_access(store.policy, item_id, cfg)
-    slow_data = _read_item(store.slow, item_id)
-    fast = jnp.where(insert, _write_item(store.fast, victim, slow_data),
+    slow_data = _read_item(store.slow, item_id, tier="slow")
+    fast = jnp.where(insert,
+                     _write_item(store.fast, victim, slow_data, tier="fast"),
                      store.fast)
     slot = jnp.argmax(policy.tags == item_id)          # valid for hit & insert
-    data = jnp.where(hit, _read_item(fast, slot), slow_data)
+    data = jnp.where(hit, _read_item(fast, slot, tier="fast"), slow_data)
     return (TieredStore(policy=policy, fast=fast, slow=store.slow,
                         hits=store.hits + hit.astype(jnp.int32),
                         accesses=store.accesses + 1),
@@ -98,10 +125,11 @@ def write(store: TieredStore, item_id: jax.Array, data: jax.Array
           ) -> TieredStore:
     """Write-through: update the slow tier, and the fast slot if resident."""
     item_id = jnp.asarray(item_id, jnp.int32)
-    slow = _write_item(store.slow, item_id, data)
+    slow = _write_item(store.slow, item_id, data, tier="slow")
     resident = store.policy.tags == item_id
     slot = jnp.argmax(resident)
-    fast = jnp.where(resident.any(), _write_item(store.fast, slot, data),
+    fast = jnp.where(resident.any(),
+                     _write_item(store.fast, slot, data, tier="fast"),
                      store.fast)
     return store._replace(slow=slow, fast=fast)
 
@@ -142,3 +170,33 @@ def write_many(store: TieredStore, item_ids: jax.Array, data: jax.Array
 def hit_rate(store: TieredStore) -> jax.Array:
     return jnp.where(store.accesses > 0,
                      store.hits / jnp.maximum(store.accesses, 1), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Movement-registry integration: the policy-mediated tier legs.  A plan
+# whose transfer sets ``policy=`` lowers to these; the serving engine's
+# suspend/resume flows are exactly such plans.
+# ---------------------------------------------------------------------------
+
+@MV.register_backend("tier_read")
+def _tier_read_backend(leg: MV.TierReadLeg, env: MV.Env) -> MV.Env:
+    # Plural env keys declare a wave, so a batch-1 fused plan (one-element
+    # resume wave) still routes through the batched scan path.
+    env = dict(env)
+    if leg.batch > 1 or "items" in env:
+        env["store"], env["data"], env["hits"] = access_many(
+            env["store"], env["items"], leg.policy)
+    else:
+        env["store"], env["data"], env["hit"] = access(
+            env["store"], env["item"], leg.policy)
+    return env
+
+
+@MV.register_backend("tier_write")
+def _tier_write_backend(leg: MV.TierWriteLeg, env: MV.Env) -> MV.Env:
+    env = dict(env)
+    if leg.batch > 1 or "items" in env:
+        env["store"] = write_many(env["store"], env["items"], env["data"])
+    else:
+        env["store"] = write(env["store"], env["item"], env["data"])
+    return env

@@ -30,7 +30,11 @@ def _flash_fwd(q, k, v, causal, window, block_q, block_k, interpret):
 
 def _flash_bwd(causal, window, block_q, block_k, interpret, res, g):
     # Backward via the jnp oracle (flash-recompute): on TPU this is where a
-    # dedicated bwd kernel slots in; numerics match the forward kernel.
+    # dedicated bwd kernel slots in.  The oracle applies the same causal +
+    # window masking as the forward kernel, and block_q/block_k are pure
+    # tiling (no semantic effect), so gradients are block-size invariant —
+    # guarded by test_kernels.py::test_flash_attention_windowed_causal_
+    # grad_equivalence and ..._grad_block_size_invariant.
     q, k, v = res
     _, vjp = jax.vjp(lambda q_, k_, v_: ref.flash_attention_ref(
         q_, k_, v_, causal=causal, window=window), q, k, v)

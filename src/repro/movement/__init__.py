@@ -1,0 +1,54 @@
+"""One movement substrate: plan -> execute for every bulk transfer.
+
+Public surface::
+
+    from repro import movement as MV
+
+    layout = MV.Layout.pages(MV.PageSpec.for_cache(cache))
+    p = MV.plan(MV.Transfer(MV.Tier("compute"), MV.Tier("slow"),
+                            layout, policy=villa_cfg), spec)
+    store = MV.execute(p, cache=cache, slot=slot,
+                       store=store, item=idx)["store"]
+    p.cost.ns_lisa, p.cost.ns_memcpy      # Table-1 pricing, system scale
+
+See :mod:`repro.movement.plan` for the lowering, DESIGN.md Sec. 8 for the
+paper mapping.
+"""
+from repro.movement.paging import PageSpec, pack_slot, unpack_into_slot
+from repro.movement.plan import (
+    HopChainLeg,
+    HostStageLeg,
+    Layout,
+    Leg,
+    MovementCost,
+    MovementPlan,
+    PackLeg,
+    PageGatherLeg,
+    PageScatterLeg,
+    TierReadLeg,
+    TierWriteLeg,
+    TileCopyLeg,
+    Tier,
+    Transfer,
+    UnpackLeg,
+    fuse,
+    plan,
+    ring_plan,
+)
+from repro.movement.registry import (
+    Env,
+    backend_kinds,
+    execute,
+    get_backend,
+    register_backend,
+)
+from repro.movement import backends as _backends  # noqa: F401  (registers)
+
+__all__ = [
+    "PageSpec", "pack_slot", "unpack_into_slot",
+    "Tier", "Layout", "Transfer", "Leg", "MovementCost", "MovementPlan",
+    "PackLeg", "UnpackLeg", "PageGatherLeg", "PageScatterLeg",
+    "TierReadLeg", "TierWriteLeg", "TileCopyLeg", "HopChainLeg",
+    "HostStageLeg", "plan", "ring_plan", "fuse",
+    "Env", "register_backend", "get_backend", "backend_kinds", "execute",
+]

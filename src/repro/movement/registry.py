@@ -1,0 +1,78 @@
+"""Backend registry + executor for :class:`~repro.movement.plan.MovementPlan`.
+
+This extends PR 1's ``CopyMechanism`` registry pattern (objects in a
+registry, not string if/elif chains) from the DRAM *model* up to the real
+array layer: each leg kind names a backend callable that performs the
+movement on real arrays.  Default backends (:mod:`repro.movement.backends`)
+cover pack/unpack staging, Pallas page gather/scatter, VMEM tile copies,
+mesh hop chains and host staging; :mod:`repro.core.lisa.villa_cache`
+registers the VILLA policy-mediated tier legs on import.
+
+A backend has signature ``fn(leg, env) -> env``: ``env`` is a dict of named
+operands (traced arrays are fine — execute composes under an enclosing
+``jax.jit``), and each leg reads the keys it needs and returns an updated
+env.  Conventional keys:
+
+  ``data``      the payload moving through the legs
+  ``cache``     a batched pytree (pack/unpack source/target), ``slot(s)``
+  ``store``     a TieredStore (tier legs), ``item(s)`` its indices
+  ``pool``      a page pool array, ``table`` its page table
+  ``shardings`` optional placement for host->device staging
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+from repro.movement.plan import Leg, MovementPlan
+
+Env = Dict[str, Any]
+Backend = Callable[[Leg, Env], Env]
+
+_BACKENDS: Dict[str, Backend] = {}
+
+
+def register_backend(kind: str) -> Callable[[Backend], Backend]:
+    """Decorator: register the movement backend for one leg kind.
+
+    Re-registering the SAME backend (same module/qualname — a module
+    reload) replaces it silently, so registering modules stay
+    reload-safe; a different function under a taken kind still raises.
+    """
+    def deco(fn: Backend) -> Backend:
+        old = _BACKENDS.get(kind)
+        if old is not None and (old.__module__, old.__qualname__) != (
+                fn.__module__, fn.__qualname__):
+            raise ValueError(f"movement backend {kind!r} already registered "
+                             f"by {old.__module__}.{old.__qualname__}")
+        _BACKENDS[kind] = fn
+        return fn
+    return deco
+
+
+def get_backend(kind: str) -> Backend:
+    try:
+        return _BACKENDS[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown movement backend {kind!r} (known: "
+            f"{sorted(_BACKENDS)}); import the module that registers it "
+            f"(tier legs live in repro.core.lisa.villa_cache)") from None
+
+
+def backend_kinds() -> Tuple[str, ...]:
+    return tuple(sorted(_BACKENDS))
+
+
+def execute(plan: MovementPlan, env: Env | None = None, **operands) -> Env:
+    """Run every leg of ``plan`` through its registered backend.
+
+    Traceable: called inside ``jax.jit`` this stages pure jax ops, so a
+    whole plan (e.g. a batched resume wave) lowers to ONE dispatch.
+    Returns the final env; callers read their result keys (``data``,
+    ``cache``, ``store``, ``pool``, ...) from it.
+    """
+    env = dict(env or {})
+    env.update(operands)
+    for leg in plan.legs:
+        env = get_backend(leg.kind)(leg, env)
+    return env

@@ -8,28 +8,29 @@ paper's "move data over wide internal paths, not the narrow channel"):
     and the active mask are traced data (``models/lm.decode_step_batched``),
     greedy sampling runs in-graph, and the KV cache is donated so XLA updates
     it in place instead of copying it every token.
-  * suspend / resume — KV snapshots live as dtype-preserving uint8 *pages*
-    (``serve/paged_store``) in a VILLA tiered store; movement runs through the
-    Pallas RBM kernels (``villa_gather`` / ``villa_scatter``, scalar-prefetched
-    page tables, LIP double buffering).  Hot sessions (frequent resumes: chat
-    turns, shared prefixes) are promoted to the fast tier by the paper's exact
-    policy.  ``resume_many`` drains a whole wave of resumes in one dispatch
-    (``villa_cache.access_many``).
+  * suspend / resume — planned movement: each is a ``movement.Transfer``
+    between the compute tier and the VILLA slow tier, lowered once at engine
+    construction by ``movement.plan`` into pack + tier legs and executed
+    inside the jitted bodies by ``movement.execute``.  Snapshots live as
+    dtype-preserving uint8 *pages* (``serve/paged_store``); the tier legs
+    run the paper's exact promotion policy and move pages through the Pallas
+    RBM kernels (scalar-prefetched page tables, LIP double buffering).
+    ``resume_many`` executes ONE fused wave plan (``movement.fuse``) — a
+    whole burst of resumes is still a single dispatch.
   * prefill — lengths are bucketed (next power of two) where the architecture
     permits, bounding compilation count; pads carry sentinel positions so
     they stay causally invisible forever.
 
-The movement is also *accounted*: the engine takes a
-:class:`~repro.core.dram.spec.DramSpec` and, per suspend/resume, charges the
-modeled cost of moving the KV snapshot under the ``lisa`` vs ``memcpy``
-mechanisms from the registry — the serving-level view of Table 1's gap.
+The movement is also *accounted*: every plan carries a ``MovementCost``
+priced by the engine's :class:`~repro.core.dram.spec.DramSpec` under the
+``lisa`` vs ``memcpy`` mechanisms, and each suspend/resume charges its
+plan's cost — the serving-level view of Table 1's gap.
 
 Pure-JAX state; greedy sampling; CPU-runnable at reduced configs.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 import warnings
 from functools import partial
 from typing import Dict, List, Optional, Sequence
@@ -38,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import movement as MV
 from repro.configs.base import ModelConfig
 from repro.core.dram.spec import DDR3_1600, DramSpec
 from repro.core.dram.villa import VillaConfig
@@ -119,18 +121,25 @@ class Engine:
         self.session_tok: Dict[int, int] = {}       # uid -> last emitted token
         self.store_uid: Dict[int, int] = {}         # store index -> live uid
         self._suspend = jax.jit(self._suspend_fn, donate_argnums=(1,))
+        self._suspend_many = jax.jit(self._suspend_many_fn,
+                                     donate_argnums=(1,))
         self._resume = jax.jit(self._resume_fn, donate_argnums=(0, 1))
         self._resume_many = jax.jit(self._resume_many_fn,
                                     donate_argnums=(0, 1))
 
-        # Modeled cost of moving one KV snapshot (true bytes -> DRAM rows),
-        # under the in-DRAM hop chain vs the channel path.
+        # Every suspend/resume is a planned movement between the compute
+        # tier and the VILLA slow tier, lowered ONCE here against the spec;
+        # the jitted bodies execute the plans, and each call charges its
+        # plan's modeled MovementCost (lisa hop chain vs channel memcpy).
+        _layout = MV.Layout.pages(self.page_spec)
+        self.plan_suspend = MV.plan(MV.Transfer(
+            MV.Tier("compute"), MV.Tier("slow"), _layout,
+            policy=self.villa_cfg), spec)
+        self.plan_resume = MV.plan(MV.Transfer(
+            MV.Tier("slow"), MV.Tier("compute"), _layout,
+            policy=self.villa_cfg), spec)
+        self._wave_plans: Dict[tuple, MV.MovementPlan] = {}
         self.snapshot_bytes = self.page_spec.total_bytes
-        snapshot_rows = max(1, math.ceil(self.snapshot_bytes / spec.row_bytes))
-        self._move_ns = {
-            "lisa": snapshot_rows * spec.copy_latency("lisa", 1),
-            "memcpy": snapshot_rows * spec.copy_latency("memcpy"),
-        }
         self.stats = {"decoded_tokens": 0, "suspends": 0, "resumes": 0,
                       "decode_dispatches": 0, "host_transfers": 0,
                       "evictions": 0,
@@ -153,23 +162,32 @@ class Engine:
         return nxt, cache
 
     def _suspend_fn(self, cache, store, slot, idx):
-        pages = PS.pack_slot(self.page_spec, cache, slot)
-        return VC.write(store, idx, pages)
+        return MV.execute(self.plan_suspend, cache=cache, slot=slot,
+                          store=store, item=idx)["store"]
 
     def _resume_fn(self, cache, store, slot, idx):
-        store, pages, _hit = VC.access(store, idx, self.villa_cfg)
-        cache = PS.unpack_into_slot(self.page_spec, cache, slot, pages)
-        return cache, store
+        env = MV.execute(self.plan_resume, cache=cache, store=store,
+                         slot=slot, item=idx)
+        return env["cache"], env["store"]
+
+    def _wave_plan(self, single: MV.MovementPlan, k: int) -> MV.MovementPlan:
+        """A whole wave as ONE fused plan (k identical transfers -> one
+        vmapped pack / batched tier access / scanned unpack: one
+        dispatch)."""
+        key = (id(single), k)
+        if key not in self._wave_plans:
+            self._wave_plans[key] = MV.fuse([single] * k)
+        return self._wave_plans[key]
+
+    def _suspend_many_fn(self, cache, store, slots, idxs):
+        return MV.execute(self._wave_plan(self.plan_suspend, slots.shape[0]),
+                          cache=cache, slots=slots, store=store,
+                          items=idxs)["store"]
 
     def _resume_many_fn(self, cache, store, slots, idxs):
-        store, pages, _hits = VC.access_many(store, idxs, self.villa_cfg)
-
-        def body(c, xs):
-            s, pg = xs
-            return PS.unpack_into_slot(self.page_spec, c, s, pg), None
-
-        cache, _ = jax.lax.scan(body, cache, (slots, pages))
-        return cache, store
+        env = MV.execute(self._wave_plan(self.plan_resume, slots.shape[0]),
+                         cache=cache, store=store, slots=slots, items=idxs)
+        return env["cache"], env["store"]
 
     # ---- scheduling -------------------------------------------------------
     def free_slots(self) -> List[int]:
@@ -231,17 +249,25 @@ class Engine:
             self.active[s].generated.append(int(nxt[s]))
             self.pos[s] += 1
             self.stats["decoded_tokens"] += 1
-        for s, req in list(self.active.items()):
-            if len(req.generated) >= req.max_new:
-                self.suspend(s)
+        done = [s for s, req in self.active.items()
+                if len(req.generated) >= req.max_new]
+        if len(done) == 1:
+            self.suspend(done[0])
+        elif done:                        # burst completion: ONE fused wave
+            self.suspend_many(done)
 
     def step_unbatched(self) -> None:
-        """Pre-PR reference path (kept for A/B benchmarking and migration):
+        """A/B-ONLY path — never serve production traffic with it.  Kept
+        solely so benchmarks can compare against the pre-batching design:
         splits slots into uniform-position groups — one dispatch per group
         plus one sync per slot.  Equivalent to :meth:`step` ONLY at uniform
         positions: with ragged positions each group's cache write lands in
         every batch row and corrupts the other slots (the latent bug the
-        active-mask path fixes) — do not serve ragged batches with it."""
+        active-mask path fixes).  The drift guard for the real path is
+        tests/test_decode_consistency.py::
+        test_batched_ragged_decode_parity_with_unbatched, which pins
+        ``decode_step_batched`` at ragged positions to per-request
+        ``decode_step`` truth (tokens AND cache state)."""
         if not self.active:
             return
         if self._decode_legacy is None:
@@ -279,18 +305,41 @@ class Engine:
         self.store_uid[idx] = uid
         return idx
 
+    def _suspend_bookkeep(self, slot: int) -> int:
+        """Pop the request off ``slot`` and record its session state;
+        returns the store index its snapshot lands in."""
+        req = self.active.pop(slot)
+        idx = self._store_index(req.uid)
+        self.session_pos[req.uid] = int(self.pos[slot])
+        self.session_tok[req.uid] = req.generated[-1] if req.generated else 0
+        self.stats["suspends"] += 1
+        return idx
+
     def suspend(self, slot: int) -> None:
         if slot not in self.active:
             raise ValueError(f"slot {slot} has no active request to suspend "
                              f"(active slots: {sorted(self.active)})")
-        req = self.active.pop(slot)
-        idx = self._store_index(req.uid)
+        idx = self._suspend_bookkeep(slot)
         self.sessions = _quiet(self._suspend, self.cache, self.sessions,
                                jnp.int32(slot), jnp.int32(idx))
-        self.session_pos[req.uid] = int(self.pos[slot])
-        self.session_tok[req.uid] = req.generated[-1] if req.generated else 0
-        self.stats["suspends"] += 1
-        self._charge_move()
+        self._charge_move(self.plan_suspend)
+
+    def suspend_many(self, slots: Sequence[int]) -> None:
+        """Suspend a wave of slots in ONE dispatch (the dual of
+        :meth:`resume_many`): one vmapped page pack + one batched
+        write-through through the fused suspend plan."""
+        if not slots:
+            return
+        bad = [s for s in slots if s not in self.active]
+        if bad or len(set(slots)) != len(slots):
+            raise ValueError(f"suspend wave needs distinct active slots "
+                             f"(got {list(slots)}; active: "
+                             f"{sorted(self.active)})")
+        idxs = [self._suspend_bookkeep(s) for s in slots]
+        self.sessions = _quiet(self._suspend_many, self.cache, self.sessions,
+                               jnp.asarray(slots, jnp.int32),
+                               jnp.asarray(idxs, jnp.int32))
+        self._charge_move(self._wave_plan(self.plan_suspend, len(slots)))
 
     def _check_resumable(self, uid: int) -> int:
         for slot, r in self.active.items():
@@ -322,7 +371,7 @@ class Engine:
             jnp.int32(idx))
         self._activate(slot, uid, extra_new)
         self.stats["resumes"] += 1
-        self._charge_move()
+        self._charge_move(self.plan_resume)
         return slot
 
     def resume_many(self, uids: Sequence[int], extra_new: int) -> List[int]:
@@ -344,15 +393,15 @@ class Engine:
         for slot, uid in zip(slots, uids):
             self._activate(slot, uid, extra_new)
             self.stats["resumes"] += 1
-            self._charge_move()
+        self._charge_move(self._wave_plan(self.plan_resume, len(uids)))
         return slots
 
-    def _charge_move(self) -> None:
-        """Account one whole-snapshot movement under both mechanisms: the
-        running totals expose the modeled LISA-vs-memcpy gap at serving
+    def _charge_move(self, plan: MV.MovementPlan) -> None:
+        """Account one executed plan under both mechanisms: the running
+        totals expose the modeled LISA-vs-memcpy gap at serving
         granularity."""
-        self.stats["modeled_move_ns_lisa"] += self._move_ns["lisa"]
-        self.stats["modeled_move_ns_memcpy"] += self._move_ns["memcpy"]
+        self.stats["modeled_move_ns_lisa"] += plan.cost.ns_lisa
+        self.stats["modeled_move_ns_memcpy"] += plan.cost.ns_memcpy
 
     def hit_rate(self) -> float:
         return float(VC.hit_rate(self.sessions))
@@ -364,6 +413,7 @@ class Engine:
         out = {}
         for name, fn in [("decode", self._decode), ("prefill", self._prefill),
                          ("suspend", self._suspend), ("resume", self._resume),
+                         ("suspend_many", self._suspend_many),
                          ("resume_many", self._resume_many)]:
             out[name] = fn._cache_size() if hasattr(fn, "_cache_size") else -1
         return out

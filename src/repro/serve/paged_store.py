@@ -1,109 +1,30 @@
 """Paged, dtype-preserving KV-snapshot layout for the serving engine.
 
 A suspended session's KV cache is stored as fixed-size *pages* of raw bytes
-(default 8x128 = 1 KB — one DRAM row in the paper's geometry).  Every cache
-leaf is bitcast to uint8, so int8 KV stays 1 byte/elem and bf16 stays 2 — no
-float32 upcast anywhere on the suspend/resume path, and restore is bit-exact
-by construction.
+(default 8x128 = 1 KB — one DRAM row in the paper's geometry), bit-exact
+and without any float32 upcast.  The staging itself (``PageSpec`` /
+``pack_slot`` / ``unpack_into_slot``) is the movement substrate's paging
+layer (:mod:`repro.movement.paging`) — this module is the serving-layer
+view of it plus the session-store constructor.
 
 The page pool lives in a :class:`~repro.core.lisa.villa_cache.TieredStore`
-whose items are page blocks, so tier movement (suspend, resume, hot-tier
-promotion) runs through the Pallas RBM kernels ``villa_gather`` /
-``villa_scatter``: a scalar-prefetched page table drives the grid, and the
-pipeline keeps the next page's DMA in flight while the current one stores
-(LISA-LIP double buffering, DESIGN.md Sec. 5.4).
-
-Everything here is shape-static and traceable: ``pack_slot`` /
-``unpack_into_slot`` take a *traced* slot index, so the engine's suspend and
-resume are each ONE jitted dispatch with donated buffers.
+whose items are page blocks; all tier movement (suspend, resume, hot-tier
+promotion) lowers through ``movement.plan`` to page gather/scatter legs run
+by the Pallas RBM kernels (scalar-prefetched page tables, LIP double
+buffering).  The engine's suspend and resume are each ONE jitted dispatch
+with donated buffers: every function here takes *traced* slot indices.
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-from typing import Any, List, Tuple
-
-import jax
 import jax.numpy as jnp
 
 from repro.core.dram.villa import VillaConfig
 from repro.core.lisa import villa_cache as VC
-
-
-def _to_bytes(x: jax.Array) -> jax.Array:
-    """Bitcast any leaf to a flat uint8 vector (dtype-preserving, bit-exact)."""
-    return jax.lax.bitcast_convert_type(x, jnp.uint8).reshape(-1)
-
-
-def _from_bytes(b: jax.Array, shape: Tuple[int, ...], dtype) -> jax.Array:
-    itemsize = jnp.dtype(dtype).itemsize
-    if itemsize == 1:
-        return jax.lax.bitcast_convert_type(b.reshape(shape), dtype)
-    return jax.lax.bitcast_convert_type(b.reshape(shape + (itemsize,)), dtype)
-
-
-@dataclasses.dataclass(frozen=True)
-class PageSpec:
-    """Static byte layout of one session snapshot (one cache slot slice)."""
-    leaf_shapes: Tuple[Tuple[int, ...], ...]
-    leaf_dtypes: Tuple[Any, ...]
-    leaf_offsets: Tuple[int, ...]       # byte offset of each leaf
-    total_bytes: int                    # sum of leaf bytes (true, not upcast)
-    page_rows: int = 8
-    page_lanes: int = 128
-
-    @property
-    def page_bytes(self) -> int:
-        return self.page_rows * self.page_lanes
-
-    @property
-    def n_pages(self) -> int:
-        return -(-self.total_bytes // self.page_bytes)
-
-    @classmethod
-    def for_cache(cls, cache, *, page_rows: int = 8,
-                  page_lanes: int = 128) -> "PageSpec":
-        """Layout for one slot of a batched cache (leaves (reps, slots, ...))."""
-        leaves = jax.tree_util.tree_leaves(cache)
-        shapes, dtypes, offsets = [], [], []
-        off = 0
-        for leaf in leaves:
-            shape = leaf.shape[:1] + leaf.shape[2:]      # drop the slot dim
-            shapes.append(shape)
-            dtypes.append(leaf.dtype)
-            offsets.append(off)
-            off += math.prod(shape) * leaf.dtype.itemsize
-        return cls(tuple(shapes), tuple(dtypes), tuple(offsets), off,
-                   page_rows, page_lanes)
-
-
-def pack_slot(spec: PageSpec, cache, slot) -> jax.Array:
-    """Snapshot cache[:, slot] into (n_pages, P, d) uint8 pages (traceable)."""
-    leaves = jax.tree_util.tree_leaves(cache)
-    parts: List[jax.Array] = []
-    for leaf in leaves:
-        one = jax.lax.dynamic_index_in_dim(leaf, slot, axis=1, keepdims=False)
-        parts.append(_to_bytes(one))
-    flat = jnp.concatenate(parts)
-    pad = spec.n_pages * spec.page_bytes - spec.total_bytes
-    if pad:
-        flat = jnp.pad(flat, (0, pad))
-    return flat.reshape(spec.n_pages, spec.page_rows, spec.page_lanes)
-
-
-def unpack_into_slot(spec: PageSpec, cache, slot, pages: jax.Array):
-    """Restore pages into cache[:, slot]; inverse of :func:`pack_slot`."""
-    flat = pages.reshape(-1)
-    leaves, treedef = jax.tree_util.tree_flatten(cache)
-    out = []
-    for leaf, shape, dtype, off in zip(leaves, spec.leaf_shapes,
-                                       spec.leaf_dtypes, spec.leaf_offsets):
-        nbytes = math.prod(shape) * jnp.dtype(dtype).itemsize
-        piece = _from_bytes(jax.lax.slice(flat, (off,), (off + nbytes,)),
-                            shape, dtype)
-        out.append(jax.lax.dynamic_update_slice_in_dim(
-            leaf, jnp.expand_dims(piece, 1), slot, axis=1))
-    return jax.tree_util.tree_unflatten(treedef, out)
+from repro.movement.paging import (  # noqa: F401  (serving-layer re-exports)
+    PageSpec,
+    pack_slot,
+    unpack_into_slot,
+)
 
 
 def make_session_store(spec: PageSpec, n_sessions: int,

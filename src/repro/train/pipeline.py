@@ -1,10 +1,13 @@
 """Pipeline parallelism over a mesh axis via LISA hop transfers (GPipe).
 
-Stage-to-stage activation movement is a single neighbor hop
-(`jax.lax.ppermute` shift = the RBM primitive), exactly the paper's
-adjacent-subarray path: stage s computes a microbatch, its output hops one
-link to stage s+1 while stage s starts the next microbatch — the classic
-GPipe schedule with n_stages + n_micro - 1 slots.
+Stage-to-stage activation movement is a planned movement: a stage->stage
+``movement.Transfer`` lowers to a single neighbor hop-chain leg (the
+``ppermute`` shift = the RBM primitive, executed by the ``hop_chain``
+backend), exactly the paper's adjacent-subarray path: stage s computes a
+microbatch, its output hops one link to stage s+1 while stage s starts the
+next microbatch — the classic GPipe schedule with n_stages + n_micro - 1
+slots.  The plan's ``MovementCost`` prices each hop with the ICI analogue
+of Table 1's linear model.
 
 Implementation: `shard_map` over the pipeline axis; every device holds its
 stage's parameters (stacked layer group), the schedule runs a fori_loop over
@@ -20,6 +23,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import movement as MV
 
 
 def gpipe(stage_fn: Callable, axis_name: str):
@@ -38,10 +43,14 @@ def gpipe(stage_fn: Callable, axis_name: str):
         idx = jax.lax.axis_index(axis_name)
         n_micro = micro_in.shape[0]
         n_slots = n_stages + n_micro - 1
-        fwd = [(i, (i + 1) % n_stages) for i in range(n_stages)]
 
         micro_in = jax.lax.pvary(micro_in, (axis_name,))
         out_shape = jax.eval_shape(stage_fn, stage_params, micro_in[0])
+        # Stage-to-stage hop as a movement plan: one neighbor-shift
+        # hop-chain leg, planned once per activation shape at trace time.
+        hop_plan = MV.plan(MV.Transfer(
+            MV.Tier("stage", axis=axis_name), MV.Tier("stage", axis=axis_name),
+            MV.Layout.dense(out_shape.shape, out_shape.dtype)))
         outputs = jnp.zeros((n_micro,) + out_shape.shape, out_shape.dtype)
         outputs = jax.lax.pvary(outputs, (axis_name,))
         carry_in = jnp.zeros_like(micro_in[0])
@@ -55,7 +64,7 @@ def gpipe(stage_fn: Callable, axis_name: str):
             y = stage_fn(stage_params, x)
             y = jnp.where(active, y, jnp.zeros_like(y))
             # RBM hop: activations move one link toward the next stage
-            carry_next = jax.lax.ppermute(y, axis_name, fwd)
+            carry_next = MV.execute(hop_plan, data=y)["data"]
             done = active & (idx == n_stages - 1)
             outputs = jax.lax.cond(
                 done,

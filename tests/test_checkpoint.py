@@ -26,6 +26,20 @@ def test_roundtrip(tmp_path):
         assert np.allclose(np.asarray(a), np.asarray(b))
 
 
+def test_roundtrip_with_scalar_leaves(tmp_path):
+    """Trees may carry plain Python / numpy scalar leaves (step counters,
+    hyperparameters): staging must size and move them, not crash
+    (regression for the movement-planned host staging)."""
+    tree = {"w": jnp.ones((2, 3)), "step": 7, "lr": np.float64(0.1)}
+    ckpt.save(tree, str(tmp_path), 1)
+    cost = ckpt.last_move_cost()
+    assert cost is not None and cost.bytes >= 6 * 4 + 8 + 8
+    back = ckpt.restore(tree, str(tmp_path))
+    assert int(back["step"]) == 7
+    assert float(back["lr"]) == pytest.approx(0.1)
+    assert np.allclose(np.asarray(back["w"]), 1.0)
+
+
 def test_gc_keeps_last_k(tmp_path):
     state = _state()
     for s in (1, 2, 3, 4, 5):

@@ -74,6 +74,56 @@ def test_prefill_then_decode_gqa():
     assert _rel_err(dec, full_logits[:, 5:]) < 1e-4
 
 
+def test_batched_ragged_decode_parity_with_unbatched():
+    """Drift guard for the serving hot path: at RAGGED slot positions,
+    ``decode_step_batched`` must produce exactly the tokens and cache state
+    that per-request ``decode_step`` produces on isolated single-slot
+    caches.  (The engine's ``step_unbatched`` grouped path is A/B-only and
+    NOT expected to match at ragged positions — this pins the batched path
+    to the per-request truth instead.)"""
+    cfg = get_reduced("tinyllama-1.1b")
+    params = lm.init_lm(cfg, jax.random.key(10))
+    lens = (5, 9, 13)
+    max_len = 32
+
+    singles = []          # (next_token, single-slot cache, position)
+    for i, ln in enumerate(lens):
+        toks = jax.random.randint(jax.random.key(20 + i), (1, ln), 0,
+                                  cfg.vocab_size)
+        c1 = lm.init_cache(cfg, 1, max_len=max_len)
+        lg, c1 = lm.prefill(cfg, params, toks, c1)
+        singles.append((int(jnp.argmax(lg[0, -1])), c1, ln))
+
+    # assemble the batched cache: slot i <- single cache i's slot 0
+    cache = lm.init_cache(cfg, len(lens), max_len=max_len)
+    for i, (_, c1, _) in enumerate(singles):
+        cache = jax.tree.map(
+            lambda full, one, i=i: jax.lax.dynamic_update_slice_in_dim(
+                full, one.astype(full.dtype), i, axis=1), cache, c1)
+
+    toks = jnp.asarray([t for t, _, _ in singles], jnp.int32)
+    pos = jnp.asarray(lens, jnp.int32)
+    active = jnp.ones(len(lens), bool)
+    for _ in range(3):                       # stays ragged every step
+        nxt_b, cache = lm.decode_step_batched(cfg, params, cache, toks, pos,
+                                              active)
+        nxt_u, new_singles = [], []
+        for (t, c1, p) in singles:
+            lg, c1 = lm.decode_step(cfg, params, c1, jnp.asarray([[t]]),
+                                    jnp.int32(p))
+            nxt_u.append(int(jnp.argmax(lg[0, 0])))
+            new_singles.append((nxt_u[-1], c1, p + 1))
+        singles = new_singles
+        assert [int(t) for t in nxt_b] == nxt_u      # identical tokens
+        for i, (_, c1, _) in enumerate(singles):     # identical cache state
+            for bl, ul in zip(jax.tree.leaves(cache), jax.tree.leaves(c1)):
+                assert bl.dtype == ul.dtype
+                assert jnp.allclose(bl[:, i].astype(jnp.float32),
+                                    ul[:, 0].astype(jnp.float32),
+                                    atol=1e-5, rtol=1e-5)
+        toks, pos = nxt_b, pos + 1
+
+
 def test_sliding_window_ring_cache_long_decode():
     """gemma3-style window cache: decode far past the window size stays
     consistent with the full forward (ring buffer overwrites oldest)."""

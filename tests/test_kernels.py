@@ -108,3 +108,59 @@ def test_flash_attention_grad_close_to_ref():
     gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
     for a, b in zip(gk, gr):
         assert float(jnp.abs(a - b).max()) < 5e-4
+
+
+GRAD_SWEEP = [
+    # S, T, window, block_q, block_k, dtype — ragged shapes on purpose
+    (100, 100, 24, 64, 64, jnp.float32),
+    (72, 136, 48, 64, 32, jnp.float32),
+    (96, 96, 40, 32, 64, jnp.float32),
+    (50, 70, 20, 32, 32, jnp.float32),
+    (64, 64, 16, 32, 32, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("S,T,window,bq,bk,dtype", GRAD_SWEEP)
+def test_flash_attention_windowed_causal_grad_equivalence(S, T, window, bq,
+                                                          bk, dtype):
+    """Gradient drift guard for windowed causal attention: the kernel's
+    custom VJP recomputes the backward through the jnp oracle with the SAME
+    ``causal``/``window`` masking, so for a NONLINEAR loss (where the
+    forward value feeds the cotangent) kernel gradients must match oracle
+    gradients — any forward/backward mask inconsistency (including one
+    introduced by ``block_q``/``block_k`` tiling) would surface here."""
+    q, k, v = _qkv(1, 4, 2, S, T, 32, dtype)
+
+    def loss_kernel(q, k, v):
+        o = ops.flash_attention(q, k, v, causal=True, window=window,
+                                block_q=bq, block_k=bk)
+        return (o.astype(jnp.float32) ** 2).sum()
+
+    def loss_ref(q, k, v):
+        o = ops.flash_attention_ref(q, k, v, causal=True, window=window)
+        return (o.astype(jnp.float32) ** 2).sum()
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 5e-4
+    for a, b in zip(gk, gr):
+        assert float(jnp.abs(a.astype(jnp.float32)
+                             - b.astype(jnp.float32)).max()) < tol
+
+
+def test_flash_attention_windowed_grad_block_size_invariant():
+    """block_q/block_k are a tiling choice, not semantics: windowed-causal
+    gradients must be identical (to float noise) across block sizes."""
+    q, k, v = _qkv(1, 2, 2, 96, 96, 32, jnp.float32)
+
+    def grads(bq, bk):
+        def loss(q, k, v):
+            o = ops.flash_attention(q, k, v, causal=True, window=24,
+                                    block_q=bq, block_k=bk)
+            return (o ** 2).sum()
+        return jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+
+    base = grads(96, 96)
+    for bq, bk in [(16, 16), (32, 64), (64, 32)]:
+        for a, b in zip(grads(bq, bk), base):
+            assert float(jnp.abs(a - b).max()) < 5e-5, (bq, bk)

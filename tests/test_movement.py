@@ -1,0 +1,358 @@
+"""The movement substrate: plan lowering, cost pricing, backend fidelity.
+
+Covers the satellite contract: hop counts linear in mesh distance matching
+the ``DramSpec`` mechanism pricing, bit-exact round trips for every
+registered backend on int8 / bf16 / f32 leaves, and the fused-wave and
+registry invariants the serving engine relies on.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+from _multidev import run_with_devices
+
+from repro import movement as MV
+from repro.core.dram.spec import DDR3_1600
+from repro.core.dram.villa import VillaConfig
+from repro.core.lisa import villa_cache as VC
+from repro.core.lisa.topology import (MeshTopology, hop_chain_us,
+                                      ici_dram_spec, ring_collective_us)
+
+DTYPES = [jnp.int8, jnp.bfloat16, jnp.float32]
+LAYOUT = MV.Layout.dense((64, 128), jnp.float32)
+
+
+def _rand(key, shape, dtype):
+    if np.dtype(dtype).kind in "iu":
+        return jax.random.randint(key, shape, -100, 100).astype(dtype)
+    return jax.random.normal(key, shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Plan lowering + cost model.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 16), st.integers(0, 63), st.integers(0, 63))
+def test_hop_chain_legs_linear_in_mesh_distance(n, a, b):
+    """Point-to-point stage transfers lower to ONE hop-chain leg whose hop
+    count is the topology distance, priced exactly by the ICI DramSpec's
+    ``lisa`` mechanism (Table 1's linear model re-parameterised)."""
+    src, dst = a % n, b % n
+    topo = MeshTopology(n)
+    p = MV.plan(MV.Transfer(MV.Tier("stage", index=src, axis="x"),
+                            MV.Tier("stage", index=dst, axis="x"), LAYOUT),
+                topo=topo)
+    (leg,) = p.legs
+    h = topo.hops(src, dst)
+    assert leg.hops == h
+    assert p.cost.ns_lisa == pytest.approx(
+        ici_dram_spec(LAYOUT.nbytes).copy_latency("lisa", h) if h else 0.0)
+    assert p.cost.ns_lisa == pytest.approx(hop_chain_us(h, LAYOUT.nbytes)
+                                           * 1e3)
+
+
+def test_hop_cost_increments_are_constant_per_hop():
+    topo = MeshTopology(32, wraparound=False)
+    ns = []
+    for d in range(1, 8):
+        p = MV.plan(MV.Transfer(MV.Tier("stage", index=0, axis="x"),
+                                MV.Tier("stage", index=d, axis="x"), LAYOUT),
+                    topo=topo)
+        ns.append(p.cost.ns_lisa)
+    diffs = {round(b - a, 6) for a, b in zip(ns, ns[1:])}
+    assert len(diffs) == 1                       # strictly linear in hops
+    per_hop = diffs.pop()
+    assert per_hop == pytest.approx(
+        ici_dram_spec(LAYOUT.nbytes).lisa.t_rbm_hop)
+
+
+def test_ring_plan_matches_collective_pricing():
+    """ring_scan-style collectives: (n-1) shift legs for gather/scatter,
+    2(n-1) for all-reduce, priced identically to topology's model."""
+    for kind, steps in [("all_gather", 7), ("reduce_scatter", 7),
+                        ("all_reduce", 14)]:
+        p = MV.ring_plan("x", 8, LAYOUT, kind)
+        assert len(p.legs) == steps
+        assert all(l.kind == "hop_chain" and l.hops == 1 for l in p.legs)
+        assert p.cost.ns_lisa == pytest.approx(
+            ring_collective_us(8, LAYOUT.nbytes, kind) * 1e3)
+
+
+def test_paged_tier_plan_prices_like_table1_rows():
+    """In-device paged legs price rows x copy_latency — the engine's
+    modeled suspend/resume accounting (Table 1 at serving granularity)."""
+    cache = {"k": jnp.zeros((2, 3, 7, 9), jnp.bfloat16)}
+    spec = MV.PageSpec.for_cache(cache)
+    cfg = VillaConfig(n_counters=4, n_hot=1, n_slots=1, epoch_len=4)
+    p = MV.plan(MV.Transfer(MV.Tier("compute"), MV.Tier("slow"),
+                            MV.Layout.pages(spec), policy=cfg), DDR3_1600)
+    rows = max(1, -(-spec.total_bytes // DDR3_1600.row_bytes))
+    assert [l.kind for l in p.legs] == ["pack_pages", "tier_write"]
+    assert p.cost.bytes == spec.total_bytes
+    assert p.cost.ns_lisa == pytest.approx(
+        rows * DDR3_1600.copy_latency("lisa", 1))
+    assert p.cost.ns_memcpy == pytest.approx(
+        rows * DDR3_1600.copy_latency("memcpy"))
+    assert p.cost.advantage > 1.0                # the Table 1 gap survives
+
+
+def test_fuse_scales_cost_and_batches_legs():
+    cache = {"k": jnp.zeros((2, 3, 7, 9), jnp.float32)}
+    spec = MV.PageSpec.for_cache(cache)
+    cfg = VillaConfig(n_counters=4, n_hot=1, n_slots=1, epoch_len=4)
+    single = MV.plan(MV.Transfer(MV.Tier("slow"), MV.Tier("compute"),
+                                 MV.Layout.pages(spec), policy=cfg))
+    wave = MV.fuse([single] * 3)
+    assert wave.transfer.layout.batch == 3
+    assert all(l.batch == 3 for l in wave.legs)
+    assert wave.cost.ns_lisa == pytest.approx(3 * single.cost.ns_lisa)
+    assert wave.cost.bytes == 3 * single.cost.bytes
+    with pytest.raises(ValueError, match="identical"):
+        MV.fuse([single, MV.plan(MV.Transfer(
+            MV.Tier("compute"), MV.Tier("slow"), MV.Layout.pages(spec),
+            policy=cfg))])
+
+
+def test_backend_registry_is_reload_safe():
+    """Reloading a registering module re-registers the same backends
+    without error (same module/qualname replaces); a DIFFERENT function
+    under a taken kind still raises."""
+    import importlib
+    import repro.core.lisa.villa_cache as VCm
+    import repro.movement.backends as B
+    importlib.reload(B)
+    importlib.reload(VCm)
+    assert {"tier_read", "tier_write", "page_gather"} <= set(
+        MV.backend_kinds())
+    with pytest.raises(ValueError, match="already registered"):
+        MV.register_backend("tier_read")(lambda leg, env: env)
+
+
+def test_fuse_rejects_non_wave_legs_and_suspend_waves_fuse():
+    """fuse() refuses legs whose backends run one item per dispatch (a
+    fused raw gather would move one item while charging k); policy-staged
+    suspend plans DO fuse — a k-slot suspend wave equals k sequential
+    suspends."""
+    raw = MV.plan(MV.Transfer(MV.Tier("slow"), MV.Tier("compute"),
+                              MV.Layout.raw_pages(4, 8, 128, jnp.uint8)))
+    with pytest.raises(ValueError, match="cannot batch"):
+        MV.fuse([raw] * 2)
+
+    cache = {"a": _rand(jax.random.key(9), (2, 3, 5, 7), jnp.float32)}
+    spec = MV.PageSpec.for_cache(cache)
+    cfg = VillaConfig(n_counters=4, n_hot=2, n_slots=2, epoch_len=4)
+    susp = MV.plan(MV.Transfer(MV.Tier("compute"), MV.Tier("slow"),
+                               MV.Layout.pages(spec), policy=cfg))
+    slots = jnp.asarray([0, 2], jnp.int32)
+    items = jnp.asarray([3, 1], jnp.int32)
+
+    st_w = VC.make_store(jnp.zeros((4, spec.n_pages, 8, 128), jnp.uint8),
+                         cfg)
+    st_w = MV.execute(MV.fuse([susp] * 2), cache=cache, slots=slots,
+                      store=st_w, items=items)["store"]
+    st_s = VC.make_store(jnp.zeros((4, spec.n_pages, 8, 128), jnp.uint8),
+                         cfg)
+    for s, i in zip(slots, items):
+        st_s = MV.execute(susp, cache=cache, slot=s, store=st_s,
+                          item=i)["store"]
+    assert (np.asarray(st_w.slow) == np.asarray(st_s.slow)).all()
+
+
+def test_unknown_lowering_and_backend_raise_clearly():
+    with pytest.raises(ValueError, match="no lowering"):
+        MV.plan(MV.Transfer(MV.Tier("host"), MV.Tier("slow"), LAYOUT))
+    with pytest.raises(ValueError, match="unknown movement backend"):
+        MV.get_backend("warp_drive")
+    # point-to-point stage plans must not guess the ring size: the priced
+    # hop count would diverge from the route lisa_copy executes
+    with pytest.raises(ValueError, match="mesh topology"):
+        MV.plan(MV.Transfer(MV.Tier("stage", index=3, axis="x"),
+                            MV.Tier("stage", index=0, axis="x"), LAYOUT))
+    # the policy decides fast-tier placement; policy transfers name slow
+    cfg = VillaConfig(n_counters=4, n_hot=1, n_slots=1, epoch_len=4)
+    with pytest.raises(ValueError, match="slow tier"):
+        MV.plan(MV.Transfer(MV.Tier("compute"), MV.Tier("fast"), LAYOUT,
+                            policy=cfg))
+    # every leg kind a plan can emit has a registered backend
+    for kind in ("pack_pages", "unpack_pages", "page_gather", "page_scatter",
+                 "tier_read", "tier_write", "tile_copy", "hop_chain",
+                 "host_stage"):
+        assert kind in MV.backend_kinds()
+
+
+# ---------------------------------------------------------------------------
+# Backend fidelity: bit-exact round trips on int8 / bf16 / f32.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_tile_copy_backend_bit_exact(dtype):
+    x = _rand(jax.random.key(0), (37, 129), dtype)
+    p = MV.plan(MV.Transfer(MV.Tier("device"), MV.Tier("device"),
+                            MV.Layout.dense(x.shape, dtype)))
+    out = MV.execute(p, data=x)["data"]
+    assert out.dtype == x.dtype
+    assert (np.asarray(out) == np.asarray(x)).all()
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_page_scatter_gather_backends_bit_exact(dtype):
+    pool = _rand(jax.random.key(1), (16, 8, 128), dtype)
+    upd = _rand(jax.random.key(2), (4, 8, 128), dtype)
+    table = jnp.asarray([3, 0, 11, 7], jnp.int32)
+    lay = MV.Layout.raw_pages(4, 8, 128, dtype)
+    wr = MV.plan(MV.Transfer(MV.Tier("compute"), MV.Tier("slow"), lay))
+    rd = MV.plan(MV.Transfer(MV.Tier("slow"), MV.Tier("compute"), lay))
+    pool2 = MV.execute(wr, pool=pool, table=table, data=upd)["pool"]
+    back = MV.execute(rd, pool=pool2, table=table)["data"]
+    assert back.dtype == dtype
+    assert (np.asarray(back) == np.asarray(upd)).all()
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_tier_promotion_plan_moves_pages_across_pools(dtype):
+    """slow->fast promotion: the gather leg reads the SOURCE pool and the
+    scatter leg writes the DESTINATION pool (distinct env keys) — the pages
+    land in the fast pool bit-exactly and the slow pool is untouched."""
+    slow = _rand(jax.random.key(8), (32, 8, 128), dtype)
+    fast = jnp.zeros((8, 8, 128), dtype)
+    p = MV.plan(MV.Transfer(MV.Tier("slow"), MV.Tier("fast"),
+                            MV.Layout.raw_pages(2, 8, 128, dtype)))
+    assert [l.kind for l in p.legs] == ["page_gather", "page_scatter"]
+    env = MV.execute(p, src_pool=slow,
+                     src_table=jnp.asarray([4, 21], jnp.int32),
+                     dst_pool=fast, dst_table=jnp.asarray([3, 0], jnp.int32))
+    out = env["dst_pool"]
+    assert (np.asarray(out[3]) == np.asarray(slow[4])).all()
+    assert (np.asarray(out[0]) == np.asarray(slow[21])).all()
+    untouched = [i for i in range(8) if i not in (0, 3)]
+    assert (np.asarray(out[jnp.asarray(untouched)]) == 0).all()
+    assert (np.asarray(env["src_pool"]) == np.asarray(slow)).all()
+    assert p.cost.bytes == 2 * 8 * 128 * np.dtype(dtype).itemsize
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_policy_tier_round_trip_bit_exact(dtype):
+    """compute -> slow -> compute through the policy-mediated tier legs
+    (pack, tier_write, tier_read, unpack): bit-exact per dtype."""
+    cache = {"a": _rand(jax.random.key(3), (2, 3, 5, 7), dtype),
+             "b": _rand(jax.random.key(4), (1, 3, 11), jnp.int32)}
+    spec = MV.PageSpec.for_cache(cache)
+    cfg = VillaConfig(n_counters=4, n_hot=2, n_slots=2, epoch_len=4)
+    store = VC.make_store(jnp.zeros((4, spec.n_pages, 8, 128), jnp.uint8),
+                          cfg)
+    lay = MV.Layout.pages(spec)
+    susp = MV.plan(MV.Transfer(MV.Tier("compute"), MV.Tier("slow"), lay,
+                               policy=cfg))
+    resu = MV.plan(MV.Transfer(MV.Tier("slow"), MV.Tier("compute"), lay,
+                               policy=cfg))
+    store = MV.execute(susp, cache=cache, slot=jnp.int32(1), store=store,
+                       item=jnp.int32(2))["store"]
+    blank = jax.tree.map(jnp.zeros_like, cache)
+    out = MV.execute(resu, cache=blank, slot=jnp.int32(1), store=store,
+                     item=jnp.int32(2))["cache"]
+    for name in cache:
+        got, want = out[name][:, 1], cache[name][:, 1]
+        assert got.dtype == want.dtype
+        assert (np.asarray(got) == np.asarray(want)).all(), name
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_host_stage_backend_round_trip_bit_exact(dtype):
+    leaves = [_rand(jax.random.key(5), (6, 9), dtype),
+              _rand(jax.random.key(6), (4,), jnp.int32), None]
+    down = MV.plan(MV.Transfer(MV.Tier("device"), MV.Tier("host"),
+                               MV.Layout.tree([l for l in leaves
+                                               if l is not None])))
+    up = MV.plan(MV.Transfer(MV.Tier("host"), MV.Tier("device"),
+                             MV.Layout.tree([l for l in leaves
+                                             if l is not None])))
+    hosted = MV.execute(down, data=leaves)["data"]
+    assert hosted[2] is None and isinstance(hosted[0], np.ndarray)
+    back = MV.execute(up, data=hosted)["data"]
+    for a, b in zip(back[:2], leaves[:2]):
+        assert a.dtype == b.dtype
+        assert (np.asarray(a) == np.asarray(b)).all()
+    # host legs price both mechanisms on the channel (no in-fabric path)
+    assert down.cost.ns_lisa == down.cost.ns_memcpy > 0
+
+
+def test_batched_tier_read_is_one_fused_wave():
+    """A fused resume wave (batch k) reads k items in one scanned dispatch
+    and matches k sequential single reads item-for-item."""
+    cfg = VillaConfig(n_counters=8, n_hot=2, n_slots=2, epoch_len=4)
+    pool = _rand(jax.random.key(7), (8, 4, 8, 128), jnp.uint8)
+    lay = MV.Layout.raw_pages(4, 8, 128, jnp.uint8)
+    single = MV.plan(MV.Transfer(MV.Tier("slow"), MV.Tier("compute"), lay,
+                                 policy=cfg))
+    assert [l.kind for l in single.legs] == ["tier_read"]  # raw: no unpack
+    wave = MV.fuse([single] * 3)
+    ids = jnp.asarray([5, 1, 5], jnp.int32)
+
+    st_b = VC.make_store(pool, cfg)
+    env = MV.execute(wave, store=st_b, items=ids)
+    st_s = VC.make_store(pool, cfg)
+    seq = []
+    for i in ids:
+        st_s, data, _ = VC.access(st_s, i, cfg)
+        seq.append(data)
+    assert (np.asarray(env["data"]) == np.asarray(jnp.stack(seq))).all()
+    assert np.array_equal(np.asarray(env["store"].policy.counters),
+                          np.asarray(st_s.policy.counters))
+
+
+HOP_CODE = r"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro import movement as MV
+from repro.core.lisa.topology import MeshTopology
+
+mesh = jax.make_mesh((4,), ("x",))
+x = jnp.arange(4 * 8, dtype=jnp.float32).reshape(4, 8)
+
+def run(plan):
+    return np.asarray(jax.jit(jax.shard_map(
+        lambda s: MV.execute(plan, data=s)["data"],
+        mesh=mesh, in_specs=P("x"), out_specs=P("x")))(x))
+
+p_copy = MV.plan(MV.Transfer(MV.Tier("stage", index=0, axis="x"),
+                             MV.Tier("stage", index=2, axis="x"),
+                             MV.Layout.dense((8,), jnp.float32)),
+                 topo=MeshTopology(4))
+assert p_copy.legs[0].hops == 2
+want = np.asarray(x).copy()
+want[2] = np.asarray(x)[0]              # dst holds src's shard
+assert (run(p_copy) == want).all()
+
+# ring topology: 3 -> 0 prices ONE hop and executes over the wrap link
+p_wrap = MV.plan(MV.Transfer(MV.Tier("stage", index=3, axis="x"),
+                             MV.Tier("stage", index=0, axis="x"),
+                             MV.Layout.dense((8,), jnp.float32)),
+                 topo=MeshTopology(4))
+assert p_wrap.legs[0].hops == 1 and p_wrap.legs[0].wraparound
+want = np.asarray(x).copy()
+want[0] = np.asarray(x)[3]
+assert (run(p_wrap) == want).all()
+
+# linear topology (no wrap links): 3 -> 0 prices THREE hops and the chain
+# walks backward — priced route == executed route
+p_lin = MV.plan(MV.Transfer(MV.Tier("stage", index=3, axis="x"),
+                            MV.Tier("stage", index=0, axis="x"),
+                            MV.Layout.dense((8,), jnp.float32)),
+                topo=MeshTopology(4, wraparound=False))
+assert p_lin.legs[0].hops == 3 and not p_lin.legs[0].wraparound
+assert (run(p_lin) == want).all()
+assert p_lin.cost.ns_lisa == 3 * p_wrap.cost.ns_lisa
+
+p_shift = MV.plan(MV.Transfer(MV.Tier("stage", axis="x"),
+                              MV.Tier("stage", axis="x"),
+                              MV.Layout.dense((8,), jnp.float32)))
+assert (run(p_shift) == np.roll(np.asarray(x), 1, axis=0)).all()
+print("HOP_OK")
+"""
+
+
+def test_hop_chain_backend_moves_shards_on_mesh():
+    out = run_with_devices(HOP_CODE, 4)
+    assert "HOP_OK" in out

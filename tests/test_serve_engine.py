@@ -287,6 +287,76 @@ def test_step_unbatched_reference_path_and_ragged_fix(setup):
     assert toks_old != refs                     # the corruption being fixed
 
 
+def test_suspend_many_wave_matches_sequential(setup):
+    """A burst of completions suspends in ONE fused wave (step() routes
+    through suspend_many): session state, later resumed tokens, and the
+    modeled movement charge all match per-slot sequential suspends."""
+    cfg, params = setup
+    rng = np.random.default_rng(13)
+    prompts = {uid: rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+               for uid in range(3)}
+
+    def finish(eng):
+        toks = {}
+        for uid in prompts:                  # resume + decode to completion
+            slot = eng.resume(uid, extra_new=3)
+            toks[uid] = eng.active[slot]
+        while eng.active:
+            eng.step()
+        return {uid: r.generated for uid, r in toks.items()}
+
+    # wave path: same-length prompts all complete on the same step, so
+    # step() suspends the whole burst through suspend_many
+    eng_w = Engine(cfg, params, slots=3, max_len=96, n_sessions=8)
+    for uid, p in prompts.items():
+        eng_w.submit(Request(uid=uid, prompt=p, max_new=3))
+    while eng_w.active:
+        eng_w.step()
+    assert eng_w.stats["suspends"] == 3
+    assert eng_w.compile_counts()["suspend_many"] in (1, -1)
+    assert eng_w.compile_counts()["suspend"] in (0, -1)   # wave, not 3 calls
+
+    # sequential reference: stop at the same position, suspend one by one
+    eng_s = Engine(cfg, params, slots=3, max_len=96, n_sessions=8)
+    for uid, p in prompts.items():
+        eng_s.submit(Request(uid=uid, prompt=p, max_new=10**9))
+    eng_s.step()
+    eng_s.step()                             # 3 generated tokens, like above
+    for s in sorted(eng_s.active):
+        eng_s.suspend(s)
+    assert eng_w.session_pos == eng_s.session_pos
+    assert eng_w.session_tok == eng_s.session_tok
+    # fusion is cost-transparent: wave charge == sum of single charges
+    assert eng_w.stats["modeled_move_ns_lisa"] == pytest.approx(
+        eng_s.stats["modeled_move_ns_lisa"])
+    assert finish(eng_w) == finish(eng_s)    # resumed decode identical
+
+
+def test_resume_many_single_element_wave(setup):
+    """A wave of exactly one resume is valid and equals a plain resume
+    (regression: the k=1 fused plan must still take the batched env path)."""
+    cfg, params = setup
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+
+    def serve(batched):
+        eng = Engine(cfg, params, slots=2, max_len=96, n_sessions=8)
+        eng.submit(Request(uid=0, prompt=prompt, max_new=3))
+        while eng.active:
+            eng.step()
+        slots = (eng.resume_many([0], extra_new=3) if batched
+                 else [eng.resume(0, extra_new=3)])
+        req = eng.active[slots[0]]
+        while eng.active:
+            eng.step()
+        return req.generated, eng.stats["modeled_move_ns_lisa"]
+
+    toks_wave, ns_wave = serve(True)
+    toks_one, ns_one = serve(False)
+    assert toks_wave == toks_one
+    assert ns_wave == ns_one                   # wave of 1 charges like 1
+
+
 def test_villa_hit_rate_with_hot_sessions(setup):
     cfg, params = setup
     rng = np.random.default_rng(3)
