@@ -312,6 +312,24 @@ def bench_serve_throughput(out_path="BENCH_serve.json"):
     dt_mv = time.perf_counter() - t0
     gbps = 2 * n_moves * eng.snapshot_bytes / dt_mv / 1e9
 
+    # fused waves: a burst of equal-length requests completes on one step
+    # (ONE suspend_many dispatch), then the whole burst resumes in ONE
+    # resume_many dispatch — the compile counts pin both waves to a single
+    # compilation (pre-fix this bench never drove a wave, so the recorded
+    # resume_many count was a vacuous 0).
+    eng_w = Engine(cfg, params, slots=4, max_len=96, n_sessions=16)
+    for i in range(4):
+        eng_w.submit(Request(uid=i, prompt=prompts[0], max_new=3))
+    while eng_w.active:
+        eng_w.step()                     # burst completion: one fused wave
+    assert eng_w.stats["suspends"] == 4, eng_w.stats
+    eng_w.resume_many([0, 1, 2, 3], extra_new=2)     # one fused resume wave
+    while eng_w.active:
+        eng_w.step()
+    wave_cc = eng_w.compile_counts()
+    assert wave_cc["suspend_many"] in (1, -1), wave_cc
+    assert wave_cc["resume_many"] in (1, -1), wave_cc
+
     bench = {
         "decode_tokens_per_s": round(tps_new, 1),
         "legacy_tokens_per_s": round(tps_old, 1),
@@ -323,10 +341,16 @@ def bench_serve_throughput(out_path="BENCH_serve.json"):
         "suspend_resume_gbps": round(gbps, 4),
         "snapshot_bytes": eng.snapshot_bytes,
         # decode/prefill from the throughput engine, suspend/resume from the
-        # bandwidth engine (the one that exercised those paths)
+        # bandwidth engine, the fused waves from the wave engine (each from
+        # the engine that exercised that path)
         "compile_counts": {**eng_new.compile_counts(),
                            "suspend": eng.compile_counts()["suspend"],
-                           "resume": eng.compile_counts()["resume"]},
+                           "resume": eng.compile_counts()["resume"],
+                           "suspend_many": wave_cc["suspend_many"],
+                           "resume_many": wave_cc["resume_many"]},
+        "wave": {"suspend_wave_sessions": 4, "resume_wave_sessions": 4,
+                 "suspend_many_compiles": wave_cc["suspend_many"],
+                 "resume_many_compiles": wave_cc["resume_many"]},
         "config": {"arch": "tinyllama-1.1b-reduced", "slots": 4,
                    "max_len": 96, "steps": n_steps,
                    "prompt_lens": [len(p) for p in prompts]},
@@ -341,6 +365,9 @@ def bench_serve_throughput(out_path="BENCH_serve.json"):
         f"GB/s={gbps:.3f};snapshot_bytes={eng.snapshot_bytes}")
     row("serve_decode_compile_count", 0.0,
         f"{bench['compile_counts']['decode']}")
+    row("serve_fused_wave_compiles", 0.0,
+        f"suspend_many={wave_cc['suspend_many']};"
+        f"resume_many={wave_cc['resume_many']}")
 
 
 def bench_movement(out_path="BENCH_movement.json"):
@@ -479,6 +506,95 @@ def bench_movement(out_path="BENCH_movement.json"):
         f"modeled_advantage={bench['modeled_advantage']}x")
 
 
+def bench_sched(out_path="BENCH_sched.json"):
+    """Scheduler A/B: ``fifo`` vs ``cost_aware`` serving the SAME offered
+    load (identical arrival stream, engine geometry and virtual-clock
+    constants).  Latency runs on the scheduler's modeled clock — decode
+    ticks plus occupancy-aware Table-1 movement pricing — so the comparison
+    is deterministic (job completion depends on token *counts*, never token
+    values) and CI can gate on it: ``cost_aware`` must beat ``fifo`` on p99
+    latency or SLO attainment, and every scheduler-issued suspend/resume
+    must stay ONE fused dispatch per wave (compile-count asserted).
+    Writes ``BENCH_sched.json``."""
+    from repro import sched
+    from repro.configs import get_reduced
+    from repro.models import lm as LM
+    from repro.serve.engine import Engine
+
+    cfg = get_reduced("tinyllama-1.1b")
+    params = LM.init_lm(cfg, jax.random.key(0))
+    wl = sched.WorkloadConfig(
+        n_fresh=8, n_followups=28, mean_gap_ns=1600.0,
+        arrival="bursty", burst=4, zipf_s=1.8, think_ns=2000.0,
+        class_slo_ns=(40_000.0, 150_000.0, float("inf")))
+    arrivals = sched.generate_workload(wl, seed=4, vocab_size=cfg.vocab_size)
+
+    results = {}
+    for pol in ("fifo", "cost_aware"):
+        eng = Engine(cfg, params, slots=4, max_len=96,
+                     n_sessions=sched.n_sessions_for(wl))
+        s = sched.Scheduler(eng, policy=pol, arrivals=arrivals)
+        t0 = time.perf_counter()
+        summary = s.run()
+        dt = time.perf_counter() - t0
+        resume_widths = s.metrics.wave_widths("resume_wave")
+        suspend_widths = (s.metrics.wave_widths("preempt_suspend")
+                          + s.metrics.wave_widths("complete_suspend"))
+        cc = eng.compile_counts()
+        # fused-dispatch invariants: every resume the engine performed came
+        # from a scheduler wave, and each distinct wave width compiles once
+        assert eng.stats["resumes"] == sum(resume_widths), (pol, resume_widths)
+        assert eng.stats["suspends"] == sum(suspend_widths), (pol,
+                                                              suspend_widths)
+        # resume waves always route through resume_many (any width); a
+        # single-slot suspend routes through the unbatched suspend body —
+        # so each entry point compiles at most once per distinct wave width
+        n_resume_shapes = len(set(resume_widths))
+        n_suspend_shapes = len({w for w in suspend_widths if w > 1})
+        assert cc["resume_many"] in (-1, *range(n_resume_shapes + 1)), (
+            pol, resume_widths, cc)
+        assert cc["suspend_many"] in (-1, *range(n_suspend_shapes + 1)), (
+            pol, suspend_widths, cc)
+        results[pol] = {
+            **summary,
+            "ticks": s.tick_count,
+            "resume_wave_widths": resume_widths,
+            "compile_counts": {k: cc[k] for k in
+                               ("decode", "resume_many", "suspend_many")},
+            "wall_seconds": round(dt, 2),
+        }
+
+    fifo, ca = results["fifo"], results["cost_aware"]
+    p99_gain = fifo["p99_latency_ns"] / max(ca["p99_latency_ns"], 1e-9)
+    slo_gain = ca["slo_attainment"] - fifo["slo_attainment"]
+    import dataclasses
+    import math
+    # strict-JSON artifact: the batch class's infinite SLO must not leak as
+    # a bare `Infinity` literal (json.dump emits it for float('inf'))
+    load = {k: ([("inf" if isinstance(x, float) and math.isinf(x) else x)
+                 for x in v] if isinstance(v, tuple) else v)
+            for k, v in dataclasses.asdict(wl).items()}
+    bench = {
+        **results,
+        "p99_speedup_cost_aware": round(p99_gain, 3),
+        "slo_attainment_gain": round(slo_gain, 4),
+        "cost_aware_beats_fifo": bool(p99_gain > 1.0 or slo_gain > 0.0),
+        "config": {"arch": "tinyllama-1.1b-reduced", "slots": 4,
+                   "seed": 4, "offered_load": load},
+    }
+    with open(out_path, "w") as f:
+        json.dump(bench, f, indent=2, allow_nan=False)
+    row("sched_fifo", 0.0,
+        f"p99_us={fifo['p99_latency_ns']/1e3:.1f};"
+        f"slo={fifo['slo_attainment']}")
+    row("sched_cost_aware", 0.0,
+        f"p99_us={ca['p99_latency_ns']/1e3:.1f};slo={ca['slo_attainment']};"
+        f"p99_speedup={p99_gain:.2f}x;beats_fifo="
+        f"{bench['cost_aware_beats_fifo']}")
+    row("sched_movement_advantage", 0.0,
+        f"{ca['movement']['advantage']}x_lisa_vs_memcpy")
+
+
 def bench_roofline_summary():
     import glob
     cells = sorted(glob.glob("experiments/dryrun/*_baseline.json"))
@@ -512,6 +628,7 @@ BENCHES = {
     "train": bench_train_throughput,
     "serve": bench_serve_throughput,
     "movement": bench_movement,
+    "sched": bench_sched,
     "roofline": bench_roofline_summary,
 }
 

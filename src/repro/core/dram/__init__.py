@@ -4,8 +4,6 @@ Modules:
   spec        — the `DramSpec` device-model API: geometry + timing/energy
                 presets (DDR3_1600 calibrated to Table 1, DDR4/LPDDR) and the
                 `CopyMechanism` registry (DESIGN.md Sec. 6)
-  timing      — DEPRECATED back-compat shim over the default preset; not
-                imported here (importing it warns) — use `spec` instead
   substrate   — data-correct functional DRAM bank with RBM / RISC / multicast
   villa       — the VILLA hot-row caching policy (Sec. 3.2.1, exact)
   controller  — command-level multi-core system simulator (Figs. 3/4

@@ -1,7 +1,16 @@
-"""Serving launcher: continuous batching + VILLA session tiering demo.
+"""Serving launcher: the cost-aware continuous-batching scheduler serving a
+synthetic traffic stream (Poisson/bursty arrivals, Zipfian session re-use).
 
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --reduced \
-      --requests 12 --resumes 24
+      --requests 12 --followups 24 --policy cost_aware
+
+This module drives no engine loop of its own: every submit, suspend and
+resume is a :class:`repro.sched.Scheduler` decision — admission comes from
+the scheduler's queue (overflow *queues*, it never crashes the engine), the
+suspend/resume traffic drains as fused waves (one dispatch per wave), and
+the policy consults each move's modeled :class:`~repro.movement.plan
+.MovementCost`.  ``--policy fifo`` reproduces the pre-scheduler behavior
+for A/B runs (``benchmarks/run.py sched`` automates that comparison).
 """
 from __future__ import annotations
 
@@ -10,11 +19,11 @@ import json
 import time
 
 import jax
-import numpy as np
 
+from repro import sched
 from repro.configs import get_config, get_reduced
 from repro.models import lm
-from repro.serve.engine import Engine, Request
+from repro.serve.engine import Engine
 
 
 def main(argv=None) -> dict:
@@ -23,53 +32,60 @@ def main(argv=None) -> dict:
     p.add_argument("--reduced", action="store_true")
     p.add_argument("--slots", type=int, default=4)
     p.add_argument("--max-len", type=int, default=96)
-    p.add_argument("--requests", type=int, default=8)
-    p.add_argument("--resumes", type=int, default=16)
-    p.add_argument("--prompt-len", type=int, default=16)
+    p.add_argument("--requests", type=int, default=8,
+                   help="fresh sessions (may exceed --slots: overflow queues)")
+    p.add_argument("--followups", "--resumes", type=int, default=16,
+                   dest="followups", help="follow-up (resume) arrivals")
+    p.add_argument("--policy", default="cost_aware",
+                   choices=sched.policies())
+    p.add_argument("--mean-gap-ns", type=float, default=2000.0)
+    p.add_argument("--bursty", action="store_true")
+    p.add_argument("--zipf-s", type=float, default=1.3)
     p.add_argument("--max-new", type=int, default=8)
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
+    wl_prompt_lens = (6, 8, 10, 12)
+    if args.max_new < 1:
+        p.error(f"--max-new must be >= 1 (got {args.max_new})")
+    if args.max_len < max(wl_prompt_lens) + args.max_new:
+        p.error(f"--max-len {args.max_len} cannot hold the synthetic "
+                f"workload: prompts run up to {max(wl_prompt_lens)} tokens "
+                f"plus --max-new {args.max_new} decode positions")
+
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     params = lm.init_lm(cfg, jax.random.key(args.seed))
+
+    wl = sched.WorkloadConfig(
+        n_fresh=args.requests, n_followups=args.followups,
+        mean_gap_ns=args.mean_gap_ns,
+        arrival="bursty" if args.bursty else "poisson",
+        zipf_s=args.zipf_s, prompt_lens=wl_prompt_lens,
+        new_tokens=tuple(sorted({max(args.max_new // 2, 1), args.max_new})))
+    arrivals = sched.generate_workload(wl, seed=args.seed,
+                                       vocab_size=cfg.vocab_size)
+    # the store holds one snapshot per session — admission pressure is the
+    # QUEUE's problem (a burst beyond --slots waits, it never raises
+    # EngineFull), store pressure would be silent eviction, so size it out
     eng = Engine(cfg, params, slots=args.slots, max_len=args.max_len,
-                 n_sessions=max(args.requests, 8))
-    rng = np.random.default_rng(args.seed)
+                 n_sessions=sched.n_sessions_for(wl))
+    s = sched.Scheduler(eng, policy=args.policy, arrivals=arrivals)
 
     t0 = time.time()
-    # phase 1: serve fresh requests
-    pending = [Request(uid=i,
-                       prompt=rng.integers(0, cfg.vocab_size,
-                                           args.prompt_len).astype(np.int32),
-                       max_new=args.max_new)
-               for i in range(args.requests)]
-    while pending or eng.active:
-        while pending and eng.free_slots():
-            eng.submit(pending.pop(0))
-        eng.step()
-    # phase 2: resume sessions with a skewed (hot) distribution — the
-    # VILLA policy should promote the frequently-resumed sessions.  Resumes
-    # drain in waves: every wave of distinct uids is ONE batched
-    # tiered-store dispatch (engine.resume_many / villa_cache.access_many).
-    hot = max(args.requests // 4, 1)
-    left = args.resumes
-    while left > 0:
-        wave = []
-        wave_max = min(len(eng.free_slots()), left, args.requests)
-        while len(wave) < wave_max:
-            uid = int(rng.integers(0, hot)) if rng.random() < 0.8 \
-                else int(rng.integers(0, args.requests))
-            if uid not in wave:
-                wave.append(uid)
-        eng.resume_many(wave, extra_new=4)
-        left -= len(wave)
-        while eng.active:
-            eng.step()
+    summary = s.run()
     dt = time.time() - t0
-    out = {**eng.stats, "villa_hit_rate": round(eng.hit_rate(), 3),
-           "tokens_per_s": round(eng.stats["decoded_tokens"] / dt, 1),
-           "decode_compile_count": eng.compile_counts()["decode"],
-           "seconds": round(dt, 1)}
+
+    out = {
+        "policy": args.policy,
+        **summary,
+        **{k: eng.stats[k] for k in ("decoded_tokens", "suspends", "resumes",
+                                     "decode_dispatches", "host_transfers")},
+        "villa_hit_rate": round(eng.hit_rate(), 3),
+        "decode_compile_count": eng.compile_counts()["decode"],
+        "ticks": s.tick_count,
+        "tokens_per_s": round(eng.stats["decoded_tokens"] / max(dt, 1e-9), 1),
+        "seconds": round(dt, 1),
+    }
     print(json.dumps(out))
     return out
 

@@ -1,0 +1,52 @@
+"""Cost-aware continuous-batching scheduler: the controller layer that turns
+the serving engine into a traffic-serving system.
+
+Public surface::
+
+    from repro import sched
+
+    arrivals = sched.generate_workload(sched.WorkloadConfig(...), seed=0,
+                                       vocab_size=cfg.vocab_size)
+    s = sched.Scheduler(engine, policy="cost_aware", arrivals=arrivals)
+    summary = s.run()          # per-class p50/p99, SLO attainment, movement
+
+Modules:
+  queue      — admission queue: priority classes, deadlines, aging
+  policy     — fifo / lru / cost_aware placement+victim policies (registry)
+  scheduler  — the tick loop: fused waves, decode-overlapped wave prep
+  workload   — synthetic traffic (Poisson/bursty, Zipf re-use, think time)
+  metrics    — per-class latency, SLO attainment, MovementCost accounting
+
+See DESIGN.md Sec. 9 for the paper mapping.
+"""
+from repro.sched.metrics import Decision, JobRecord, Metrics
+from repro.sched.policy import (
+    AdmitCand,
+    CostAwarePolicy,
+    FifoPolicy,
+    LruPolicy,
+    SchedContext,
+    SchedPolicy,
+    VictimCand,
+    get_policy,
+    policies,
+    register_policy,
+)
+from repro.sched.queue import AdmissionQueue, QueueEntry
+from repro.sched.scheduler import Job, SchedConfig, Scheduler, Wave
+from repro.sched.workload import (
+    Arrival,
+    WorkloadConfig,
+    generate_workload,
+    n_sessions_for,
+)
+
+__all__ = [
+    "AdmissionQueue", "QueueEntry",
+    "SchedPolicy", "FifoPolicy", "LruPolicy", "CostAwarePolicy",
+    "AdmitCand", "VictimCand", "SchedContext",
+    "register_policy", "get_policy", "policies",
+    "Scheduler", "SchedConfig", "Job", "Wave",
+    "Arrival", "WorkloadConfig", "generate_workload", "n_sessions_for",
+    "Metrics", "JobRecord", "Decision",
+]

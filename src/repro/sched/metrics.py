@@ -1,0 +1,138 @@
+"""Serving metrics: per-class latency percentiles, SLO attainment, slot
+utilization, and cumulative :class:`~repro.movement.plan.MovementCost`
+(lisa vs memcpy) per scheduling decision.
+
+Everything is recorded on the scheduler's *virtual clock* (modeled ns): a
+decode tick costs ``decode_ns``, and every movement decision — resume wave,
+preemption suspend, completion suspend — is charged its plan's Table-1
+pricing, VILLA-occupancy-aware (a fast-tier hit pays the fast-subarray
+fraction of the slow-tier cost).  The lisa/memcpy totals are the serving
+layer's view of the paper's headline gap: the same schedule, priced under
+both mechanisms.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List
+
+import numpy as np
+
+
+def percentile_ns(xs, q) -> float:
+    """Percentile of a latency list; NaN for an empty one (no completions
+    in that class yet) instead of numpy's empty-slice warning."""
+    if not xs:
+        return math.nan
+    return float(np.percentile(np.asarray(xs, np.float64), q))
+
+
+@dataclasses.dataclass
+class JobRecord:
+    """One completed logical job (a fresh request or one follow-up)."""
+    job_id: int
+    uid: int
+    kind: str               # "fresh" | "resume"
+    priority: int
+    arrival_ns: float
+    done_ns: float
+    slo_ns: float
+    tokens: int
+
+    @property
+    def latency_ns(self) -> float:
+        return self.done_ns - self.arrival_ns
+
+    @property
+    def slo_met(self) -> bool:
+        return self.latency_ns <= self.slo_ns
+
+
+@dataclasses.dataclass
+class Decision:
+    """One scheduling decision and its modeled movement bill (both
+    mechanisms — per-decision Table-1 accounting)."""
+    tick: int
+    kind: str               # "submit" | "resume_wave" | "preempt_suspend" | "complete_suspend"
+    n_items: int
+    ns_lisa: float = 0.0
+    ns_memcpy: float = 0.0
+    uj_lisa: float = 0.0
+    uj_memcpy: float = 0.0
+
+
+class Metrics:
+    """Accumulates job completions, decisions and per-tick occupancy;
+    :meth:`summary` renders the benchmark/CI-facing dict."""
+
+    def __init__(self):
+        self.jobs: List[JobRecord] = []
+        self.decisions: List[Decision] = []
+        self._occupancy: List[float] = []
+
+    # ---- recording --------------------------------------------------------
+    def record_job(self, rec: JobRecord) -> None:
+        self.jobs.append(rec)
+
+    def record_decision(self, dec: Decision) -> None:
+        self.decisions.append(dec)
+
+    def record_tick(self, n_active: int, n_slots: int) -> None:
+        self._occupancy.append(n_active / n_slots if n_slots else 0.0)
+
+    # ---- summaries --------------------------------------------------------
+    def movement_totals(self) -> Dict[str, float]:
+        t = {"ns_lisa": 0.0, "ns_memcpy": 0.0, "uj_lisa": 0.0,
+             "uj_memcpy": 0.0}
+        for d in self.decisions:
+            t["ns_lisa"] += d.ns_lisa
+            t["ns_memcpy"] += d.ns_memcpy
+            t["uj_lisa"] += d.uj_lisa
+            t["uj_memcpy"] += d.uj_memcpy
+        t["advantage"] = (t["ns_memcpy"] / t["ns_lisa"]
+                          if t["ns_lisa"] else 1.0)
+        return t
+
+    def decision_counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for d in self.decisions:
+            out[d.kind] = out.get(d.kind, 0) + 1
+        return out
+
+    def wave_widths(self, kind: str) -> List[int]:
+        """Item counts of every decision of ``kind`` — a fused wave of k
+        suspends/resumes is ONE decision with ``n_items == k``."""
+        return [d.n_items for d in self.decisions if d.kind == kind]
+
+    def _class_summary(self, jobs: List[JobRecord]) -> Dict[str, float]:
+        lats = [j.latency_ns for j in jobs]
+        with_slo = [j for j in jobs if math.isfinite(j.slo_ns)]
+        return {
+            "n": len(jobs),
+            "p50_latency_ns": round(percentile_ns(lats, 50), 1),
+            "p99_latency_ns": round(percentile_ns(lats, 99), 1),
+            "slo_attainment": (round(sum(j.slo_met for j in with_slo)
+                                     / len(with_slo), 4)
+                               if with_slo else 1.0),
+        }
+
+    def summary(self) -> Dict[str, object]:
+        per_class: Dict[str, Dict[str, float]] = {}
+        for cls in sorted({j.priority for j in self.jobs}):
+            per_class[str(cls)] = self._class_summary(
+                [j for j in self.jobs if j.priority == cls])
+        overall = self._class_summary(self.jobs)
+        return {
+            "jobs_completed": len(self.jobs),
+            "tokens": sum(j.tokens for j in self.jobs),
+            "p50_latency_ns": overall["p50_latency_ns"],
+            "p99_latency_ns": overall["p99_latency_ns"],
+            "slo_attainment": overall["slo_attainment"],
+            "per_class": per_class,
+            "slot_utilization": (round(sum(self._occupancy)
+                                       / len(self._occupancy), 4)
+                                 if self._occupancy else 0.0),
+            "movement": {k: round(v, 2)
+                         for k, v in self.movement_totals().items()},
+            "decisions": self.decision_counts(),
+        }

@@ -1,0 +1,155 @@
+"""Pluggable victim/placement policies behind a registry.
+
+This extends the repo's registry pattern a third time: PR 1 registered
+``CopyMechanism`` objects (pricing a copy), PR 3 registered movement
+*backends* (performing a copy), and this module registers *policies* —
+deciding **which** copies to perform at all.  That is the paper's missing
+layer: LISA/RowClone make bulk movement cheap, but the win only materializes
+when a controller schedules the cheap path instead of the naive one.
+
+A policy orders two candidate lists (it never mutates engine or queue):
+
+  * ``admit_order``  — queued entries (fresh prefills + session resumes),
+    best-placed-first;
+  * ``victim_order`` — active slots eligible for preemption, best-victim
+    first.
+
+``fifo`` is the pre-scheduler baseline (arrival order, lowest slot index
+victim — exactly the arbitrary choice ``launch/serve.py`` used to hard-code).
+``lru`` victimizes the least-recently-activated session.  ``cost_aware``
+consults the modeled movement bill: admissions run earliest-deadline-first
+within an effective class with cheap (VILLA fast-tier resident) resumes
+breaking ties, and victims are the sessions whose suspend is cheapest under
+the active :class:`~repro.core.dram.spec.DramSpec` mechanism — a session
+resident in the fast tier pays the write-through to *both* pools, so the
+cheap-to-suspend session is also the cold one worth displacing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, NamedTuple, Sequence, Tuple
+
+from repro.sched.queue import QueueEntry
+
+
+class AdmitCand(NamedTuple):
+    """A queued entry the scheduler could place this tick."""
+    entry: QueueEntry
+    eff_class: int          # aged class at this tick (can be negative)
+    cost_ns: float          # modeled placement cost (resume move / prefill)
+    fast_resident: bool     # resume target resident in the VILLA fast tier
+
+
+class VictimCand(NamedTuple):
+    """An active slot the scheduler could preempt this tick."""
+    slot: int
+    uid: int
+    priority: int           # the running job's nominal class
+    last_active_tick: int   # activation tick (LRU signal)
+    suspend_ns: float       # modeled suspend cost under the active mechanism
+    fast_resident: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedContext:
+    """Read-only facts policies may consult."""
+    tick: int
+    now_ns: float
+    mechanism: str                      # "lisa" | "memcpy"
+    fast_uids: frozenset = frozenset()  # sessions resident in the fast tier
+
+
+class SchedPolicy:
+    """Base policy: effective-class order, FIFO within class, slot-order
+    victims.  Subclasses override the sort keys only — determinism and
+    starvation freedom (aging drives ``eff_class`` below any fresh class)
+    come from the shared structure."""
+
+    name = "base"
+
+    def admit_order(self, cands: Sequence[AdmitCand],
+                    ctx: SchedContext) -> List[AdmitCand]:
+        return sorted(cands, key=lambda c: (c.eff_class, c.entry.seq))
+
+    def victim_order(self, cands: Sequence[VictimCand],
+                     ctx: SchedContext) -> List[VictimCand]:
+        return sorted(cands, key=lambda c: c.slot)
+
+
+class FifoPolicy(SchedPolicy):
+    """Arrival order, arbitrary (lowest-index) victim — the baseline the
+    paper's controller-scheduling argument is made against."""
+    name = "fifo"
+
+
+class LruPolicy(SchedPolicy):
+    """FIFO admissions, least-recently-activated victim (classic working-set
+    heuristic, blind to movement cost)."""
+    name = "lru"
+
+    def victim_order(self, cands, ctx):
+        return sorted(cands, key=lambda c: (-c.priority, c.last_active_tick,
+                                            c.slot))
+
+
+class CostAwarePolicy(SchedPolicy):
+    """Every ordering consults the movement bill.
+
+    Admissions: effective class; then jobs that can still *make* their
+    deadline before jobs whose deadline has already passed (plain EDF
+    suffers domino misses under overload — a hopeless job must not starve a
+    saveable one); then earliest deadline; then modeled placement cost — a
+    fast-tier-hit resume (cheap lisa-priced move) is preferred over a
+    slow-tier miss at equal urgency.  Victims: lowest-priority first, then
+    cheapest modeled suspend — non-resident (cold) sessions cost one
+    slow-pool write, resident (hot) ones pay the fast-pool write-through on
+    top, so the policy structurally keeps hot sessions on slots.
+    """
+    name = "cost_aware"
+
+    def admit_order(self, cands, ctx):
+        def key(c: AdmitCand):
+            hopeless = ctx.now_ns > c.entry.deadline_ns
+            return (c.eff_class, hopeless, c.entry.deadline_ns, c.cost_ns,
+                    c.entry.seq)
+        return sorted(cands, key=key)
+
+    def victim_order(self, cands, ctx):
+        return sorted(cands, key=lambda c: (-c.priority, c.suspend_ns,
+                                            c.last_active_tick, c.slot))
+
+
+_POLICIES: Dict[str, SchedPolicy] = {}
+
+
+def register_policy(policy: SchedPolicy) -> SchedPolicy:
+    """Register a policy instance under ``policy.name``.  Re-registering the
+    same class (module reload) replaces silently; a different class under a
+    taken name raises — the CopyMechanism/backend registry contract."""
+    old = _POLICIES.get(policy.name)
+    if old is not None and (type(old).__module__, type(old).__qualname__) != (
+            type(policy).__module__, type(policy).__qualname__):
+        raise ValueError(f"scheduling policy {policy.name!r} already "
+                         f"registered by {type(old).__qualname__}")
+    _POLICIES[policy.name] = policy
+    return policy
+
+
+def get_policy(name) -> SchedPolicy:
+    """Look up a policy by name (a :class:`SchedPolicy` passes through)."""
+    if isinstance(name, SchedPolicy):
+        return name
+    try:
+        return _POLICIES[name]
+    except KeyError:
+        raise ValueError(f"unknown scheduling policy {name!r} "
+                         f"(known: {sorted(_POLICIES)})") from None
+
+
+def policies() -> Tuple[str, ...]:
+    return tuple(sorted(_POLICIES))
+
+
+register_policy(FifoPolicy())
+register_policy(LruPolicy())
+register_policy(CostAwarePolicy())

@@ -75,6 +75,14 @@ class Request:
     prompt: np.ndarray
     max_new: int
     generated: Optional[List[int]] = None
+    # scheduling metadata: when the request entered the system, its priority
+    # class (0 = most urgent) and its latency SLO.  Round-trips through
+    # repro.sched — `Scheduler.submit_request` admits by these fields, and
+    # scheduler-placed requests carry them back out.  Defaults make plain
+    # engine use unchanged.
+    arrival_ns: float = 0.0
+    priority: int = 0
+    slo_ns: float = float("inf")
 
 
 class Engine:
@@ -227,13 +235,22 @@ class Engine:
         req.generated.append(int(nxt))
         self.active[slot] = req
         self.pos[slot] = n
+        if len(req.generated) >= req.max_new:
+            # a max_new=1 request is completed by the prefill token itself —
+            # suspend now instead of letting the next step_end overshoot the
+            # budget by one decoded token
+            self.suspend(slot)
         return slot
 
-    def step(self) -> None:
-        """Decode one token for every active slot: ONE jitted dispatch and
-        ONE device→host transfer, however ragged the slot positions are."""
+    def step_begin(self):
+        """Issue the tick's ONE fused decode dispatch and return the
+        in-flight device handle (None when idle).  The dispatch is async:
+        the host is free to plan the next scheduling wave while the device
+        decodes — the serving analogue of LISA-LIP's linked precharge
+        (:mod:`repro.sched.scheduler` overlaps exactly this way).  Pair
+        with :meth:`step_end`."""
         if not self.active:
-            return
+            return None
         toks = np.zeros(self.slots, np.int32)
         mask = np.zeros(self.slots, bool)
         for s, req in self.active.items():
@@ -243,7 +260,16 @@ class Engine:
             self._decode, self.params, self.cache, jnp.asarray(toks),
             jnp.asarray(self.pos), jnp.asarray(mask))
         self.stats["decode_dispatches"] += 1
-        nxt = np.asarray(nxt_dev)               # the one device→host transfer
+        return nxt_dev
+
+    def step_end(self, handle) -> List:
+        """Sync one in-flight decode (the tick's ONE device→host transfer),
+        run token bookkeeping, and suspend completed requests — a burst
+        completes as ONE fused ``suspend_many`` wave.  Returns the
+        ``(slot, request)`` pairs that completed this step."""
+        if handle is None:
+            return []
+        nxt = np.asarray(handle)                # the one device→host transfer
         self.stats["host_transfers"] += 1
         for s in self.active:
             self.active[s].generated.append(int(nxt[s]))
@@ -251,10 +277,18 @@ class Engine:
             self.stats["decoded_tokens"] += 1
         done = [s for s, req in self.active.items()
                 if len(req.generated) >= req.max_new]
+        completed = [(s, self.active[s]) for s in done]
         if len(done) == 1:
             self.suspend(done[0])
         elif done:                        # burst completion: ONE fused wave
             self.suspend_many(done)
+        return completed
+
+    def step(self) -> List:
+        """Decode one token for every active slot: ONE jitted dispatch and
+        ONE device→host transfer, however ragged the slot positions are.
+        Equivalent to ``step_end(step_begin())`` with nothing overlapped."""
+        return self.step_end(self.step_begin())
 
     def step_unbatched(self) -> None:
         """A/B-ONLY path — never serve production traffic with it.  Kept
@@ -341,7 +375,7 @@ class Engine:
                                jnp.asarray(idxs, jnp.int32))
         self._charge_move(self._wave_plan(self.plan_suspend, len(slots)))
 
-    def _check_resumable(self, uid: int) -> int:
+    def _check_resumable(self, uid: int, extra_new: int) -> int:
         for slot, r in self.active.items():
             if r.uid == uid:
                 raise ValueError(
@@ -352,6 +386,16 @@ class Engine:
             raise UnknownSession(
                 f"uid {uid} has no suspended session (never suspended, or "
                 f"evicted by a store-index collision)")
+        pos = self.session_pos[uid]
+        if pos + extra_new - 1 > self.max_len:
+            # decode step k writes the cache at position pos+k: past max_len
+            # the scatter is silently dropped (JAX OOB semantics) and later
+            # tokens would attend over a hole — refuse instead of corrupting
+            raise ValueError(
+                f"uid {uid} is at position {pos}: decoding {extra_new - 1} "
+                f"more tokens would write past max_len={self.max_len}; "
+                f"clamp extra_new to the context envelope (repro.sched "
+                f"truncates follow-ups this way)")
         return uid % self.n_sessions
 
     def _activate(self, slot: int, uid: int, extra_new: int) -> None:
@@ -359,12 +403,17 @@ class Engine:
         req.generated = [self.session_tok[uid]]
         self.active[slot] = req
         self.pos[slot] = self.session_pos[uid]
+        if len(req.generated) >= req.max_new:
+            # extra_new <= 1: the restored seed token already meets the
+            # budget — suspend instead of overshooting by one decode (the
+            # resume-path mirror of submit()'s max_new=1 guard)
+            self.suspend(slot)
 
     def resume(self, uid: int, extra_new: int) -> int:
         """Bring a suspended session back: the tiered-store access promotes
         hot sessions to the fast tier (paper policy) — hit rate is the
         serving-level VILLA metric.  One jitted dispatch, no host sync."""
-        idx = self._check_resumable(uid)
+        idx = self._check_resumable(uid, extra_new)
         slot = self._take_slot()
         self.cache, self.sessions = _quiet(
             self._resume, self.cache, self.sessions, jnp.int32(slot),
@@ -374,14 +423,24 @@ class Engine:
         self._charge_move(self.plan_resume)
         return slot
 
-    def resume_many(self, uids: Sequence[int], extra_new: int) -> List[int]:
+    def resume_many(self, uids: Sequence[int], extra_new) -> List[int]:
         """Resume a wave of sessions in ONE dispatch: the page tables of all
-        sessions drive one batched tiered-store access."""
+        sessions drive one batched tiered-store access.  ``extra_new`` is an
+        int applied to every session, or a per-uid sequence (the scheduler
+        resumes jobs owing different token counts in one fused wave —
+        ``extra_new`` is host bookkeeping, never traced, so ragged budgets
+        share the single dispatch)."""
         if not uids:
             return []
         if len(set(uids)) != len(uids):
             raise ValueError(f"duplicate uids in resume wave: {list(uids)}")
-        idxs = [self._check_resumable(u) for u in uids]
+        extras = ([int(extra_new)] * len(uids)
+                  if isinstance(extra_new, (int, np.integer))
+                  else [int(e) for e in extra_new])
+        if len(extras) != len(uids):
+            raise ValueError(f"extra_new sequence has {len(extras)} entries "
+                             f"for {len(uids)} uids")
+        idxs = [self._check_resumable(u, e) for u, e in zip(uids, extras)]
         free = self.free_slots()
         if len(free) < len(uids):
             raise EngineFull(f"{len(uids)} resumes requested but only "
@@ -390,8 +449,8 @@ class Engine:
         self.cache, self.sessions = _quiet(
             self._resume_many, self.cache, self.sessions,
             jnp.asarray(slots, jnp.int32), jnp.asarray(idxs, jnp.int32))
-        for slot, uid in zip(slots, uids):
-            self._activate(slot, uid, extra_new)
+        for slot, uid, extra in zip(slots, uids, extras):
+            self._activate(slot, uid, extra)
             self.stats["resumes"] += 1
         self._charge_move(self._wave_plan(self.plan_resume, len(uids)))
         return slots
@@ -402,6 +461,16 @@ class Engine:
         granularity."""
         self.stats["modeled_move_ns_lisa"] += plan.cost.ns_lisa
         self.stats["modeled_move_ns_memcpy"] += plan.cost.ns_memcpy
+
+    def fast_resident_uids(self) -> frozenset:
+        """uids whose snapshots are resident in the VILLA fast tier right
+        now (one small device→host read of the policy tags).  The scheduler
+        consults this for occupancy-aware cost scoring: a resident resume is
+        a fast-subarray read, a resident suspend pays the write-through to
+        both pools."""
+        tags = np.asarray(self.sessions.policy.tags)
+        return frozenset(self.store_uid[int(t)] for t in tags
+                         if t >= 0 and int(t) in self.store_uid)
 
     def hit_rate(self) -> float:
         return float(VC.hit_rate(self.sessions))

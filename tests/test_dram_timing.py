@@ -1,20 +1,10 @@
 """Table 1 / Sec. 2 / Sec. 3.3 of the paper, reproduced exactly under the
-default ``DDR3_1600`` preset (and via the deprecated ``timing`` shim)."""
+default ``DDR3_1600`` preset."""
 import importlib
-import sys
-import warnings
 
 import pytest
 
 from repro.core.dram.spec import DDR3_1600
-
-
-def _shim():
-    """The deprecated back-compat module, imported without warning noise."""
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        sys.modules.pop("repro.core.dram.timing", None)
-        return importlib.import_module("repro.core.dram.timing")
 
 # Table 1 (paper): mechanism -> (latency ns, energy uJ).  memcpy latency is
 # blank in the table; Fig. 2 shows it ~= RC-InterSA.
@@ -40,24 +30,12 @@ def test_table1_energies_match_to_rounding():
         assert round(got[mech][1], 2) == pytest.approx(ene, abs=1e-9), mech
 
 
-def test_timing_shim_import_emits_deprecation_warning():
-    """The shim is a deprecated alias: importing it must say so, and repo
-    modules must not trigger it (they import spec directly)."""
-    sys.modules.pop("repro.core.dram.timing", None)
-    with pytest.warns(DeprecationWarning, match="repro.core.dram.spec"):
+def test_timing_shim_is_gone():
+    """The deprecated ``core/dram/timing`` alias module finished its
+    deprecation cycle and was deleted: the historical names live only in
+    ``spec`` now, and a stale import must fail loudly."""
+    with pytest.raises(ModuleNotFoundError):
         importlib.import_module("repro.core.dram.timing")
-
-
-def test_timing_shim_table1_is_thin_wrapper():
-    """`timing.table1()` stays the canonical wrapper over the default preset."""
-    T = _shim()
-    assert T.table1() == DDR3_1600.table1()
-    # legacy free functions and singletons keep answering from the preset
-    assert T.latency_lisa_risc(7) == DDR3_1600.copy_latency("lisa", 7)
-    assert T.latency_memcpy() == DDR3_1600.copy_latency("memcpy")
-    assert T.energy_rc_inter_sa() == DDR3_1600.copy_energy("rc_intersa")
-    assert T.ROW_BYTES == DDR3_1600.row_bytes
-    assert T.DDR3 is DDR3_1600.timing
 
 
 def test_memcpy_energy_exact_and_latency_close_to_intersa():
@@ -106,6 +84,3 @@ def test_invalid_hops_raise():
         DDR3_1600.copy_latency("lisa", 0)
     with pytest.raises(ValueError):
         DDR3_1600.copy_energy("lisa", 0)
-    # the shim keeps the same contract
-    with pytest.raises(ValueError):
-        _shim().latency_lisa_risc(0)
