@@ -595,6 +595,221 @@ def bench_sched(out_path="BENCH_sched.json"):
         f"{ca['movement']['advantage']}x_lisa_vs_memcpy")
 
 
+def bench_cluster(out_path="BENCH_cluster.json"):
+    """Cluster serving A/Bs on the deterministic virtual clock (the
+    BENCH_sched idiom: completion depends on token COUNTS, never values,
+    so CI gates on exact numbers).  Two comparisons:
+
+      * **1 vs 4 replicas at equal offered load** — the same arrival
+        stream driven through a 1-replica and a 4-replica cluster; the
+        4-replica run must complete >= 2x the jobs before deadline misses
+        begin (and strictly more jobs within SLO).
+      * **migration on vs off** — a skewed-residence burst (sessions
+        concentrated on one replica while long jobs pin the others, then
+        all return at once with a tight SLO); migration-enabled placement
+        fans the burst across idle replicas via priced hop-chain plans,
+        migration-off serializes on the home replica and misses.
+
+    Writes ``BENCH_cluster.json``."""
+    import math
+
+    from repro import sched
+    from repro.configs import get_reduced
+    from repro.models import lm as LM
+    from repro.serve.cluster import Cluster
+
+    cfg = get_reduced("tinyllama-1.1b")
+    params = LM.init_lm(cfg, jax.random.key(0))
+
+    def jobs_before_first_miss(records):
+        n = 0
+        for j in sorted(records, key=lambda r: r.done_ns):
+            if math.isfinite(j.slo_ns) and not j.slo_met:
+                break
+            n += 1
+        return n
+
+    def in_slo_jobs(records):
+        return sum(1 for j in records
+                   if math.isfinite(j.slo_ns) and j.slo_met)
+
+    # ---- 1 vs 4 replicas, equal offered load -----------------------------
+    wl = sched.WorkloadConfig(
+        n_fresh=12, n_followups=24, mean_gap_ns=900.0, arrival="bursty",
+        burst=4, zipf_s=1.4, think_ns=2500.0,
+        class_slo_ns=(35_000.0, 120_000.0, math.inf))
+    arrivals = sched.generate_workload(wl, seed=4, vocab_size=cfg.vocab_size)
+    scale = {}
+    for n_rep in (1, 4):
+        cl = Cluster(cfg, params, n_replicas=n_rep, slots=4, max_len=96,
+                     n_sessions=sched.n_sessions_for(wl))
+        s = sched.ClusterScheduler(cl, arrivals=arrivals)
+        t0 = time.perf_counter()
+        summary = s.run()
+        scale[f"replicas{n_rep}"] = {
+            "jobs_completed": summary["jobs_completed"],
+            "jobs_before_first_miss": jobs_before_first_miss(s.metrics.jobs),
+            "jobs_in_slo": in_slo_jobs(s.metrics.jobs),
+            "p99_latency_ns": summary["p99_latency_ns"],
+            "slo_attainment": summary["slo_attainment"],
+            "ticks": s.tick_count,
+            "decode_compiles": cl.compile_counts()["decode"],
+            "wall_seconds": round(time.perf_counter() - t0, 2),
+        }
+    r1, r4 = scale["replicas1"], scale["replicas4"]
+    scaling = r4["jobs_before_first_miss"] / max(
+        r1["jobs_before_first_miss"], 1)
+
+    # ---- migration on vs off (skewed-residence burst) --------------------
+    # one scenario definition, two drivers: tests/test_cluster.py asserts
+    # the same stream at test scale (sched.skewed_residence_burst)
+    mig = {}
+    for enabled in (True, False):
+        cl = Cluster(cfg, params, n_replicas=4, slots=1, max_len=96,
+                     n_sessions=128)
+        s = sched.ClusterScheduler(
+            cl, arrivals=sched.skewed_residence_burst(cfg.vocab_size),
+            cfg=sched.SchedConfig(age_every=64), migrate=enabled)
+        summary = s.run()
+        burst = [j for j in s.metrics.jobs if j.priority == 0]
+        mig["migration_on" if enabled else "migration_off"] = {
+            "jobs_completed": summary["jobs_completed"],
+            "slo_attainment": summary["slo_attainment"],
+            "burst_slo_met": sum(j.slo_met for j in burst),
+            "burst_jobs": len(burst),
+            "sessions_migrated": summary["migration"]["sessions_migrated"],
+            "p99_latency_ns": summary["p99_latency_ns"],
+            "per_replica_utilization": summary["per_replica_utilization"],
+        }
+    on, off = mig["migration_on"], mig["migration_off"]
+
+    bench = {
+        **scale,
+        "scaling_before_miss": round(scaling, 2),
+        "scales_2x": bool(scaling >= 2.0
+                          and r4["jobs_in_slo"] > r1["jobs_in_slo"]),
+        **mig,
+        "migration_wins": bool(
+            on["slo_attainment"] > off["slo_attainment"]
+            and on["sessions_migrated"] >= 2
+            and off["sessions_migrated"] == 0),
+        "config": {"arch": "tinyllama-1.1b-reduced", "seed": 4,
+                   "scale_slots_per_replica": 4,
+                   "migration_slots_per_replica": 1,
+                   "offered_load": "bursty gap=900 zipf=1.4 12f+24r",
+                   "burst": "4-session skewed-residence, slo=18us"},
+    }
+    with open(out_path, "w") as f:
+        json.dump(bench, f, indent=2, allow_nan=False)
+    row("cluster_scale_1v4", 0.0,
+        f"before_miss={r1['jobs_before_first_miss']}->"
+        f"{r4['jobs_before_first_miss']};x{bench['scaling_before_miss']};"
+        f"slo={r1['slo_attainment']}->{r4['slo_attainment']}")
+    row("cluster_migration_ab", 0.0,
+        f"slo_on={on['slo_attainment']};slo_off={off['slo_attainment']};"
+        f"migrations={on['sessions_migrated']};"
+        f"wins={bench['migration_wins']}")
+
+
+# ---------------------------------------------------------------------------
+# --check: validate committed BENCH_*.json against their deterministic gates
+# ---------------------------------------------------------------------------
+
+def _check_serve(b, errs):
+    if not b["decode_tokens_per_s"] > 0:
+        errs.append("serve: decode_tokens_per_s not positive")
+    if not b["suspend_resume_gbps"] > 0:
+        errs.append("serve: suspend_resume_gbps not positive")
+    if b["compile_counts"]["decode"] not in (1, -1):
+        errs.append(f"serve: decode compiled "
+                    f"{b['compile_counts']['decode']}x")
+    for k in ("suspend_many_compiles", "resume_many_compiles"):
+        if b["wave"][k] not in (1, -1):
+            errs.append(f"serve: {k}={b['wave'][k]}")
+
+
+def _check_movement(b, errs):
+    for k, v in b["planned_compile_counts"].items():
+        if v not in (1, -1):
+            errs.append(f"movement: {k} compiled {v}x")
+    if not b["modeled_advantage"] > 1:
+        errs.append("movement: Table-1 advantage lost")
+    if b["planned_over_legacy"] > 1.5:
+        errs.append(f"movement: planned path {b['planned_over_legacy']}x "
+                    f"of legacy (structural overhead)")
+
+
+def _check_sched(b, errs):
+    if not b["cost_aware_beats_fifo"]:
+        errs.append("sched: cost_aware no longer beats fifo")
+    for pol in ("fifo", "cost_aware"):
+        r = b[pol]
+        if r["jobs_completed"] != 36:
+            errs.append(f"sched: {pol} completed {r['jobs_completed']} "
+                        f"jobs, expected 36")
+        widths = r["resume_wave_widths"]
+        if r["decisions"]["resume_wave"] != len(widths):
+            errs.append(f"sched: {pol} resume decisions != wave count")
+        cc = r["compile_counts"]
+        if cc["resume_many"] not in (-1, *range(len(set(widths)) + 1)):
+            errs.append(f"sched: {pol} resume_many compiles {cc}")
+        if cc["decode"] not in (1, -1):
+            errs.append(f"sched: {pol} decode compiles {cc['decode']}")
+
+
+def _check_cluster(b, errs):
+    if not b["scales_2x"]:
+        errs.append(f"cluster: 4-replica scaling "
+                    f"{b['scaling_before_miss']}x < 2x before misses")
+    if not b["migration_wins"]:
+        errs.append("cluster: migration-on no longer beats migration-off")
+    for k in ("replicas1", "replicas4", "migration_on", "migration_off"):
+        if b[k]["jobs_completed"] < 1:
+            errs.append(f"cluster: {k} completed no jobs")
+    if b["migration_on"]["jobs_completed"] != \
+            b["migration_off"]["jobs_completed"]:
+        errs.append("cluster: A/B arms completed different job counts")
+
+
+BENCH_SCHEMAS = {
+    "BENCH_serve.json": _check_serve,
+    "BENCH_movement.json": _check_movement,
+    "BENCH_sched.json": _check_sched,
+    "BENCH_cluster.json": _check_cluster,
+}
+
+
+def check_artifacts(root=".") -> int:
+    """Validate every committed BENCH_*.json against its deterministic-gate
+    schema (``benchmarks/run.py --check``).  Wall-clock numbers are recorded
+    data and never gated; the gates are the platform-independent invariants
+    CI relies on.  Returns the number of failures."""
+    def reject(const):
+        raise ValueError(f"non-strict JSON constant {const}")
+
+    errs, clean = [], 0
+    for name, check in BENCH_SCHEMAS.items():
+        before = len(errs)
+        path = os.path.join(root, name)
+        if not os.path.exists(path):
+            errs.append(f"{name}: missing (regenerate and commit it)")
+            continue
+        try:
+            with open(path) as f:
+                payload = json.load(f, parse_constant=reject)
+            check(payload, errs)
+        except ValueError as e:
+            errs.append(f"{name}: invalid strict JSON ({e})")
+        except (KeyError, TypeError) as e:
+            errs.append(f"{name}: schema drifted ({type(e).__name__}: {e})")
+        clean += len(errs) == before
+    for e in errs:
+        print(f"CHECK FAIL {e}")
+    print(f"bench check: {clean}/{len(BENCH_SCHEMAS)} artifacts clean, "
+          f"{len(errs)} failure(s)")
+    return len(errs)
+
+
 def bench_roofline_summary():
     import glob
     cells = sorted(glob.glob("experiments/dryrun/*_baseline.json"))
@@ -629,13 +844,22 @@ BENCHES = {
     "serve": bench_serve_throughput,
     "movement": bench_movement,
     "sched": bench_sched,
+    "cluster": bench_cluster,
     "roofline": bench_roofline_summary,
 }
 
 
 def main(argv=None) -> None:
-    """Run all benches, or a subset: ``python benchmarks/run.py serve train``."""
-    sel = set(argv if argv is not None else sys.argv[1:])
+    """Run all benches, or a subset: ``python benchmarks/run.py serve train``.
+    ``--check`` instead validates the committed BENCH_*.json artifacts
+    against their deterministic-gate schemas (no benches run)."""
+    argv = list(argv if argv is not None else sys.argv[1:])
+    if "--check" in argv:
+        argv.remove("--check")
+        if argv:
+            raise SystemExit("--check takes no bench names")
+        raise SystemExit(1 if check_artifacts() else 0)
+    sel = set(argv)
     unknown = sel - set(BENCHES)
     if unknown:
         raise SystemExit(f"unknown benches {sorted(unknown)}; "

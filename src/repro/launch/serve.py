@@ -1,16 +1,28 @@
-"""Serving launcher: the cost-aware continuous-batching scheduler serving a
-synthetic traffic stream (Poisson/bursty arrivals, Zipfian session re-use).
+"""Serving launcher: the cost-aware scheduler serving synthetic traffic on
+one engine or a multi-replica cluster with live session migration.
 
+Quickstart::
+
+  # one replica, cost-aware continuous batching
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --reduced \
       --requests 12 --followups 24 --policy cost_aware
 
-This module drives no engine loop of its own: every submit, suspend and
-resume is a :class:`repro.sched.Scheduler` decision — admission comes from
-the scheduler's queue (overflow *queues*, it never crashes the engine), the
-suspend/resume traffic drains as fused waves (one dispatch per wave), and
-the policy consults each move's modeled :class:`~repro.movement.plan
-.MovementCost`.  ``--policy fifo`` reproduces the pre-scheduler behavior
-for A/B runs (``benchmarks/run.py sched`` automates that comparison).
+  # four replicas on a mesh ring: placement + cost-priced live migration
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --reduced \
+      --replicas 4 --slots 2 --requests 16 --followups 32
+
+  # the migration-off A/B arm (resumes pinned to their home replica)
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --reduced \
+      --replicas 4 --no-migrate
+
+This module drives no engine loop of its own: every submit, suspend,
+resume — and with ``--replicas > 1`` every placement and migration — is a
+:class:`repro.sched.Scheduler` / :class:`repro.sched.ClusterScheduler`
+decision.  Admission overflow QUEUES (never EngineFull), suspend/resume
+traffic drains as fused waves (one dispatch per replica per wave), and
+migrations cross the mesh as priced ``hop_chain`` movement plans.
+``--policy fifo`` reproduces the pre-scheduler behavior for A/B runs
+(``benchmarks/run.py sched`` and ``cluster`` automate the comparisons).
 """
 from __future__ import annotations
 
@@ -23,21 +35,46 @@ import jax
 from repro import sched
 from repro.configs import get_config, get_reduced
 from repro.models import lm
+from repro.serve.cluster import Cluster
 from repro.serve.engine import Engine
+
+QUICKSTART = """examples:
+  %(prog)s --arch tinyllama-1.1b --reduced --requests 12 --followups 24
+  %(prog)s --arch tinyllama-1.1b --reduced --replicas 4 --slots 2
+  %(prog)s --arch tinyllama-1.1b --reduced --replicas 4 --no-migrate \
+--policy fifo
+
+With --replicas N the engines sit on a mesh ring (DESIGN.md Sec. 10):
+placement scores each replica by free slots, VILLA fast-tier occupancy and
+the modeled ICI hop cost from the session's residence; a resume placed off
+its home replica live-migrates the suspended pages as one fused hop-chain
+plan per route.  --no-migrate pins every resume to its home replica (the
+SLO A/B arm)."""
 
 
 def main(argv=None) -> dict:
-    p = argparse.ArgumentParser()
+    p = argparse.ArgumentParser(
+        epilog=QUICKSTART,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     p.add_argument("--arch", required=True)
     p.add_argument("--reduced", action="store_true")
-    p.add_argument("--slots", type=int, default=4)
+    p.add_argument("--replicas", type=int, default=1,
+                   help="engine replicas on the mesh ring (default 1; >1 "
+                        "enables placement + live session migration)")
+    p.add_argument("--no-migrate", action="store_true",
+                   help="pin resumes to their home replica (A/B arm; only "
+                        "meaningful with --replicas > 1)")
+    p.add_argument("--slots", type=int, default=4,
+                   help="decode slots PER replica")
     p.add_argument("--max-len", type=int, default=96)
     p.add_argument("--requests", type=int, default=8,
-                   help="fresh sessions (may exceed --slots: overflow queues)")
+                   help="fresh sessions (may exceed the slot count: "
+                        "overflow queues)")
     p.add_argument("--followups", "--resumes", type=int, default=16,
                    dest="followups", help="follow-up (resume) arrivals")
-    p.add_argument("--policy", default="cost_aware",
-                   choices=sched.policies())
+    p.add_argument("--policy", default=None, choices=sched.policies(),
+                   help="scheduling policy (default: cost_aware, or "
+                        "cost_aware_cluster with --replicas > 1)")
     p.add_argument("--mean-gap-ns", type=float, default=2000.0)
     p.add_argument("--bursty", action="store_true")
     p.add_argument("--zipf-s", type=float, default=1.3)
@@ -46,12 +83,16 @@ def main(argv=None) -> dict:
     args = p.parse_args(argv)
 
     wl_prompt_lens = (6, 8, 10, 12)
+    if args.replicas < 1:
+        p.error(f"--replicas must be >= 1 (got {args.replicas})")
     if args.max_new < 1:
         p.error(f"--max-new must be >= 1 (got {args.max_new})")
     if args.max_len < max(wl_prompt_lens) + args.max_new:
         p.error(f"--max-len {args.max_len} cannot hold the synthetic "
                 f"workload: prompts run up to {max(wl_prompt_lens)} tokens "
                 f"plus --max-new {args.max_new} decode positions")
+    policy = args.policy or ("cost_aware_cluster" if args.replicas > 1
+                             else "cost_aware")
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     params = lm.init_lm(cfg, jax.random.key(args.seed))
@@ -65,27 +106,44 @@ def main(argv=None) -> dict:
     arrivals = sched.generate_workload(wl, seed=args.seed,
                                        vocab_size=cfg.vocab_size)
     # the store holds one snapshot per session — admission pressure is the
-    # QUEUE's problem (a burst beyond --slots waits, it never raises
+    # QUEUE's problem (a burst beyond the slot count waits, it never raises
     # EngineFull), store pressure would be silent eviction, so size it out
-    eng = Engine(cfg, params, slots=args.slots, max_len=args.max_len,
-                 n_sessions=sched.n_sessions_for(wl))
-    s = sched.Scheduler(eng, policy=args.policy, arrivals=arrivals)
+    n_sessions = sched.n_sessions_for(wl)
+    if args.replicas > 1:
+        cluster = Cluster(cfg, params, n_replicas=args.replicas,
+                          slots=args.slots, max_len=args.max_len,
+                          n_sessions=n_sessions)
+        s = sched.ClusterScheduler(cluster, policy=policy,
+                                   arrivals=arrivals,
+                                   migrate=not args.no_migrate)
+        eng = cluster
+    else:
+        engine = Engine(cfg, params, slots=args.slots, max_len=args.max_len,
+                        n_sessions=n_sessions)
+        s = sched.Scheduler(engine, policy=policy, arrivals=arrivals)
+        eng = engine
 
     t0 = time.time()
     summary = s.run()
     dt = time.time() - t0
+    eng_stats = eng.stats
 
     out = {
-        "policy": args.policy,
+        "policy": policy,
+        "replicas": args.replicas,
         **summary,
-        **{k: eng.stats[k] for k in ("decoded_tokens", "suspends", "resumes",
+        **{k: eng_stats[k] for k in ("decoded_tokens", "suspends", "resumes",
                                      "decode_dispatches", "host_transfers")},
         "villa_hit_rate": round(eng.hit_rate(), 3),
         "decode_compile_count": eng.compile_counts()["decode"],
         "ticks": s.tick_count,
-        "tokens_per_s": round(eng.stats["decoded_tokens"] / max(dt, 1e-9), 1),
+        "tokens_per_s": round(eng_stats["decoded_tokens"] / max(dt, 1e-9),
+                              1),
         "seconds": round(dt, 1),
     }
+    if args.replicas > 1:
+        out["migrations"] = eng_stats["migrations"]
+        out["migrated_bytes"] = eng_stats["migrated_bytes"]
     print(json.dumps(out))
     return out
 

@@ -87,6 +87,14 @@ def _tile_copy(leg: TileCopyLeg, env: Env) -> Env:
 @register_backend("hop_chain")
 def _hop_chain(leg: HopChainLeg, env: Env) -> Env:
     env = dict(env)
+    if env.get("local_fabric"):
+        # Single-process replica fleet (serve/cluster.py): the replica pools
+        # share one address space, so the payload the gather leg staged is
+        # already reachable by the scatter leg — the hop chain contributes
+        # the PRICED mesh route (the plan's cost is the ICI hop model) and
+        # is an identity on the bytes here.  On a real mesh the same leg
+        # executes the ppermute chain below (pinned by the shard_map tests).
+        return env
     if leg.src is None or leg.dst is None:
         env["data"] = rbm.rbm_hop(env["data"], leg.axis, leg.step)
     else:

@@ -370,6 +370,33 @@ def plan(transfer: Transfer, spec: DramSpec = DDR3_1600, *,
                               pool_key="src_pool", table_key="src_table"),
                 PageScatterLeg(nbytes=0, hops=1, batch=b,
                                pool_key="dst_pool", table_key="dst_table"))
+    elif pair == ("slow", "slow"):
+        # Cross-replica session migration: the suspended snapshot's pages
+        # leave the source replica's slow pool, cross the mesh as a hop
+        # chain, and land in the destination replica's slow pool.  The
+        # gather/scatter legs are staging (free — the paper prices one row
+        # move per migration, not per pool access); the hop-chain leg
+        # carries the payload and is priced over the ICI route, so the
+        # whole migration is ONE copy under the Table-1 model.
+        if src.axis is None or src.axis != dst.axis:
+            raise ValueError("cross-replica slow->slow transfers need "
+                             "matching mesh axis names (got "
+                             f"{src.axis!r} -> {dst.axis!r})")
+        if src.index is None or dst.index is None:
+            raise ValueError("cross-replica slow->slow transfers name both "
+                             "replica indices (src.index / dst.index)")
+        if topo is None:
+            raise ValueError(
+                "cross-replica transfers need the mesh topology: pass "
+                "plan(..., topo=MeshTopology(n_replicas)) so the migration "
+                "is priced over the same ring the hop chain executes on")
+        legs = (PageGatherLeg(nbytes=0, batch=b, pool_key="src_pool",
+                              table_key="src_table"),
+                HopChainLeg(nbytes=n, hops=topo.hops(src.index, dst.index),
+                            batch=b, axis=src.axis, src=src.index,
+                            dst=dst.index, wraparound=topo.wraparound),
+                PageScatterLeg(nbytes=0, batch=b, pool_key="dst_pool",
+                               table_key="dst_table"))
     elif pair == ("device", "host"):
         legs = (HostStageLeg(nbytes=n, batch=b, to_host=True),)
     elif pair == ("host", "device"):

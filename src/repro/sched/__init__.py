@@ -10,21 +10,34 @@ Public surface::
     s = sched.Scheduler(engine, policy="cost_aware", arrivals=arrivals)
     summary = s.run()          # per-class p50/p99, SLO attainment, movement
 
+Multi-replica serving drives a :class:`~repro.serve.cluster.Cluster`
+through :class:`ClusterScheduler` — same tick loop, plus placement as a
+third decision axis and cost-priced live session migration::
+
+    cluster = Cluster(cfg, params, n_replicas=4, slots=2)
+    s = sched.ClusterScheduler(cluster, arrivals=arrivals)  # migrate=True
+
 Modules:
   queue      — admission queue: priority classes, deadlines, aging
-  policy     — fifo / lru / cost_aware placement+victim policies (registry)
-  scheduler  — the tick loop: fused waves, decode-overlapped wave prep
+  policy     — fifo / lru / cost_aware / cost_aware_cluster policies
+               (registry; admit, victim AND place orderings)
+  scheduler  — the tick loops: fused waves, decode-overlapped wave prep,
+               cluster placement + migration lanes
   workload   — synthetic traffic (Poisson/bursty, Zipf re-use, think time)
-  metrics    — per-class latency, SLO attainment, MovementCost accounting
+  metrics    — per-class latency, SLO attainment, MovementCost accounting,
+               per-replica utilization + migration split
 
-See DESIGN.md Sec. 9 for the paper mapping.
+See DESIGN.md Sec. 9 (scheduler) and Sec. 10 (cluster) for the paper
+mapping.
 """
 from repro.sched.metrics import Decision, JobRecord, Metrics
 from repro.sched.policy import (
     AdmitCand,
+    CostAwareClusterPolicy,
     CostAwarePolicy,
     FifoPolicy,
     LruPolicy,
+    PlaceCand,
     SchedContext,
     SchedPolicy,
     VictimCand,
@@ -33,20 +46,25 @@ from repro.sched.policy import (
     register_policy,
 )
 from repro.sched.queue import AdmissionQueue, QueueEntry
-from repro.sched.scheduler import Job, SchedConfig, Scheduler, Wave
+from repro.sched.scheduler import (Job, SchedConfig, Scheduler, Wave,
+                                   ClusterScheduler, ClusterWave)
 from repro.sched.workload import (
     Arrival,
     WorkloadConfig,
     generate_workload,
     n_sessions_for,
+    skewed_residence_burst,
 )
 
 __all__ = [
     "AdmissionQueue", "QueueEntry",
     "SchedPolicy", "FifoPolicy", "LruPolicy", "CostAwarePolicy",
-    "AdmitCand", "VictimCand", "SchedContext",
+    "CostAwareClusterPolicy",
+    "AdmitCand", "VictimCand", "PlaceCand", "SchedContext",
     "register_policy", "get_policy", "policies",
     "Scheduler", "SchedConfig", "Job", "Wave",
+    "ClusterScheduler", "ClusterWave",
     "Arrival", "WorkloadConfig", "generate_workload", "n_sessions_for",
+    "skewed_residence_burst",
     "Metrics", "JobRecord", "Decision",
 ]

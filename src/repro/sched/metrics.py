@@ -14,17 +14,24 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 
-def percentile_ns(xs, q) -> float:
-    """Percentile of a latency list; NaN for an empty one (no completions
-    in that class yet) instead of numpy's empty-slice warning."""
+def percentile_ns(xs, q) -> Optional[float]:
+    """Percentile of a latency list; ``None`` for an empty one — a class
+    with no completions has NO latency distribution.  (The old NaN leaked
+    through ``round`` into summaries where an idle class read as a perfect
+    p99, and ``json.dump(..., allow_nan=False)`` would crash on it; None
+    serializes as strict-JSON ``null``.)"""
     if not xs:
-        return math.nan
+        return None
     return float(np.percentile(np.asarray(xs, np.float64), q))
+
+
+def _round(x: Optional[float], nd: int) -> Optional[float]:
+    return None if x is None else round(x, nd)
 
 
 @dataclasses.dataclass
@@ -38,6 +45,7 @@ class JobRecord:
     done_ns: float
     slo_ns: float
     tokens: int
+    migrations: int = 0     # cross-replica session moves while serving it
 
     @property
     def latency_ns(self) -> float:
@@ -53,7 +61,8 @@ class Decision:
     """One scheduling decision and its modeled movement bill (both
     mechanisms — per-decision Table-1 accounting)."""
     tick: int
-    kind: str               # "submit" | "resume_wave" | "preempt_suspend" | "complete_suspend"
+    kind: str               # "submit" | "resume_wave" | "preempt_suspend"
+                            # | "complete_suspend" | "migrate_wave"
     n_items: int
     ns_lisa: float = 0.0
     ns_memcpy: float = 0.0
@@ -69,6 +78,7 @@ class Metrics:
         self.jobs: List[JobRecord] = []
         self.decisions: List[Decision] = []
         self._occupancy: List[float] = []
+        self._replica_occ: List[List[float]] = []   # cluster runs only
 
     # ---- recording --------------------------------------------------------
     def record_job(self, rec: JobRecord) -> None:
@@ -77,8 +87,11 @@ class Metrics:
     def record_decision(self, dec: Decision) -> None:
         self.decisions.append(dec)
 
-    def record_tick(self, n_active: int, n_slots: int) -> None:
+    def record_tick(self, n_active: int, n_slots: int,
+                    per_replica: Optional[Sequence[float]] = None) -> None:
         self._occupancy.append(n_active / n_slots if n_slots else 0.0)
+        if per_replica is not None:
+            self._replica_occ.append(list(per_replica))
 
     # ---- summaries --------------------------------------------------------
     def movement_totals(self) -> Dict[str, float]:
@@ -104,25 +117,47 @@ class Metrics:
         suspends/resumes is ONE decision with ``n_items == k``."""
         return [d.n_items for d in self.decisions if d.kind == kind]
 
-    def _class_summary(self, jobs: List[JobRecord]) -> Dict[str, float]:
+    def _class_summary(self, jobs: List[JobRecord]) -> Dict[str, object]:
+        """Latency/SLO summary of one job bucket.  An EMPTY bucket (or one
+        with no SLO-bearing jobs) reports ``None``, never a number — an
+        idle class must not read as a perfect p99/attainment."""
         lats = [j.latency_ns for j in jobs]
         with_slo = [j for j in jobs if math.isfinite(j.slo_ns)]
         return {
             "n": len(jobs),
-            "p50_latency_ns": round(percentile_ns(lats, 50), 1),
-            "p99_latency_ns": round(percentile_ns(lats, 99), 1),
+            "p50_latency_ns": _round(percentile_ns(lats, 50), 1),
+            "p99_latency_ns": _round(percentile_ns(lats, 99), 1),
             "slo_attainment": (round(sum(j.slo_met for j in with_slo)
                                      / len(with_slo), 4)
-                               if with_slo else 1.0),
+                               if with_slo else None),
+        }
+
+    def migration_summary(self) -> Dict[str, object]:
+        """Cross-replica view: how many sessions moved, and the latency
+        split between jobs whose service involved a migration and jobs
+        served entirely at home (the cluster's Table-1 question: did the
+        hop chain pay for itself?)."""
+        moved = [j for j in self.jobs if j.migrations > 0]
+        local = [j for j in self.jobs if j.migrations == 0]
+        return {
+            "sessions_migrated": sum(d.n_items for d in self.decisions
+                                     if d.kind == "migrate_wave"),
+            "migrate_waves": sum(1 for d in self.decisions
+                                 if d.kind == "migrate_wave"),
+            "jobs_migrated": len(moved),
+            "p99_latency_ns_migrated": _round(
+                percentile_ns([j.latency_ns for j in moved], 99), 1),
+            "p99_latency_ns_local": _round(
+                percentile_ns([j.latency_ns for j in local], 99), 1),
         }
 
     def summary(self) -> Dict[str, object]:
-        per_class: Dict[str, Dict[str, float]] = {}
+        per_class: Dict[str, Dict[str, object]] = {}
         for cls in sorted({j.priority for j in self.jobs}):
             per_class[str(cls)] = self._class_summary(
                 [j for j in self.jobs if j.priority == cls])
         overall = self._class_summary(self.jobs)
-        return {
+        out = {
             "jobs_completed": len(self.jobs),
             "tokens": sum(j.tokens for j in self.jobs),
             "p50_latency_ns": overall["p50_latency_ns"],
@@ -136,3 +171,10 @@ class Metrics:
                          for k, v in self.movement_totals().items()},
             "decisions": self.decision_counts(),
         }
+        if self._replica_occ:           # cluster run: per-replica view
+            n_rep = len(self._replica_occ[0])
+            out["per_replica_utilization"] = [
+                round(sum(t[r] for t in self._replica_occ)
+                      / len(self._replica_occ), 4) for r in range(n_rep)]
+            out["migration"] = self.migration_summary()
+        return out

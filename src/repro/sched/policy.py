@@ -50,6 +50,19 @@ class VictimCand(NamedTuple):
     fast_resident: bool
 
 
+class PlaceCand(NamedTuple):
+    """One replica a cluster placement could land on — the third decision
+    axis (beside admission and eviction).  ``hop_ns`` is the modeled
+    migration cost from the session's current residence to this replica
+    (0 for fresh requests and for the home replica); ``place_ns`` the
+    modeled resume/prefill cost once there."""
+    replica: int
+    free_slots: int         # open slots on the replica right now
+    fast_occupancy: float   # fraction of the VILLA fast tier in use
+    hop_ns: float
+    place_ns: float
+
+
 @dataclasses.dataclass(frozen=True)
 class SchedContext:
     """Read-only facts policies may consult."""
@@ -74,6 +87,12 @@ class SchedPolicy:
     def victim_order(self, cands: Sequence[VictimCand],
                      ctx: SchedContext) -> List[VictimCand]:
         return sorted(cands, key=lambda c: c.slot)
+
+    def place_order(self, cands: Sequence[PlaceCand],
+                    ctx: SchedContext) -> List[PlaceCand]:
+        """Replica preference for one placement (cluster scheduling only):
+        base policies spread by free slots and ignore the movement bill."""
+        return sorted(cands, key=lambda c: (-c.free_slots, c.replica))
 
 
 class FifoPolicy(SchedPolicy):
@@ -119,6 +138,27 @@ class CostAwarePolicy(SchedPolicy):
                                             c.last_active_tick, c.slot))
 
 
+class CostAwareClusterPolicy(CostAwarePolicy):
+    """``cost_aware`` plus a movement-priced placement axis.
+
+    Placement scores every replica by (free slots, modeled movement bill,
+    VILLA fast-tier occupancy): a replica with an open slot always beats
+    one that needs preemption; among those, the cheapest total move wins —
+    ``hop_ns`` (the ICI hop-chain price of migrating the session from its
+    residence, 0 at home) plus the resume/prefill cost — and a less
+    pressured fast tier breaks ties (an overfull fast tier means the
+    inbound session will keep resuming at slow-subarray timings).  This is
+    the paper's Sec. 3.2 "intelligent cost-aware mechanism" applied to
+    replica topology: distance-1 neighbors are preferred over far hops
+    exactly as LISA prefers near-subarray RBM chains."""
+    name = "cost_aware_cluster"
+
+    def place_order(self, cands, ctx):
+        return sorted(cands, key=lambda c: (c.free_slots <= 0,
+                                            c.hop_ns + c.place_ns,
+                                            c.fast_occupancy, c.replica))
+
+
 _POLICIES: Dict[str, SchedPolicy] = {}
 
 
@@ -153,3 +193,4 @@ def policies() -> Tuple[str, ...]:
 register_policy(FifoPolicy())
 register_policy(LruPolicy())
 register_policy(CostAwarePolicy())
+register_policy(CostAwareClusterPolicy())

@@ -38,8 +38,8 @@ import math
 from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 from repro.sched.metrics import Decision, JobRecord, Metrics
-from repro.sched.policy import (AdmitCand, SchedContext, SchedPolicy,
-                                VictimCand, get_policy)
+from repro.sched.policy import (AdmitCand, PlaceCand, SchedContext,
+                                SchedPolicy, VictimCand, get_policy)
 from repro.sched.queue import AdmissionQueue, QueueEntry
 from repro.sched.workload import Arrival
 from repro.serve.engine import Engine, Request
@@ -78,6 +78,7 @@ class Job:
     slot: int = -1
     seed_tokens: int = 0       # generated[0] is a resume seed, not new work
     done_ns: float = math.nan
+    migrations: int = 0        # cross-replica moves while serving this job
 
 
 class Wave(NamedTuple):
@@ -451,7 +452,8 @@ class Scheduler:
         self.metrics.record_job(JobRecord(
             job_id=job.job_id, uid=job.uid, kind=job.kind,
             priority=job.priority, arrival_ns=job.arrival_ns,
-            done_ns=job.done_ns, slo_ns=job.slo_ns, tokens=job.done))
+            done_ns=job.done_ns, slo_ns=job.slo_ns, tokens=job.done,
+            migrations=job.migrations))
 
     def _activate(self, entry: QueueEntry, slot: int, *,
                   seed_tokens: int) -> None:
@@ -467,3 +469,312 @@ class Scheduler:
 
     def active_jobs(self) -> Dict[int, Job]:
         return dict(self._slot_job)
+
+
+class ClusterWave(NamedTuple):
+    """One tick's prepared cluster decisions: preemption victims (global
+    slots) and placements, each annotated with its target replica."""
+    victims: Tuple[int, ...]
+    placements: Tuple[AdmitCand, ...]
+    targets: Tuple[int, ...]
+
+
+class ClusterScheduler(Scheduler):
+    """The cluster tick loop: admission, eviction AND placement.
+
+    Drives a :class:`~repro.serve.cluster.Cluster` through the same
+    engine-shaped surface the base scheduler uses, plus the third decision
+    axis: every placement picks a *replica*, scored by the policy's
+    ``place_order`` over (free slots, VILLA fast-tier occupancy, modeled
+    hop cost from the session's current residence).  A resume placed off
+    its home replica triggers a live migration — suspended pages cross the
+    mesh as one fused hop-chain plan per route — before the per-replica
+    fused resume waves fire.  ``migrate=False`` pins every resume to its
+    residence replica (the A/B arm ``benchmarks/run.py cluster`` gates on).
+
+    The virtual clock models the replicas as parallel lanes: each tick
+    advances by one ``decode_ns`` (all replicas decode concurrently) plus
+    the MAX over replicas of that replica's movement/prefill work, with a
+    migration occupying both endpoints of its route.  The base scheduler's
+    serial-advance semantics are unchanged — single-engine benchmarks
+    (BENCH_sched) are bit-identical to PR 4.
+    """
+
+    def __init__(self, cluster, policy="cost_aware_cluster",
+                 arrivals: Sequence[Arrival] = (),
+                 cfg: SchedConfig = SchedConfig(), *, migrate: bool = True):
+        super().__init__(cluster, policy=policy, arrivals=arrivals, cfg=cfg)
+        self.cluster = cluster
+        self.migrate = migrate
+
+    # ---- the tick (parallel replica lanes) --------------------------------
+    def tick(self) -> None:
+        self.tick_count += 1
+        if (not self.eng.active and not self._has_admissible()
+                and self._next_arrival < len(self._arrivals)):
+            self.now_ns = max(self.now_ns,
+                              self._arrivals[self._next_arrival].t_ns)
+        self._admit_arrivals()
+        self.metrics.record_tick(
+            len(self.eng.active), self.eng.slots,
+            per_replica=[len(e.active) / e.slots
+                         for e in self.cluster.replicas])
+
+        # 1. ONE fused decode dispatch per replica, all in flight at once
+        handle = self.eng.step_begin()
+        decoded = handle is not None
+
+        # 2. overlapped wave preparation against pre-step state
+        fast_uids = self.eng.fast_resident_uids()
+        wave = self._prepare_wave(fast_uids)
+
+        # 3. sync; completed bursts auto-suspend per replica (fused waves)
+        completed = self.eng.step_end(handle)
+        advance = self.cfg.decode_ns if decoded else 0.0
+        if completed:
+            flags = [self._slot_job[s].uid in fast_uids
+                     for s, _ in completed]
+            self._charge_wave("complete_suspend", flags, "suspend")
+            lanes: Dict[int, float] = {}
+            for (s, _), f in zip(completed, flags):
+                r = self.cluster.replica_of(s)
+                lanes[r] = lanes.get(r, 0.0) + self._move_ns("suspend", f)
+            advance += max(lanes.values(), default=0.0)
+        self.now_ns += advance
+        for slot, req in completed:
+            job = self._slot_job.pop(slot)
+            job.done += len(req.generated) - job.seed_tokens
+            self._complete_job(job, self.now_ns)
+
+        # 4. execute the prepared wave
+        self.now_ns += self._execute_wave(wave, fast_uids)
+
+    # ---- placement scoring ------------------------------------------------
+    def _place_cands(self, e: QueueEntry, fast_uids: frozenset,
+                     free: List[int], occ: List[float]) -> List[PlaceCand]:
+        """Every replica this entry may land on, with its modeled bill.
+        With migration off, a resume can ONLY land where its snapshot
+        resides."""
+        home = (self.cluster.residence.get(e.uid)
+                if e.kind == "resume" else None)
+        if e.kind == "resume" and not self.migrate:
+            reps: Sequence[int] = (home,)
+        else:
+            reps = range(self.cluster.n_replicas)
+        mech = self.cfg.mechanism
+        out = []
+        for r in reps:
+            if e.kind == "resume":
+                place = self._move_ns("resume",
+                                      e.uid in fast_uids and r == home)
+                hop = self.cluster.hop_ns(home, r, mech)
+            else:
+                place = self.cfg.prefill_ns_per_token * len(e.prompt)
+                hop = 0.0
+            out.append(PlaceCand(replica=r, free_slots=free[r],
+                                 fast_occupancy=occ[r], hop_ns=hop,
+                                 place_ns=place))
+        return out
+
+    # ---- wave preparation (runs while the decodes are in flight) ----------
+    def _prepare_wave(self, fast_uids: frozenset) -> ClusterWave:
+        tick = self.tick_count
+        ctx = SchedContext(tick=tick, now_ns=self.now_ns,
+                           mechanism=self.cfg.mechanism, fast_uids=fast_uids)
+        active_uids = {j.uid for j in self._slot_job.values()}
+        resumable = set(self.eng.session_pos)
+        free = self.cluster.free_by_replica()
+        occ = self.cluster.fast_occupancy()
+        cands = []
+        # hop/place pricing per entry is computed ONCE; only the free-slot
+        # counts change as the wave reserves slots below
+        place_cache: Dict[int, List[PlaceCand]] = {}
+        for e in self.queue.entries():
+            if e.kind == "resume" and (e.uid in active_uids
+                                       or e.uid not in resumable):
+                continue
+            pcs = self._place_cands(e, fast_uids, free, occ)
+            place_cache[id(e)] = pcs
+            cands.append(AdmitCand(
+                entry=e, eff_class=self.queue.effective_class(e, tick),
+                cost_ns=min(pc.hop_ns + pc.place_ns for pc in pcs),
+                fast_resident=e.uid in fast_uids))
+
+        budget = self.cfg.max_wave or len(cands)
+        victims: List[VictimCand] = []
+        placements: List[AdmitCand] = []
+        targets: List[int] = []
+        picked_uids: set = set()
+        victim_order: Optional[List[VictimCand]] = None
+        for c in self.policy.admit_order(cands, ctx):
+            if len(placements) >= budget:
+                break
+            if c.entry.uid in picked_uids:
+                continue
+            chosen: Optional[int] = None
+            victim: Optional[VictimCand] = None
+            cands_now = [pc._replace(free_slots=free[pc.replica])
+                         for pc in place_cache[id(c.entry)]]
+            for pc in self.policy.place_order(cands_now, ctx):
+                if free[pc.replica] > 0:
+                    chosen = pc.replica
+                    break
+                if self.cfg.preempt:
+                    if victim_order is None:
+                        victim_order = self.policy.victim_order(
+                            self._victim_cands(fast_uids), ctx)
+                    victim = next(
+                        (v for v in victim_order if v not in victims
+                         and v.priority > c.eff_class
+                         and self.cluster.replica_of(v.slot) == pc.replica),
+                        None)
+                    if victim is not None:
+                        chosen = pc.replica
+                        break
+            if chosen is None:
+                # unlike the single-engine case, unplaceable is per-
+                # candidate (a migration-off resume may be pinned to a full
+                # replica while others are open) — skip, don't give up
+                continue
+            if victim is not None:
+                victims.append(victim)
+            else:
+                free[chosen] -= 1
+            placements.append(c)
+            targets.append(chosen)
+            picked_uids.add(c.entry.uid)
+        return ClusterWave(victims=tuple(v.slot for v in victims),
+                           placements=tuple(placements),
+                           targets=tuple(targets))
+
+    # ---- wave execution ---------------------------------------------------
+    def _execute_wave(self, wave: ClusterWave,
+                      fast_uids: frozenset) -> float:
+        cl = self.cluster
+        lanes = [0.0] * cl.n_replicas
+        spos = self.eng.session_pos          # one merged snapshot per phase
+        active = self.eng.active
+        pairs = [(c, t) for c, t in zip(wave.placements, wave.targets)
+                 if c.entry.kind == "fresh" or c.entry.uid in spos]
+
+        # keep only the victims still needed: completions during the
+        # overlapped decode may have freed slots on a placement's replica,
+        # and a context-exhausted resume (no room left) completes without
+        # ever taking a slot — neither justifies a preemption
+        free = cl.free_by_replica()
+        need: Dict[int, int] = {}
+        for c, t in pairs:
+            if (c.entry.kind == "resume"
+                    and self.eng.max_len - spos[c.entry.uid] < 1):
+                continue
+            need[t] = need.get(t, 0) + 1
+        victims = []
+        for g in wave.victims:
+            if g not in active:
+                continue
+            r = cl.replica_of(g)
+            if need.get(r, 0) > free[r]:
+                victims.append(g)
+                free[r] += 1
+        if victims:
+            requeue = []
+            for g in victims:
+                job = self._slot_job.pop(g)
+                req = active[g]
+                job.done += len(req.generated) - job.seed_tokens
+                job.state, job.slot = "queued", -1
+                self._last_active[job.uid] = self.tick_count
+                requeue.append(job)
+            cl.suspend_many(victims)        # one fused dispatch per replica
+            self._charge_wave("preempt_suspend",
+                              [j.uid in fast_uids for j in requeue],
+                              "suspend")
+            for g, job in zip(victims, requeue):
+                lanes[cl.replica_of(g)] += self._move_ns(
+                    "suspend", job.uid in fast_uids)
+            for job in requeue:
+                self.queue.push(job_id=job.job_id, uid=job.uid,
+                                kind="resume", priority=job.priority,
+                                arrival_ns=job.arrival_ns, slo_ns=job.slo_ns,
+                                tick=self.tick_count,
+                                new_tokens=job.target_new - job.done,
+                                seq=job.job_id)
+
+        # resumes: migrate off-home sessions (one fused plan per route),
+        # then ONE fused resume_many wave per replica.  Fresh snapshot:
+        # the preemption suspends above can evict colliding store indices
+        spos = self.eng.session_pos
+        resumes = [(c, t) for c, t in pairs if c.entry.kind == "resume"
+                   and c.entry.uid in spos]
+        ready, extras, rtargets = [], [], []
+        for c, t in resumes:
+            room = self.eng.max_len - spos[c.entry.uid]
+            n = min(c.entry.new_tokens, room)
+            job = self._jobs[c.entry.job_id]
+            if n < 1:
+                self.queue.remove(c.entry)
+                job.target_new = job.done       # context exhausted
+                self._complete_job(job, self.now_ns + max(lanes))
+                continue
+            job.target_new -= c.entry.new_tokens - n
+            ready.append(c)
+            extras.append(n + 1)                # +1: the restored seed token
+            rtargets.append(t)
+        if ready:
+            homes = {c.entry.uid: cl.residence[c.entry.uid] for c in ready}
+            migs = [(c, t) for c, t in zip(ready, rtargets)
+                    if homes[c.entry.uid] != t]
+            if migs:
+                tot = [0.0, 0.0, 0.0, 0.0]
+                for c, t in migs:
+                    src = homes[c.entry.uid]
+                    mc = cl.migration_plan(src, t).cost
+                    ns = (mc.ns_lisa if self.cfg.mechanism == "lisa"
+                          else mc.ns_memcpy)
+                    # the inbound replica waits for the hop chain; the
+                    # source end only runs the (free) page gather — its
+                    # decode lane is not stalled by an outbound migration
+                    lanes[t] += ns
+                    for i, v in enumerate((mc.ns_lisa, mc.ns_memcpy,
+                                           mc.uj_lisa, mc.uj_memcpy)):
+                        tot[i] += v
+                    self._jobs[c.entry.job_id].migrations += 1
+                self.metrics.record_decision(Decision(
+                    tick=self.tick_count, kind="migrate_wave",
+                    n_items=len(migs), ns_lisa=tot[0], ns_memcpy=tot[1],
+                    uj_lisa=tot[2], uj_memcpy=tot[3]))
+            slots = cl.resume_many([c.entry.uid for c in ready], extras,
+                                   rtargets)
+            for c, slot in zip(ready, slots):
+                self._activate(c.entry, slot, seed_tokens=1)
+            flags = [c.fast_resident and homes[c.entry.uid] == t
+                     for c, t in zip(ready, rtargets)]
+            self._charge_wave("resume_wave", flags, "resume")
+            for t, f in zip(rtargets, flags):
+                lanes[t] += self._move_ns("resume", f)
+
+        # fresh admissions: prefills run concurrently across replicas
+        for c, t in pairs:
+            if c.entry.kind != "fresh":
+                continue
+            e = c.entry
+            job = self._jobs[e.job_id]
+            budget = min(e.new_tokens, self.eng.max_len - len(e.prompt) + 1)
+            job.target_new -= e.new_tokens - budget
+            req = Request(uid=e.uid, prompt=e.prompt, max_new=budget,
+                          arrival_ns=e.arrival_ns, priority=e.priority,
+                          slo_ns=e.slo_ns)
+            gslot = cl.submit(req, replica=t)
+            lanes[t] += self.cfg.prefill_ns_per_token * len(e.prompt)
+            self.metrics.record_decision(Decision(
+                tick=self.tick_count, kind="submit", n_items=1))
+            if gslot in self.eng.active:
+                self._activate(e, gslot, seed_tokens=0)
+            else:                   # 1-token job: completed at prefill
+                self.queue.remove(e)
+                job.done += len(req.generated)
+                self._charge_wave("complete_suspend",
+                                  [job.uid in fast_uids], "suspend")
+                lanes[t] += self._move_ns("suspend", job.uid in fast_uids)
+                self._complete_job(job, self.now_ns + max(lanes))
+        return max(lanes) if lanes else 0.0

@@ -141,3 +141,32 @@ def n_sessions_for(cfg: WorkloadConfig) -> int:
     """Store sizing that makes uid collisions (explicit evictions)
     impossible for this workload: one store index per distinct session."""
     return max(cfg.n_fresh, 2)
+
+
+def skewed_residence_burst(vocab_size: int, *, burst_slo_ns: float = 18_000.0,
+                           seed: int = 7) -> List[Arrival]:
+    """The transient-imbalance scenario the cluster migration A/B gates on
+    (consumed by both ``benchmarks/run.py cluster`` and
+    ``tests/test_cluster.py`` — one definition, two drivers).
+
+    Three long equal-class jobs pin replicas 0..2 of a 4x1-slot cluster, so
+    four interactive sessions serialize onto replica 3 and all SUSPEND
+    there; then all four return at once under a tight SLO.  Migration-
+    enabled placement fans the burst across the (by then idle) other
+    replicas via priced hop-chain plans; migration-off serializes the whole
+    burst on the home replica and misses.  Run with a large ``age_every``
+    (e.g. 64) so aging doesn't let the setup jobs preempt the pinners.
+    """
+    rng = np.random.default_rng(seed)
+    arr = [Arrival(t_ns=0.0, uid=100 + i, kind="fresh", priority=1,
+                   slo_ns=math.inf, new_tokens=30,
+                   prompt=rng.integers(0, vocab_size, 8).astype(np.int32))
+           for i in range(3)]
+    arr += [Arrival(t_ns=1500.0 + 500.0 * i, uid=i, kind="fresh",
+                    priority=1, slo_ns=60_000.0, new_tokens=3,
+                    prompt=rng.integers(0, vocab_size, 6).astype(np.int32))
+            for i in range(4)]
+    arr += [Arrival(t_ns=45_000.0, uid=i, kind="resume", priority=0,
+                    slo_ns=burst_slo_ns, new_tokens=3, prompt=None)
+            for i in range(4)]
+    return arr

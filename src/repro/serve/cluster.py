@@ -1,0 +1,395 @@
+"""Multi-replica serving: N engines on a mesh, with live session migration.
+
+LISA links adjacent subarrays so a row can hop across the chip at full
+internal bandwidth instead of draining through the narrow channel (PAPER.md
+Sec. 3).  A serving fleet has the same shape one level up: each replica is a
+"subarray" holding sessions (suspended KV snapshots in its VILLA tiered
+store), the ICI mesh is the inter-subarray link fabric, and the host/PCIe
+path is the narrow channel.  This module is that analogy made executable:
+
+  * **replica placement ↔ subarray distance** — replicas sit on a
+    :class:`~repro.core.lisa.topology.MeshTopology` ring; moving a session
+    from replica ``i`` to ``j`` costs ``hops(i, j)`` ICI hops, priced by the
+    same :func:`~repro.core.lisa.topology.ici_dram_spec` Table-1 model that
+    prices every other movement in the repo.
+  * **live migration ↔ RBM hop chain** — a migration is a
+    :class:`~repro.movement.plan.MovementPlan` (page gather out of the
+    source replica's slow pool → ``hop_chain`` across the mesh → page
+    scatter into the destination pool), planned per route and priced as ONE
+    copy.  It is loss-free and bit-exact: the pages are dtype-preserving
+    uint8, and the session's host bookkeeping (position, seed token)
+    travels with them.
+  * **migration waves ↔ fused row moves** — a rebalance burst groups
+    sessions by route; each route is ONE jitted gather+scatter dispatch
+    (one long page table), never one dispatch per session — the cluster
+    dual of ``suspend_many`` / ``resume_many``.
+
+Every replica shares the first engine's jitted entry points
+(:meth:`Engine.adopt_jits`), so a fleet compiles each hot path once.  The
+cluster exposes an engine-shaped surface over *global* slot ids
+(``replica * slots_per_replica + local_slot``) — the scheduler
+(:class:`repro.sched.scheduler.ClusterScheduler`) drives it exactly like an
+engine, plus the placement axis.
+
+The cluster is single-process: replicas are separate device buffers in one
+address space, so the hop-chain leg of a migration plan is executed as the
+priced route (``local_fabric`` mode) while the gather/scatter legs carry
+the bytes.  The same plan executes a real ``ppermute`` chain under
+``shard_map`` on a multi-device mesh (pinned by tests/test_cluster.py's
+forced-host 4-device test).
+"""
+from __future__ import annotations
+
+import warnings
+from functools import partial
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import movement as MV
+from repro.configs.base import ModelConfig
+from repro.core.dram.spec import DDR3_1600, DramSpec
+from repro.core.dram.villa import VillaConfig
+from repro.core.lisa.topology import MeshTopology
+from repro.serve.engine import Engine, EngineFull, Request, UnknownSession
+
+
+class Cluster:
+    """N identically-configured :class:`Engine` replicas on a mesh ring."""
+
+    def __init__(self, cfg: ModelConfig, params, *, n_replicas: int,
+                 slots: int = 4, max_len: int = 128, n_sessions: int = 64,
+                 villa: Optional[VillaConfig] = None,
+                 spec: DramSpec = DDR3_1600,
+                 topo: Optional[MeshTopology] = None, axis: str = "replica"):
+        if n_replicas < 1:
+            raise ValueError(f"need at least one replica (got {n_replicas})")
+        self.cfg = cfg
+        self.n_replicas = n_replicas
+        self.slots_per_replica = slots
+        self.slots = n_replicas * slots
+        self.max_len = max_len
+        self.spec = spec
+        self.axis = axis
+        self.topo = topo or MeshTopology(n_replicas)
+        if self.topo.size != n_replicas:
+            raise ValueError(f"topology size {self.topo.size} != "
+                             f"n_replicas {n_replicas}")
+        self.replicas: List[Engine] = []
+        for r in range(n_replicas):
+            eng = Engine(cfg, params, slots=slots, max_len=max_len,
+                         n_sessions=n_sessions, villa=villa, spec=spec,
+                         replica_id=r)
+            if self.replicas:
+                # one compile serves the whole fleet
+                eng.adopt_jits(self.replicas[0])
+            self.replicas.append(eng)
+        e0 = self.replicas[0]
+        self.villa_cfg = e0.villa_cfg
+        self.page_spec = e0.page_spec
+        self.n_sessions = e0.n_sessions
+        self.plan_suspend = e0.plan_suspend
+        self.plan_resume = e0.plan_resume
+        self.snapshot_bytes = e0.snapshot_bytes
+        # uid -> replica whose slow pool holds the suspended snapshot
+        self.residence: Dict[int, int] = {}
+        self.cluster_stats = {"migrations": 0, "migration_waves": 0,
+                              "migrated_bytes": 0,
+                              "modeled_migration_ns_lisa": 0.0,
+                              "modeled_migration_ns_memcpy": 0.0}
+        self._route_plans: Dict[Tuple[int, int], MV.MovementPlan] = {}
+        self._migrate_exec = None       # built lazily (n_replicas > 1 only)
+
+    # ---- global slot ids ---------------------------------------------------
+    def _gslot(self, replica: int, slot: int) -> int:
+        return replica * self.slots_per_replica + slot
+
+    def replica_of(self, gslot: int) -> int:
+        return gslot // self.slots_per_replica
+
+    def _local(self, gslot: int) -> int:
+        return gslot % self.slots_per_replica
+
+    # ---- engine-shaped aggregate views --------------------------------------
+    @property
+    def active(self) -> Dict[int, Request]:
+        out: Dict[int, Request] = {}
+        for r, eng in enumerate(self.replicas):
+            for s, req in eng.active.items():
+                out[self._gslot(r, s)] = req
+        return out
+
+    @property
+    def session_pos(self) -> Dict[int, int]:
+        return {uid: self.replicas[r].session_pos[uid]
+                for uid, r in self.residence.items()
+                if uid in self.replicas[r].session_pos}
+
+    def free_slots(self) -> List[int]:
+        return [self._gslot(r, s) for r, eng in enumerate(self.replicas)
+                for s in eng.free_slots()]
+
+    def free_by_replica(self) -> List[int]:
+        return [len(eng.free_slots()) for eng in self.replicas]
+
+    @property
+    def stats(self) -> Dict[str, object]:
+        out: Dict[str, object] = dict(self.cluster_stats)
+        for eng in self.replicas:
+            for k, v in eng.stats.items():
+                out[k] = out.get(k, 0) + v
+        return out
+
+    def fast_resident_uids(self) -> frozenset:
+        out: set = set()
+        for eng in self.replicas:
+            out |= eng.fast_resident_uids()
+        return frozenset(out)
+
+    def fast_occupancy(self) -> List[float]:
+        """Per-replica VILLA fast-tier occupancy (fraction of fast slots
+        holding a live snapshot) — a placement signal: an overfull fast
+        tier means inbound sessions will resume at slow-tier timings."""
+        out = []
+        for eng in self.replicas:
+            tags = np.asarray(eng.sessions.policy.tags)
+            live = sum(1 for t in tags if t >= 0 and int(t) in eng.store_uid)
+            out.append(live / max(len(tags), 1))
+        return out
+
+    def hit_rate(self) -> float:
+        hits = sum(int(eng.sessions.hits) for eng in self.replicas)
+        acc = sum(int(eng.sessions.accesses) for eng in self.replicas)
+        return hits / acc if acc else 0.0
+
+    def compile_counts(self) -> Dict[str, int]:
+        out = self.replicas[0].compile_counts()     # jits are fleet-shared
+        fn = self._migrate_exec
+        out["migrate"] = (fn._cache_size()
+                         if fn is not None and hasattr(fn, "_cache_size")
+                         else (0 if fn is None else -1))
+        return out
+
+    # ---- decode ------------------------------------------------------------
+    def step_begin(self):
+        """ONE fused decode dispatch per replica with live work (issued
+        async, back to back — the replicas decode in parallel)."""
+        handles = [eng.step_begin() for eng in self.replicas]
+        return None if all(h is None for h in handles) else handles
+
+    def step_end(self, handles) -> List[Tuple[int, Request]]:
+        if handles is None:
+            return []
+        completed: List[Tuple[int, Request]] = []
+        for r, (eng, h) in enumerate(zip(self.replicas, handles)):
+            for s, req in eng.step_end(h):
+                self.residence[req.uid] = r      # auto-suspended here
+                completed.append((self._gslot(r, s), req))
+        return completed
+
+    def step(self) -> List[Tuple[int, Request]]:
+        return self.step_end(self.step_begin())
+
+    # ---- admission / suspension ---------------------------------------------
+    def submit(self, req: Request, replica: Optional[int] = None) -> int:
+        """Prefill-admit a fresh request onto ``replica`` (the scheduler's
+        placement decision; default = first replica with a free slot)."""
+        if replica is None:
+            replica = next((r for r, eng in enumerate(self.replicas)
+                            if eng.free_slots()), None)
+            if replica is None:
+                raise EngineFull(f"all {self.slots} cluster slots busy")
+        eng = self.replicas[replica]
+        slot = eng.submit(req)
+        if slot not in eng.active:               # completed at prefill
+            self.residence[req.uid] = replica
+        return self._gslot(replica, slot)
+
+    def suspend(self, gslot: int) -> None:
+        self.suspend_many([gslot])
+
+    def suspend_many(self, gslots: Sequence[int]) -> None:
+        """Suspend a wave of global slots: grouped by replica, ONE fused
+        dispatch per replica involved (never one per session)."""
+        by_rep: Dict[int, List[int]] = {}
+        for g in gslots:
+            by_rep.setdefault(self.replica_of(g), []).append(self._local(g))
+        for r, slots in by_rep.items():
+            eng = self.replicas[r]
+            uids = [eng.active[s].uid for s in slots]
+            if len(slots) == 1:
+                eng.suspend(slots[0])
+            else:
+                eng.suspend_many(slots)
+            for uid in uids:
+                self.residence[uid] = r
+
+    # ---- resume (with implicit migration) ------------------------------------
+    def resume(self, uid: int, extra_new: int,
+               replica: Optional[int] = None) -> int:
+        return self.resume_many([uid], extra_new,
+                                None if replica is None else [replica])[0]
+
+    def resume_many(self, uids: Sequence[int], extra_new,
+                    replicas: Optional[Sequence[int]] = None) -> List[int]:
+        """Resume a wave of sessions, each on its target replica (default:
+        where it resides).  Sessions whose target differs from their
+        residence are MIGRATED first — grouped by route, one hop-chain
+        plan dispatch per route — then each replica's resumes run as one
+        fused ``resume_many`` wave.  Returns global slots in input order."""
+        if not uids:
+            return []
+        extras = ([int(extra_new)] * len(uids)
+                  if isinstance(extra_new, (int, np.integer))
+                  else [int(e) for e in extra_new])
+        if len(extras) != len(uids):
+            raise ValueError(f"extra_new sequence has {len(extras)} entries "
+                             f"for {len(uids)} uids")
+        targets = (list(replicas) if replicas is not None
+                   else [self._home(u) for u in uids])
+        if len(targets) != len(uids):
+            raise ValueError(f"replicas sequence has {len(targets)} entries "
+                             f"for {len(uids)} uids")
+        moves = [(u, t) for u, t in zip(uids, targets)
+                 if self._home(u) != t]
+        if moves:
+            self.migrate_many(moves)
+        by_rep: Dict[int, List[int]] = {}
+        for i, t in enumerate(targets):
+            by_rep.setdefault(t, []).append(i)
+        gslots = [0] * len(uids)
+        for r, idxs in by_rep.items():
+            eng = self.replicas[r]
+            slots = eng.resume_many([uids[i] for i in idxs],
+                                    [extras[i] for i in idxs])
+            for i, s in zip(idxs, slots):
+                gslots[i] = self._gslot(r, s)
+        return gslots
+
+    def _home(self, uid: int) -> int:
+        if uid not in self.residence:
+            raise UnknownSession(
+                f"uid {uid} has no suspended session on any replica")
+        return self.residence[uid]
+
+    # ---- live migration -------------------------------------------------------
+    def migration_plan(self, src: int, dst: int,
+                       k: int = 1) -> MV.MovementPlan:
+        """The priced route plan for ``k`` sessions moving src -> dst:
+        page gather -> mesh hop chain -> page scatter, ONE copy under the
+        Table-1 model (the hop leg carries the payload at ICI pricing; the
+        memcpy alternative is the two-leg PCIe host path)."""
+        key = (src, dst, k)
+        if key not in self._route_plans:
+            self._route_plans[key] = MV.plan(
+                MV.Transfer(MV.Tier("slow", index=src, axis=self.axis),
+                            MV.Tier("slow", index=dst, axis=self.axis),
+                            MV.Layout.pages(self.page_spec, batch=k)),
+                self.spec, topo=self.topo)
+        return self._route_plans[key]
+
+    def hop_ns(self, src: int, dst: int, mechanism: str = "lisa") -> float:
+        """Modeled one-session migration latency over the src->dst route
+        under ``mechanism`` — the scheduler's placement-cost input."""
+        if src == dst:
+            return 0.0
+        c = self.migration_plan(src, dst).cost
+        return c.ns_lisa if mechanism == "lisa" else c.ns_memcpy
+
+    def _build_migrate_exec(self):
+        """The jitted route executor, shared by every route: gather the
+        sessions' pages out of the source pool, scatter them into the
+        destination pool (donated).  The hop-chain leg between them is the
+        priced mesh route (identity in single-process ``local_fabric``
+        mode); routes differ only in pricing, so ONE compilation per wave
+        width serves every route."""
+        exec_plan = self.migration_plan(0, 1 % self.n_replicas)
+        P, d = self.page_spec.page_rows, self.page_spec.page_lanes
+
+        @partial(jax.jit, donate_argnums=(1,))
+        def body(src_slow, dst_slow, src_table, dst_table):
+            env = MV.execute(exec_plan,
+                             src_pool=src_slow.reshape(-1, P, d),
+                             src_table=src_table,
+                             dst_pool=dst_slow.reshape(-1, P, d),
+                             dst_table=dst_table, local_fabric=True)
+            return env["dst_pool"].reshape(dst_slow.shape)
+
+        return body
+
+    def migrate(self, uid: int, dst: int) -> None:
+        self.migrate_many([(uid, dst)])
+
+    def migrate_many(self, moves: Sequence[Tuple[int, int]]) -> None:
+        """Migrate a burst of suspended sessions, each ``(uid, dst_replica)``.
+
+        Sessions are grouped by (src, dst) route; each route executes as
+        ONE jitted page gather+scatter over a fused page table (the wave
+        idiom of ``suspend_many``/``resume_many``), priced by one hop-chain
+        plan of batch k.  Bit-exact and loss-free: uint8 pages plus the
+        host bookkeeping (position, seed token) move together."""
+        if not moves:
+            return
+        uids = [u for u, _ in moves]
+        if len(set(uids)) != len(uids):
+            raise ValueError(f"duplicate uids in migration wave: {uids}")
+        active_uids = {r.uid for r in self.active.values()}
+        routes: Dict[Tuple[int, int], List[int]] = {}
+        for uid, dst in moves:
+            if not 0 <= dst < self.n_replicas:
+                raise ValueError(f"unknown destination replica {dst}")
+            if uid in active_uids:
+                raise ValueError(f"uid {uid} is active; suspend it before "
+                                 f"migrating its session")
+            src = self._home(uid)
+            if src == dst:
+                raise ValueError(f"uid {uid} already resides on replica "
+                                 f"{dst}; migration needs a real route")
+            routes.setdefault((src, dst), []).append(uid)
+        if self._migrate_exec is None:
+            self._migrate_exec = self._build_migrate_exec()
+
+        spp = self.page_spec.n_pages
+        arange = np.arange(spp, dtype=np.int32)
+        for (src, dst), route_uids in routes.items():
+            s_eng, d_eng = self.replicas[src], self.replicas[dst]
+            metas = [s_eng.session_meta(u) for u in route_uids]
+            src_idx = [s_eng.drop_session(u) for u in route_uids]
+            dst_idx = [d_eng.adopt_session(u, p, t)
+                       for u, (p, t) in zip(route_uids, metas)]
+            self._invalidate_fast(d_eng, dst_idx)
+            src_table = np.concatenate([i * spp + arange for i in src_idx])
+            dst_table = np.concatenate([i * spp + arange for i in dst_idx])
+            with warnings.catch_warnings():
+                warnings.filterwarnings(
+                    "ignore", message="Some donated buffers were not usable")
+                new_slow = self._migrate_exec(
+                    s_eng.sessions.slow, d_eng.sessions.slow,
+                    jnp.asarray(src_table), jnp.asarray(dst_table))
+            d_eng.sessions = d_eng.sessions._replace(slow=new_slow)
+            for uid in route_uids:
+                self.residence[uid] = dst
+            k = len(route_uids)
+            cost = self.migration_plan(src, dst, k).cost
+            self.cluster_stats["migrations"] += k
+            self.cluster_stats["migration_waves"] += 1
+            self.cluster_stats["migrated_bytes"] += cost.bytes
+            self.cluster_stats["modeled_migration_ns_lisa"] += cost.ns_lisa
+            self.cluster_stats["modeled_migration_ns_memcpy"] += (
+                cost.ns_memcpy)
+
+    @staticmethod
+    def _invalidate_fast(eng: Engine, idxs: Sequence[int]) -> None:
+        """Drop stale fast-tier residency for store indices an inbound
+        migration is about to overwrite.  A local suspend writes through to
+        both pools, but a migration scatters into the slow pool only — a
+        fast slot still tagged with the (evicted) index would serve the
+        OLD session's bytes on the next resume."""
+        tags = np.asarray(eng.sessions.policy.tags)
+        stale = [i for i, t in enumerate(tags) if int(t) in idxs]
+        if stale:
+            policy = eng.sessions.policy._replace(
+                tags=eng.sessions.policy.tags.at[np.asarray(stale)].set(-1))
+            eng.sessions = eng.sessions._replace(policy=policy)

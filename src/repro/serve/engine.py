@@ -89,13 +89,17 @@ class Engine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_len: int = 128, n_sessions: int = 64,
                  villa: Optional[VillaConfig] = None,
-                 spec: DramSpec = DDR3_1600):
+                 spec: DramSpec = DDR3_1600, replica_id: int = 0):
         self.cfg = cfg
         self.params = params
         self.spec = spec
         self.slots = slots
         self.max_len = max_len
         self.n_sessions = n_sessions
+        # which replica of a serving fleet this engine is (0 for standalone
+        # use); the cluster layer (serve/cluster.py) keys session residence
+        # and migration routes on it
+        self.replica_id = replica_id
         self.active: Dict[int, Request] = {}        # slot -> request
         self.pos = np.zeros(slots, np.int32)
 
@@ -326,6 +330,34 @@ class Engine:
             if len(req.generated) >= req.max_new:
                 self.suspend(s)
 
+    def adopt_jits(self, other: "Engine") -> None:
+        """Share ``other``'s jitted entry points and wave-plan cache.
+
+        A replica fleet (serve/cluster.py) runs N engines with identical
+        config and geometry; without sharing, each replica would recompile
+        the same decode/prefill/suspend/resume programs.  After adoption
+        every hot path compiles ONCE for the whole fleet — the serving-
+        layer analogue of one shared row-buffer program driving many
+        subarrays."""
+        if (self.cfg is not other.cfg or self.slots != other.slots
+                or self.max_len != other.max_len
+                or self.n_sessions != other.n_sessions
+                or self.page_spec != other.page_spec
+                or self.villa_cfg != other.villa_cfg
+                or self.spec != other.spec):
+            raise ValueError(
+                "adopt_jits needs an identically-configured engine (same "
+                "cfg object, slots, max_len, n_sessions, page layout, "
+                "villa config and DramSpec — the shared suspend/resume "
+                "programs bake in the tier policy and movement pricing)")
+        self._decode = other._decode
+        self._prefill = other._prefill
+        self._suspend = other._suspend
+        self._suspend_many = other._suspend_many
+        self._resume = other._resume
+        self._resume_many = other._resume_many
+        self._wave_plans = other._wave_plans
+
     # ---- VILLA session tiering --------------------------------------------
     def _store_index(self, uid: int) -> int:
         """Map uid -> store index, evicting an aliased session explicitly
@@ -337,6 +369,39 @@ class Engine:
             self.session_tok.pop(old, None)
             self.stats["evictions"] += 1
         self.store_uid[idx] = uid
+        return idx
+
+    # ---- session residence metadata (migration support) -------------------
+    def session_meta(self, uid: int) -> tuple:
+        """(next position, last emitted token) of a suspended session —
+        the host-side bookkeeping a migration must carry along with the
+        snapshot pages."""
+        if uid not in self.session_pos:
+            raise UnknownSession(f"uid {uid} has no suspended session on "
+                                 f"replica {self.replica_id}")
+        return self.session_pos[uid], self.session_tok[uid]
+
+    def adopt_session(self, uid: int, pos: int, tok: int) -> int:
+        """Register an inbound migrated session and return the store index
+        its pages must be scattered into.  Collisions evict explicitly,
+        exactly like a local suspend."""
+        idx = self._store_index(uid)
+        self.session_pos[uid] = int(pos)
+        self.session_tok[uid] = int(tok)
+        return idx
+
+    def drop_session(self, uid: int) -> int:
+        """Forget a suspended session (its pages migrated away); returns
+        the store index the snapshot occupied.  The bytes in the pool are
+        left as-is — the index is dead until a new session claims it."""
+        pos = self.session_pos.pop(uid, None)
+        if pos is None:
+            raise UnknownSession(f"uid {uid} has no suspended session on "
+                                 f"replica {self.replica_id}")
+        self.session_tok.pop(uid, None)
+        idx = uid % self.n_sessions
+        if self.store_uid.get(idx) == uid:
+            del self.store_uid[idx]
         return idx
 
     def _suspend_bookkeep(self, slot: int) -> int:

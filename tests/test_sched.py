@@ -113,6 +113,33 @@ def test_cost_aware_admission_deprioritizes_hopeless_jobs():
     assert [c.entry.seq for c in order] == [2, 1, 0]
 
 
+def test_empty_metric_buckets_report_none_not_zero():
+    """Regression: an idle class must not read as a perfect p99/attainment.
+    Empty latency buckets are ``None`` (strict-JSON ``null``), and a class
+    whose only jobs have infinite SLOs has no attainment to report."""
+    import json
+
+    from repro.sched.metrics import JobRecord, Metrics, percentile_ns
+
+    assert percentile_ns([], 99) is None
+    assert percentile_ns([5.0], 99) == 5.0
+
+    m = Metrics()
+    s = m.summary()                              # no jobs at all
+    assert s["p50_latency_ns"] is None and s["p99_latency_ns"] is None
+    assert s["slo_attainment"] is None
+    json.dumps(s, allow_nan=False)               # strict JSON round-trips
+
+    # one batch-class job (inf SLO): latency exists, attainment does not
+    m.record_job(JobRecord(job_id=0, uid=0, kind="fresh", priority=2,
+                           arrival_ns=0.0, done_ns=100.0, slo_ns=math.inf,
+                           tokens=3))
+    s = m.summary()
+    assert s["per_class"]["2"]["p99_latency_ns"] == 100.0
+    assert s["per_class"]["2"]["slo_attainment"] is None
+    json.dumps(s, allow_nan=False)
+
+
 def test_workload_generator_is_deterministic_and_well_formed():
     wl = sched.WorkloadConfig(n_fresh=5, n_followups=9, arrival="bursty",
                               burst=3)
