@@ -356,7 +356,7 @@ def bench_serve_throughput(out_path="BENCH_serve.json"):
                    "prompt_lens": [len(p) for p in prompts]},
     }
     with open(out_path, "w") as f:
-        json.dump(bench, f, indent=2)
+        json.dump(bench, f, indent=2, allow_nan=False)
     row("serve_decode_one_sync", 1e6 / max(tps_new, 1e-9),
         f"tokens_per_s={tps_new:.1f};speedup_vs_grouped={speedup:.2f}x")
     row("serve_decode_grouped_legacy", 1e6 / max(tps_old, 1e-9),
@@ -499,7 +499,7 @@ def bench_movement(out_path="BENCH_movement.json"):
                    "rounds": rounds, "workload": "serve suspend/resume"},
     }
     with open(out_path, "w") as f:
-        json.dump(bench, f, indent=2)
+        json.dump(bench, f, indent=2, allow_nan=False)
     row("movement_planned_suspend_resume", us_planned,
         f"ratio_vs_legacy={ratio:.3f};within_5pct={bench['within_5pct']}")
     row("movement_legacy_suspend_resume", us_legacy,
@@ -771,11 +771,47 @@ def _check_cluster(b, errs):
         errs.append("cluster: A/B arms completed different job counts")
 
 
+def _check_lint(b, errs):
+    """The committed repro-lint report: clean, waiver-free, and covering
+    every registered jitted entry point (regenerate with
+    ``python -m repro.analysis --strict --audit --report
+    LINT_REPORT.json``)."""
+    if b["schema"] != "repro-lint-report/v1":
+        errs.append(f"lint: unknown report schema {b['schema']!r}")
+        return
+    if b["findings"]:
+        errs.append(f"lint: {len(b['findings'])} active finding(s) in the "
+                    f"committed report")
+    if b["waived"]:
+        errs.append(f"lint: {len(b['waived'])} waiver(s) active — the "
+                    f"waiver file must stay empty")
+    audit = b["audit"]
+    if audit.get("findings"):
+        errs.append(f"lint: {len(audit['findings'])} dispatch-audit "
+                    f"finding(s)")
+    names = {t["name"] for t in audit.get("targets", ())}
+    need = {"decode", "suspend", "suspend_many", "resume", "resume_many",
+            "migrate", "simulate_params"}
+    if need - names:
+        errs.append(f"lint: audit missing entry points {sorted(need - names)}")
+    if not any(n.startswith("prefill[") for n in names):
+        errs.append("lint: audit covers no prefill bucket")
+    for t in audit.get("targets", ()):
+        if t["donated_leaves"] != t["expected_donated_leaves"]:
+            errs.append(f"lint: {t['name']} donation not verified "
+                        f"({t['donated_leaves']}/"
+                        f"{t['expected_donated_leaves']} buffers)")
+        if t.get("jaxpr_host_transfer_eqns", 0) or \
+                t.get("hlo_host_transfer_ops", 0):
+            errs.append(f"lint: {t['name']} has in-graph host transfers")
+
+
 BENCH_SCHEMAS = {
     "BENCH_serve.json": _check_serve,
     "BENCH_movement.json": _check_movement,
     "BENCH_sched.json": _check_sched,
     "BENCH_cluster.json": _check_cluster,
+    "LINT_REPORT.json": _check_lint,
 }
 
 

@@ -1,0 +1,38 @@
+"""repro-lint: static invariant analysis for the jitted hot path and the
+movement architecture.
+
+Two layers over one findings/report shape (DESIGN.md Sec. 11):
+
+* :mod:`repro.analysis.rules` + :mod:`repro.analysis.lint` — the AST
+  architecture linter (movement only via ``plan()``, no host syncs in the
+  tick loop, virtual-clock determinism, strict JSON, import-time
+  registries), behind the repo's fourth rule registry.
+* :mod:`repro.analysis.dispatch` + :mod:`repro.analysis.entrypoints` — the
+  jaxpr/HLO dispatch auditor proving every registered jitted entry point's
+  documented contract (donation honored, zero in-graph host transfers,
+  uint8 page paths bit-exact, bounded compile keys), with the
+  :mod:`repro.roofline.hlo` walker as its compiled-HLO backend.
+
+:mod:`repro.analysis.testlib` is the shared runtime asserter the test
+suite uses for the same dispatch/compile-count invariants, so tests and CI
+gate on one checker.  Console entry point: ``repro-lint`` (or
+``python -m repro.analysis``).
+"""
+from repro.analysis.dispatch import (AuditTarget, EntryContract,
+                                     audit_bucket_stability, audit_target,
+                                     run_audit)
+from repro.analysis.entrypoints import default_targets, prefill_buckets
+from repro.analysis.findings import (Finding, Report, is_waived,
+                                     load_waivers, split_waived)
+from repro.analysis.lint import lint_file, run_lint
+from repro.analysis.rules import (LintRule, all_rules, get_rule,
+                                  register_rule, rule_ids)
+from repro.analysis import testlib
+
+__all__ = [
+    "AuditTarget", "EntryContract", "Finding", "LintRule", "Report",
+    "all_rules", "audit_bucket_stability", "audit_target",
+    "default_targets", "get_rule", "is_waived", "lint_file",
+    "load_waivers", "prefill_buckets", "register_rule", "rule_ids",
+    "run_audit", "run_lint", "split_waived", "testlib",
+]

@@ -1,0 +1,103 @@
+"""``repro-lint``: the static invariant analyzer's console entry point.
+
+Quickstart::
+
+  # architecture lint only (fast, no jax tracing)
+  PYTHONPATH=src python -m repro.analysis --strict
+
+  # lint + the jaxpr/HLO dispatch audit of every jitted entry point,
+  # writing the machine-readable report CI commits and schema-checks
+  PYTHONPATH=src python -m repro.analysis --strict --audit \
+      --report LINT_REPORT.json
+
+Exit status: 0 when clean (waived findings don't fail), 1 when any active
+finding survives — with ``--strict`` this is a hard CI gate.  The waiver
+file (``LINT_WAIVERS`` at the repo root) is expected to be EMPTY; a waiver
+is a visible, committed debt marker, not an escape hatch.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List, Optional
+
+from repro.analysis import lint as L
+from repro.analysis.findings import Finding
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="Static invariant analyzer: AST architecture lint + "
+                    "jaxpr/HLO dispatch audit of every jitted entry point.")
+    p.add_argument("--strict", action="store_true",
+                   help="exit 1 on any active (unwaived) finding")
+    p.add_argument("--audit", action="store_true",
+                   help="also run the jaxpr/HLO dispatch audit (traces and "
+                        "compiles every registered entry point at reduced "
+                        "geometry)")
+    p.add_argument("--no-compiled-hlo", action="store_true",
+                   help="audit via lowering + jaxpr only (skip the "
+                        "compiled-HLO walk)")
+    p.add_argument("--report", metavar="PATH",
+                   help="write the strict-JSON findings report here")
+    p.add_argument("--waivers", metavar="PATH",
+                   help="waiver file (default: LINT_WAIVERS at the repo "
+                        "root; missing == empty)")
+    p.add_argument("--root", metavar="DIR",
+                   help="repo root (default: auto-detected)")
+    p.add_argument("--rules", nargs="*", metavar="RULE",
+                   help="restrict the lint pass to these rule ids")
+    p.add_argument("roots", nargs="*", default=None,
+                   help=f"directories to lint (default: "
+                        f"{' '.join(L.DEFAULT_ROOTS)})")
+    return p
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    repo_root = os.path.abspath(args.root) if args.root else L.find_repo_root()
+    roots = tuple(args.roots) if args.roots else L.DEFAULT_ROOTS
+
+    report = L.run_lint(repo_root=repo_root, roots=roots,
+                        rule_ids=args.rules, waiver_file=args.waivers)
+
+    audit_findings: List[Finding] = []
+    if args.audit:
+        from repro.analysis import dispatch as D
+        from repro.analysis import entrypoints as E
+        targets, engine = E.default_targets()
+        extra = D.audit_bucket_stability(engine, E.prefill_buckets(engine))
+        report.audit = D.run_audit(targets,
+                                   compiled=not args.no_compiled_hlo,
+                                   extra_findings=extra)
+        report.audit["prefill_buckets"] = E.prefill_buckets(engine)
+        audit_findings = [Finding(**f) for f in report.audit["findings"]]
+
+    for f in report.findings + audit_findings:
+        print(f"LINT FAIL {f}")
+    for f in report.waived:
+        print(f"LINT WAIVED {f}")
+    n_audited = len(report.audit.get("targets", []))
+    print(f"repro-lint: {report.files_scanned} files, "
+          f"{len(report.rules)} rules, {n_audited} entry points audited; "
+          f"{len(report.findings) + len(audit_findings)} finding(s), "
+          f"{len(report.waived)} waived")
+
+    if args.report:
+        report.write(args.report)
+        print(f"report -> {args.report}")
+
+    failed = bool(report.findings or audit_findings)
+    if args.strict and report.waived:
+        # strict mode enforces the empty-waiver acceptance bar: a waiver is
+        # tolerated debt locally, never a green CI
+        print(f"LINT FAIL --strict forbids waivers "
+              f"({len(report.waived)} active in {report.waiver_file})")
+        failed = True
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,372 @@
+"""AST architecture lint rules behind a registry.
+
+This extends the repo's registry pattern a fourth time: PR 1 registered
+``CopyMechanism`` objects (pricing a copy), PR 3 registered movement
+*backends* (performing a copy), PR 4 registered scheduling *policies*
+(choosing a copy), and this module registers lint *rules* — proving that no
+code path exists that could perform movement any other way.  Same contract
+as the others: re-registering the same class (module reload) replaces
+silently, a different class under a taken id raises.
+
+Each rule guards one paper invariant (DESIGN.md Sec. 11 has the mapping):
+
+* ``movement-raw-backend`` — all bulk movement flows through
+  ``movement.plan()``; raw kernel/collective calls outside the backend
+  registry would bypass the Table-1 cost accounting (LISA's point is that
+  the *mechanism* is priced, not assumed).
+* ``host-sync-in-hot-loop`` — the tick loop and wave dispatch never sync
+  the device beyond the one sanctioned transfer per step: a stray
+  ``.item()`` is a trip across the narrow channel mid-wave.
+* ``wallclock-in-virtual-clock`` — scheduling runs on the virtual clock;
+  wall-clock reads or unseeded RNG would make the priced schedules (and the
+  CI-gated BENCH numbers) nondeterministic.
+* ``json-nan`` — every JSON artifact is strict JSON (``allow_nan=False``):
+  a NaN that serializes as a bare ``NaN`` literal poisons downstream
+  schema checks silently.
+* ``import-time-registration`` — backends/policies register at import time
+  only; a call-site registration would make dispatch depend on execution
+  order.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple, Type
+
+from repro.analysis.findings import Finding
+
+_RULES: Dict[str, "LintRule"] = {}
+
+
+def register_rule(cls: Type["LintRule"]) -> Type["LintRule"]:
+    """Class decorator: register an instance under ``cls.id`` (the
+    CopyMechanism/backend/policy registry contract)."""
+    old = _RULES.get(cls.id)
+    if old is not None and (type(old).__module__, type(old).__qualname__) != (
+            cls.__module__, cls.__qualname__):
+        raise ValueError(f"lint rule {cls.id!r} already registered by "
+                         f"{type(old).__qualname__}")
+    _RULES[cls.id] = cls()
+    return cls
+
+
+def get_rule(rule_id: str) -> "LintRule":
+    try:
+        return _RULES[rule_id]
+    except KeyError:
+        raise ValueError(f"unknown lint rule {rule_id!r} "
+                         f"(known: {sorted(_RULES)})") from None
+
+
+def rule_ids() -> Tuple[str, ...]:
+    return tuple(sorted(_RULES))
+
+
+def all_rules() -> Tuple["LintRule", ...]:
+    return tuple(_RULES[k] for k in sorted(_RULES))
+
+
+# ---------------------------------------------------------------------------
+# shared AST plumbing
+# ---------------------------------------------------------------------------
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``np.asarray`` -> "np.asarray"; ``x.item`` -> "x.item"; None when the
+    callee is not a plain name/attribute chain (e.g. a subscript)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class _FuncStackVisitor(ast.NodeVisitor):
+    """Generic walker tracking the enclosing-function name stack.  Decorator
+    expressions are visited at the PARENT's depth (a module-level
+    ``@register_backend(...)`` is import-time work, not function-body
+    work)."""
+
+    def __init__(self):
+        self.stack: List[str] = []
+
+    def _visit_func(self, node):
+        for dec in node.decorator_list:
+            self.visit(dec)
+        self.stack.append(node.name)
+        for child in node.body:
+            self.visit(child)
+        for default in list(node.args.defaults) + [
+                d for d in node.args.kw_defaults if d is not None]:
+            self.visit(default)
+        self.stack.pop()
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+
+class LintRule:
+    """Base rule: ``applies_to`` scopes by repo-relative path, ``check``
+    returns findings for one parsed module."""
+
+    id: str = "base"
+    doc: str = ""
+
+    def applies_to(self, relpath: str) -> bool:
+        raise NotImplementedError
+
+    def check(self, tree: ast.Module, relpath: str,
+              source: str) -> List[Finding]:
+        raise NotImplementedError
+
+    def finding(self, relpath: str, node: ast.AST, msg: str) -> Finding:
+        return Finding(rule=self.id, path=relpath,
+                       line=getattr(node, "lineno", 0), message=msg)
+
+
+# ---------------------------------------------------------------------------
+# rule 1: movement only via plan()
+# ---------------------------------------------------------------------------
+
+@register_rule
+class RawBackendRule(LintRule):
+    """Raw movement primitives may be CALLED only where the architecture
+    says the bytes move: the kernel package (definitions and their
+    interpret/reference wrappers), the RBM hop primitives, and the one
+    backend registry that executes ``MovementPlan`` legs.  Everywhere else
+    movement must go through ``movement.plan()`` so it is priced."""
+
+    id = "movement-raw-backend"
+    doc = ("raw villa_gather/villa_scatter/rbm_copy/ppermute call outside "
+           "the movement backend registry")
+
+    RAW_CALLS = frozenset({"villa_gather", "villa_scatter", "rbm_copy",
+                           "ppermute"})
+    ALLOWED = ("src/repro/kernels/",)
+    ALLOWED_FILES = frozenset({"src/repro/movement/backends.py",
+                               "src/repro/core/lisa/rbm.py"})
+
+    def applies_to(self, relpath: str) -> bool:
+        return (relpath.startswith("src/repro/")
+                and relpath not in self.ALLOWED_FILES
+                and not any(relpath.startswith(p) for p in self.ALLOWED))
+
+    def check(self, tree, relpath, source):
+        findings: List[Finding] = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if name and name.split(".")[-1] in self.RAW_CALLS:
+                findings.append(self.finding(
+                    relpath, node,
+                    f"raw movement call {name}() bypasses movement.plan(); "
+                    f"route it through a registered backend so it is priced"))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# rule 2: no host syncs in the tick loop / wave dispatch
+# ---------------------------------------------------------------------------
+
+@register_rule
+class HostSyncRule(LintRule):
+    """The serving hot path makes exactly ONE device→host transfer per
+    decode step (``Engine.step_end``) plus the small sanctioned policy-tag
+    reads the scheduler's cost scoring consults between dispatches.  Any
+    other sync idiom in tick-loop or wave-dispatch code is a trip across
+    the narrow channel the architecture exists to avoid.  The sanctioned
+    readers are structural allowlist entries HERE (reviewed with the rule),
+    never waiver-file lines — the waiver file stays empty."""
+
+    id = "host-sync-in-hot-loop"
+    doc = ("device sync (.item()/np.asarray/block_until_ready/device_get/"
+           "float-on-buffer) inside tick-loop or wave-dispatch code")
+
+    SCOPE = frozenset({
+        "src/repro/sched/scheduler.py",
+        "src/repro/sched/policy.py",
+        "src/repro/sched/queue.py",
+        "src/repro/serve/engine.py",
+        "src/repro/serve/cluster.py",
+    })
+    # the documented one-transfer-per-step contract and the policy-tag reads
+    SANCTIONED: Dict[str, Set[str]] = {
+        "src/repro/serve/engine.py": {"step_end", "fast_resident_uids"},
+        "src/repro/serve/cluster.py": {"fast_occupancy", "_invalidate_fast"},
+    }
+    ASARRAY = frozenset({"np.asarray", "numpy.asarray", "onp.asarray"})
+
+    def applies_to(self, relpath: str) -> bool:
+        return relpath in self.SCOPE
+
+    def check(self, tree, relpath, source):
+        rule, sanctioned = self, self.SANCTIONED.get(relpath, set())
+        findings: List[Finding] = []
+
+        class V(_FuncStackVisitor):
+            def visit_Call(self, node):
+                if not (set(self.stack) & sanctioned):
+                    msg = rule._sync_idiom(node)
+                    if msg:
+                        findings.append(rule.finding(relpath, node, msg))
+                self.generic_visit(node)
+
+        V().visit(tree)
+        return findings
+
+    def _sync_idiom(self, node: ast.Call) -> Optional[str]:
+        name = dotted_name(node.func)
+        if name is None:
+            return None
+        leaf = name.split(".")[-1]
+        if leaf == "item" and not node.args:
+            return f"{name}() syncs the device mid-tick"
+        if leaf == "block_until_ready":
+            return f"{name}() blocks the dispatch pipeline"
+        if leaf == "device_get":
+            return f"{name}() is a device->host transfer in hot-loop code"
+        arg_is_buffer = (node.args and isinstance(
+            node.args[0], (ast.Name, ast.Attribute)))
+        if name in self.ASARRAY and arg_is_buffer:
+            return (f"{name}() on a live buffer forces a device->host "
+                    f"transfer; only the sanctioned step_end/policy-tag "
+                    f"reads may sync")
+        if name == "float" and arg_is_buffer:
+            return "float() on a live buffer syncs the device"
+        return None
+
+
+# ---------------------------------------------------------------------------
+# rule 3: virtual-clock modules stay deterministic
+# ---------------------------------------------------------------------------
+
+@register_rule
+class WallClockRule(LintRule):
+    """Everything under ``sched/`` runs on the scheduler's virtual clock
+    (modeled ns): wall-clock reads or unseeded RNG there would decouple the
+    priced schedule from the deterministic BENCH gates."""
+
+    id = "wallclock-in-virtual-clock"
+    doc = "wall-clock read or unseeded RNG in a virtual-clock module"
+
+    SCOPE_PREFIX = "src/repro/sched/"
+    WALL = frozenset({"time.time", "time.time_ns", "time.perf_counter",
+                      "time.perf_counter_ns", "time.monotonic",
+                      "time.monotonic_ns", "datetime.now",
+                      "datetime.datetime.now", "datetime.utcnow"})
+
+    def applies_to(self, relpath: str) -> bool:
+        return relpath.startswith(self.SCOPE_PREFIX)
+
+    def check(self, tree, relpath, source):
+        findings: List[Finding] = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if name is None:
+                continue
+            if name in self.WALL:
+                findings.append(self.finding(
+                    relpath, node,
+                    f"{name}() reads the wall clock inside the virtual-"
+                    f"clock domain; charge modeled ns instead"))
+            elif name.startswith("random."):
+                findings.append(self.finding(
+                    relpath, node,
+                    f"{name}() uses the unseeded global RNG; thread a "
+                    f"seeded np.random.default_rng(seed) through instead"))
+            elif (name.endswith(".random.default_rng")
+                  or name == "default_rng") and not (node.args
+                                                     or node.keywords):
+                findings.append(self.finding(
+                    relpath, node,
+                    "default_rng() without a seed is entropy-seeded; pass "
+                    "the workload seed explicitly"))
+            elif (name.split(".")[0] in ("np", "numpy")
+                  and ".random." in name
+                  and not name.endswith("default_rng")):
+                findings.append(self.finding(
+                    relpath, node,
+                    f"{name}() draws from the global numpy RNG; use a "
+                    f"seeded Generator"))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# rule 4: strict JSON artifacts
+# ---------------------------------------------------------------------------
+
+@register_rule
+class JsonNanRule(LintRule):
+    """``json.dump``/``dumps`` must pass ``allow_nan=False``: Python's
+    default emits bare ``NaN``/``Infinity`` literals, which are not JSON —
+    a NaN metric must fail at WRITE time, not poison a consumer later.
+    (``repro.sched.metrics`` reports empty classes as None for exactly this
+    reason.)"""
+
+    id = "json-nan"
+    doc = "json.dump/json.dumps without allow_nan=False"
+
+    def applies_to(self, relpath: str) -> bool:
+        return True
+
+    def check(self, tree, relpath, source):
+        findings: List[Finding] = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if name not in ("json.dump", "json.dumps"):
+                continue
+            ok = any(kw.arg == "allow_nan"
+                     and isinstance(kw.value, ast.Constant)
+                     and kw.value.value is False for kw in node.keywords)
+            if not ok:
+                findings.append(self.finding(
+                    relpath, node,
+                    f"{name}() without allow_nan=False writes non-strict "
+                    f"JSON (bare NaN/Infinity literals)"))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# rule 5: registries are import-time only
+# ---------------------------------------------------------------------------
+
+@register_rule
+class ImportTimeRegistrationRule(LintRule):
+    """Backend/policy/rule registration must complete at import time — a
+    registration inside a function body makes lookup depend on whether and
+    when that function ran (the reload-safe registry contract assumes the
+    module body IS the registration transaction)."""
+
+    id = "import-time-registration"
+    doc = "register_backend/register_policy/register_rule inside a function"
+
+    REGISTRARS = frozenset({"register_backend", "register_policy",
+                            "register_rule", "register_mechanism"})
+
+    def applies_to(self, relpath: str) -> bool:
+        return relpath.startswith("src/repro/")
+
+    def check(self, tree, relpath, source):
+        rule = self
+        findings: List[Finding] = []
+
+        class V(_FuncStackVisitor):
+            def visit_Call(self, node):
+                name = dotted_name(node.func)
+                if (name and name.split(".")[-1] in rule.REGISTRARS
+                        and self.stack):
+                    findings.append(rule.finding(
+                        relpath, node,
+                        f"{name}() called inside "
+                        f"{'.'.join(self.stack)}(); registries are "
+                        f"import-time only"))
+                self.generic_visit(node)
+
+        V().visit(tree)
+        return findings

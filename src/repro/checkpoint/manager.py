@@ -70,7 +70,8 @@ def save(tree: Any, ckpt_dir: str, step: int, keep_last: int = 3) -> str:
     try:
         np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
         with open(os.path.join(tmp, "meta.json"), "w") as f:
-            json.dump({"step": step, "n_arrays": len(arrays)}, f)
+            json.dump({"step": step, "n_arrays": len(arrays)}, f,
+                      allow_nan=False)
         final = os.path.join(ckpt_dir, f"step_{step:08d}")
         if os.path.exists(final):
             shutil.rmtree(final)

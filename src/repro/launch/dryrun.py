@@ -177,16 +177,18 @@ def main() -> None:
                 with open(out, "w") as f:
                     json.dump({"arch": a, "shape": s, "mesh": m,
                                "variant": args.variant, "status": "failed",
-                               "returncode": r.returncode}, f)
+                               "returncode": r.returncode}, f,
+                              allow_nan=False)
         return
 
     art = run_cell(args)
     name = f"{args.arch}_{args.shape}_{args.mesh}_{args.variant}.json"
     path = os.path.join(args.out_dir, name)
     with open(path, "w") as f:
-        json.dump(art, f, indent=1)
+        json.dump(art, f, indent=1, allow_nan=False)
     print(json.dumps({k: art[k] for k in
-                      ("arch", "shape", "mesh", "status") if k in art}))
+                      ("arch", "shape", "mesh", "status") if k in art},
+                     allow_nan=False))
     if art.get("status") == "ok":
         print("memory:", art["memory"])
         print("hlo flops=%.3e bytes=%.3e link_bytes=%.3e" % (

@@ -144,7 +144,7 @@ def main(argv=None) -> dict:
     if args.replicas > 1:
         out["migrations"] = eng_stats["migrations"]
         out["migrated_bytes"] = eng_stats["migrated_bytes"]
-    print(json.dumps(out))
+    print(json.dumps(out, allow_nan=False))
     return out
 
 

@@ -84,7 +84,7 @@ def main(argv=None) -> dict:
     result = {"first_loss": losses[0] if losses else None,
               "last_loss": losses[-1] if losses else None,
               "steps": len(losses), "seconds": round(dt, 1)}
-    print(json.dumps(result))
+    print(json.dumps(result, allow_nan=False))
     return result
 
 

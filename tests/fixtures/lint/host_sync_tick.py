@@ -1,0 +1,10 @@
+"""Planted violation: a device sync inside tick-loop code.  Linted AS IF
+it were src/repro/sched/scheduler.py; `host-sync-in-hot-loop` must fire
+exactly once (the jnp.asarray host->device staging must NOT count)."""
+import jax.numpy as jnp
+
+
+class FakeScheduler:
+    def tick(self, handle, toks):
+        staged = jnp.asarray(toks)          # host->device: fine
+        return handle.item(), staged        # device sync mid-tick: finding

@@ -1,0 +1,13 @@
+"""Planted violation: call-site registry mutation.  Linted AS IF it lived
+under src/repro/; `import-time-registration` must fire exactly once — the
+module-level decorator registration must NOT count."""
+from repro.movement.registry import register_backend
+
+
+@register_backend("fixture_noop")           # import time: clean
+def _noop(plan, env):
+    return env
+
+
+def lazy_register():
+    register_backend("fixture_late")(_noop)     # call site: finding

@@ -1,0 +1,9 @@
+"""Planted violation: non-strict JSON artifact write.  `json-nan` must
+fire exactly once — the strict write below must NOT count."""
+import json
+
+
+def write_metrics(path, metrics):
+    with open(path, "w") as f:
+        json.dump(metrics, f, indent=2)         # finding: NaN would leak
+    return json.dumps(metrics, allow_nan=False)  # strict: clean

@@ -1,0 +1,12 @@
+"""Planted violation: raw movement-kernel call outside the backend
+registry.  tests/test_analysis.py lints this module AS IF it lived at a
+src/repro path outside the allowlist; `movement-raw-backend` must fire
+exactly once (the import and the docstring mention of villa_gather must
+NOT count — the rule is call-site AST, not text)."""
+from repro.kernels import villa_gather
+
+
+def sneak_pages(pool, table):
+    # bypasses movement.plan(): unpriced movement the Table-1 accounting
+    # never sees
+    return villa_gather(pool, table)

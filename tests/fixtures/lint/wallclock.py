@@ -1,0 +1,11 @@
+"""Planted violation: wall-clock read in the virtual-clock domain.
+Linted AS IF it lived under src/repro/sched/; `wallclock-in-virtual-clock`
+must fire exactly once (the seeded default_rng must NOT count)."""
+import time
+
+import numpy as np
+
+
+def jitter(seed):
+    rng = np.random.default_rng(seed)           # seeded: clean
+    return time.time() + rng.standard_normal()  # wall clock: finding

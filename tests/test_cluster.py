@@ -15,6 +15,7 @@ import pytest
 from _multidev import run_with_devices
 
 from repro import sched
+from repro.analysis import testlib as TL
 from repro.configs import get_reduced
 from repro.models import lm
 from repro.serve.cluster import Cluster
@@ -112,7 +113,7 @@ def test_migrate_many_fuses_one_dispatch_per_route(setup):
     cl.migrate_many([(0, 1), (1, 1), (2, 1), (3, 3)])
     assert cl.cluster_stats["migrations"] == 4
     assert cl.cluster_stats["migration_waves"] == 2     # routes 0->1, 0->3
-    assert cl.compile_counts()["migrate"] in (2, -1)    # one per wave width
+    TL.assert_compile_count(cl, "migrate", 2)           # one per wave width
     for u, dst in [(0, 1), (1, 1), (2, 1), (3, 3)]:
         assert cl.residence[u] == dst
         assert cl.replicas[dst].session_meta(u) == metas[u]   # loss-free
@@ -216,13 +217,13 @@ def test_fleet_shares_one_compilation(setup):
         cl.submit(Request(uid=r, prompt=rng.integers(
             0, cfg.vocab_size, 5 + r).astype(np.int32), max_new=4),
             replica=r)
-    d0 = cl.stats["decode_dispatches"]
+    before = TL.snapshot_stats(cl)
     cl.step()
-    assert cl.stats["decode_dispatches"] - d0 == 3      # one per replica
+    TL.assert_dispatch_delta(before, cl.stats, decode=3)   # one per replica
     while cl.active:
         cl.step()
-    assert cl.compile_counts()["decode"] in (1, -1)     # fleet-shared jit
-    assert cl.compile_counts()["prefill"] in (1, 2, -1)  # per bucket length
+    TL.assert_compile_count(cl, "decode", 1)            # fleet-shared jit
+    TL.assert_compile_count(cl, "prefill", (1, 2))      # per bucket length
 
     eng_other = Engine(cfg, params, slots=2, max_len=96, n_sessions=8)
     with pytest.raises(ValueError, match="identically-configured"):
