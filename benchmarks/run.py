@@ -711,6 +711,162 @@ def bench_cluster(out_path="BENCH_cluster.json"):
         f"wins={bench['migration_wins']}")
 
 
+def bench_faults(out_path="BENCH_faults.json"):
+    """Chaos bench: seeded fault injection against the cluster scheduler,
+    gated on the zero-silent-corruption identity and graceful degradation.
+    Four deterministic scenarios (fixed seeds, virtual-clock latencies):
+
+      * **detection** — recovery OFF: every injected at-rest corruption is
+        accounted for — caught by the device-side checksum verify at resume
+        or still sitting at rest for the end-of-run scrub.  No incident is
+        ever silent.
+      * **recovery** — recovery ON with periodic snapshots: corrupt
+        sessions are restored from their last clean snapshot before they
+        resume; the same ledger identity holds.
+      * **recovery_parity** — replica death mid-service: snapshot, fail
+        the replica, restore the session on a survivor, resume — the
+        decode must be token-identical to the uninterrupted run (the PR 5
+        migration-parity chain, extended across a failure).
+      * **degradation** — the same offered load clean vs faulted: the
+        faulted run must retain >= 70% of the clean run's SLO attainment
+        and still complete every job (graceful, not collapsing).
+
+    Writes ``BENCH_faults.json``."""
+    from repro import sched
+    from repro.configs import get_reduced
+    from repro.faults import (FaultInjector, FaultSpec, restore_session,
+                              snapshot_sessions)
+    from repro.models import lm as LM
+    from repro.serve.cluster import Cluster
+    from repro.serve.engine import Request
+
+    cfg = get_reduced("tinyllama-1.1b")
+    params = LM.init_lm(cfg, jax.random.key(0))
+    wl = sched.WorkloadConfig(n_fresh=4, n_followups=6)
+    arrivals = sched.generate_workload(wl, seed=5, vocab_size=cfg.vocab_size)
+    n_sessions = sched.n_sessions_for(wl)
+
+    def chaos_run(spec, snapshot_every=0):
+        inj = FaultInjector(spec) if spec is not None else None
+        cl = Cluster(cfg, params, n_replicas=2, slots=2, max_len=48,
+                     n_sessions=n_sessions, faults=inj)
+        s = sched.ClusterScheduler(cl, arrivals=arrivals,
+                                   snapshot_every=snapshot_every)
+        summary = s.run()
+        out = {"jobs_completed": summary["jobs_completed"],
+               "slo_attainment": summary["slo_attainment"],
+               "p99_latency_ns": summary["p99_latency_ns"],
+               "faults": summary["faults"]}
+        if inj is not None:
+            out["ledger"] = inj.summary()
+            out["verify_failed"] = cl.verify_failure_count()
+            out["at_rest_corrupt"] = int(cl.scrub())
+        return out
+
+    def accounted(r):
+        led = r["ledger"]
+        closed = (led["detected"] + led["recovered"] + led["destroyed"]
+                  + led["at_rest_corrupt"])
+        return (led["new_corrupt"] == closed
+                and r["verify_failed"] == led["detected"]
+                and r["at_rest_corrupt"] == led["at_rest_corrupt"])
+
+    # ---- detection (recovery off) + recovery (snapshots on) --------------
+    detection = chaos_run(FaultSpec(rate=0.4, seed=7, recover=False))
+    detection["all_accounted"] = accounted(detection)
+    recovery = chaos_run(FaultSpec(rate=0.4, seed=3), snapshot_every=2)
+    recovery["all_accounted"] = accounted(recovery)
+
+    # ---- recovery parity: fail a replica, restore, decode bit-exact ------
+    def greedy_ref(prompt, n_new):
+        from repro.models import lm as L
+        cache = L.init_cache(cfg, 1, max_len=48)
+        logits, cache = L.prefill(cfg, params, jnp.asarray(prompt)[None],
+                                  cache)
+        toks = [int(jnp.argmax(logits[0, -1]))]
+        pos = len(prompt)
+        while len(toks) < n_new:
+            lg, cache = L.decode_step(cfg, params, cache,
+                                      jnp.asarray([[toks[-1]]]),
+                                      jnp.int32(pos))
+            toks.append(int(jnp.argmax(lg[0, 0])))
+            pos += 1
+        return toks
+
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, 9).astype(np.int32)
+    straight = greedy_ref(prompt, 8)
+    inj = FaultInjector(FaultSpec(rate=0.0, seed=1))
+    cl = Cluster(cfg, params, n_replicas=2, slots=2, max_len=48,
+                 n_sessions=8, faults=inj)
+    req = Request(uid=7, prompt=prompt, max_new=4)
+    cl.submit(req, replica=0)
+    while cl.active:
+        cl.step()
+    snaps, snap_cost = snapshot_sessions(cl)
+    cl.fail_replica(0)
+    assert 7 not in cl.session_pos          # the snapshot is the only copy
+    recover_cost = restore_session(cl, snaps[7], 1)
+    slot = cl.resume(7, extra_new=5)        # seed + 4 new tokens
+    r2 = cl.active[slot]
+    while cl.active:
+        cl.step()
+    parity = {
+        "tokens_match": req.generated + r2.generated[1:] == straight,
+        "verify_failed": cl.verify_failure_count(),
+        "snapshot_ns_lisa": round(snap_cost.ns_lisa, 2),
+        "recover_ns_lisa": round(recover_cost.ns_lisa, 2),
+    }
+
+    # ---- graceful degradation: clean vs faulted SLO at equal load --------
+    clean = chaos_run(None)
+    faulted = chaos_run(FaultSpec(rate=0.4, seed=3,
+                                  replica_failures=((25, 1),)),
+                        snapshot_every=2)
+    retention = ((faulted["slo_attainment"] / clean["slo_attainment"])
+                 if clean["slo_attainment"] else 1.0)
+    degradation = {
+        "clean_slo": clean["slo_attainment"],
+        "faulted_slo": faulted["slo_attainment"],
+        "slo_retention": round(retention, 4),
+        "clean_jobs": clean["jobs_completed"],
+        "faulted_jobs": faulted["jobs_completed"],
+        "ledger": faulted["ledger"],
+    }
+
+    bench = {
+        "detection": detection,
+        "recovery": recovery,
+        "recovery_parity": parity,
+        "degradation": degradation,
+        "zero_silent_corruption": bool(detection["all_accounted"]
+                                       and recovery["all_accounted"]),
+        "graceful_degradation": bool(
+            retention >= 0.7
+            and faulted["jobs_completed"] == clean["jobs_completed"]),
+        "config": {"arch": "tinyllama-1.1b-reduced", "replicas": 2,
+                   "slots": 2, "max_len": 48, "workload_seed": 5,
+                   "fault_seeds": {"detection": 7, "recovery": 3,
+                                   "degradation": 3}},
+    }
+    with open(out_path, "w") as f:
+        json.dump(bench, f, indent=2, allow_nan=False)
+    row("faults_detection", 0.0,
+        f"injected={detection['ledger']['new_corrupt']};"
+        f"detected={detection['verify_failed']};"
+        f"at_rest={detection['at_rest_corrupt']};"
+        f"accounted={detection['all_accounted']}")
+    row("faults_recovery", 0.0,
+        f"recovered={recovery['ledger']['recovered']};"
+        f"accounted={recovery['all_accounted']}")
+    row("faults_recovery_parity", 0.0,
+        f"tokens_match={parity['tokens_match']};"
+        f"verify_failed={parity['verify_failed']}")
+    row("faults_degradation", 0.0,
+        f"slo_retention={degradation['slo_retention']};"
+        f"graceful={bench['graceful_degradation']}")
+
+
 # ---------------------------------------------------------------------------
 # --check: validate committed BENCH_*.json against their deterministic gates
 # ---------------------------------------------------------------------------
@@ -771,6 +927,35 @@ def _check_cluster(b, errs):
         errs.append("cluster: A/B arms completed different job counts")
 
 
+def _check_faults(b, errs):
+    if not b["zero_silent_corruption"]:
+        errs.append("faults: an injected corruption went unaccounted "
+                    "(zero-silent-corruption gate)")
+    if not b["graceful_degradation"]:
+        errs.append(f"faults: SLO retention "
+                    f"{b['degradation']['slo_retention']} < 0.7 or jobs "
+                    f"lost under chaos (graceful-degradation gate)")
+    if not b["recovery_parity"]["tokens_match"]:
+        errs.append("faults: post-failure restored decode diverged from "
+                    "the uninterrupted run")
+    if b["recovery_parity"]["verify_failed"] != 0:
+        errs.append("faults: snapshot-restored session failed the device "
+                    "checksum verify")
+    for scen in ("detection", "recovery"):
+        led = b[scen]["ledger"]
+        if led["new_corrupt"] < 3:
+            errs.append(f"faults: {scen} scenario injected only "
+                        f"{led['new_corrupt']} corruptions (needs >= 3 to "
+                        f"be a meaningful gate)")
+        if b[scen]["verify_failed"] != led["detected"]:
+            errs.append(f"faults: {scen} device detections "
+                        f"{b[scen]['verify_failed']} != ledger "
+                        f"{led['detected']}")
+    if b["recovery"]["ledger"]["recovered"] < 1:
+        errs.append("faults: recovery scenario never exercised a "
+                    "snapshot restore")
+
+
 def _check_lint(b, errs):
     """The committed repro-lint report: clean, waiver-free, and covering
     every registered jitted entry point (regenerate with
@@ -811,6 +996,7 @@ BENCH_SCHEMAS = {
     "BENCH_movement.json": _check_movement,
     "BENCH_sched.json": _check_sched,
     "BENCH_cluster.json": _check_cluster,
+    "BENCH_faults.json": _check_faults,
     "LINT_REPORT.json": _check_lint,
 }
 
@@ -881,6 +1067,7 @@ BENCHES = {
     "movement": bench_movement,
     "sched": bench_sched,
     "cluster": bench_cluster,
+    "faults": bench_faults,
     "roofline": bench_roofline_summary,
 }
 

@@ -8,13 +8,19 @@ entry point               contract
 ========================  =========================================
 ``decode``                donate cache (arg 1); zero host transfers
 ``prefill[bucket=k]``     donate cache (arg 1); one per bucket length
-``suspend``               donate store (arg 1); uint8-preserving
-``suspend_many``          donate store (arg 1); ONE dispatch per wave
-``resume``                donate cache+store (args 0,1); uint8-preserving
-``resume_many``           donate cache+store (args 0,1); ONE dispatch
+``suspend``               donate store+sums (args 1,2); uint8-preserving
+``suspend_many``          donate store+sums (args 1,2); ONE dispatch/wave
+``resume``                donate cache+store+fail (args 0,1,3); uint8-prsv
+``resume_many``           donate cache+store+fail (args 0,1,3); ONE disp
 ``migrate``               donate dst pool (arg 1); uint8-preserving
 ``simulate_params``       pure simulator: no donation, no host transfer
 ========================  =========================================
+
+The suspend/resume signatures carry the checksum sidecar (PR 7): suspends
+also emit per-page sums; resumes also consume them and fold the verify
+verdict into a donated failure counter — still zero extra host transfers.
+The migrate executor takes the traced ``(mode, index, xor)`` fault operand
+(NULL_FAULT on clean runs): one compilation serves clean and chaos runs.
 
 Everything is traced/lowered statically — no engine loop runs, no tokens
 decode.  The geometry is deliberately tiny (2 slots, max_len 32): the
@@ -30,6 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.analysis.dispatch import AuditTarget, EntryContract
+from repro.faults.spec import NULL_FAULT
 
 AUDIT_SLOTS = 2
 AUDIT_MAX_LEN = 32
@@ -49,6 +56,7 @@ def engine_targets(engine) -> List[AuditTarget]:
     (its live jit objects — the audit sees exactly what serving runs)."""
     slots = engine.slots
     cache, sessions, params = engine.cache, engine.sessions, engine.params
+    sums, failed = engine.session_sums, engine.verify_failed
     i32 = jnp.int32
     wave = min(AUDIT_WAVE, slots)
     targets = [
@@ -59,22 +67,24 @@ def engine_targets(engine) -> List[AuditTarget]:
             EntryContract(donate=frozenset({1}), max_compiles=1)),
         AuditTarget(
             "suspend", engine._suspend,
-            (cache, sessions, i32(0), i32(0)),
-            EntryContract(donate=frozenset({1}), uint8_preserving=True)),
+            (cache, sessions, sums, i32(0), i32(0)),
+            EntryContract(donate=frozenset({1, 2}), uint8_preserving=True)),
         AuditTarget(
             "suspend_many", engine._suspend_many,
-            (cache, sessions, jnp.arange(wave, dtype=i32),
+            (cache, sessions, sums, jnp.arange(wave, dtype=i32),
              jnp.arange(wave, dtype=i32)),
-            EntryContract(donate=frozenset({1}), uint8_preserving=True)),
+            EntryContract(donate=frozenset({1, 2}), uint8_preserving=True)),
         AuditTarget(
             "resume", engine._resume,
-            (cache, sessions, i32(0), i32(0)),
-            EntryContract(donate=frozenset({0, 1}), uint8_preserving=True)),
+            (cache, sessions, sums, failed, i32(0), i32(0)),
+            EntryContract(donate=frozenset({0, 1, 3}),
+                          uint8_preserving=True)),
         AuditTarget(
             "resume_many", engine._resume_many,
-            (cache, sessions, jnp.arange(wave, dtype=i32),
+            (cache, sessions, sums, failed, jnp.arange(wave, dtype=i32),
              jnp.arange(wave, dtype=i32)),
-            EntryContract(donate=frozenset({0, 1}), uint8_preserving=True)),
+            EntryContract(donate=frozenset({0, 1, 3}),
+                          uint8_preserving=True)),
     ]
     buckets = prefill_buckets(engine)
     for lb in buckets:
@@ -102,8 +112,9 @@ def cluster_targets(cluster) -> List[AuditTarget]:
     table = jnp.arange(AUDIT_WAVE * spp, dtype=jnp.int32)
     src = cluster.replicas[0].sessions.slow
     dst = cluster.replicas[1].sessions.slow
+    fault = jnp.asarray(NULL_FAULT)
     return [AuditTarget(
-        "migrate", cluster._migrate_exec, (src, dst, table, table),
+        "migrate", cluster._migrate_exec, (src, dst, table, table, fault),
         EntryContract(donate=frozenset({1}), uint8_preserving=True))]
 
 

@@ -26,6 +26,10 @@ Each rule guards one paper invariant (DESIGN.md Sec. 11 has the mapping):
 * ``import-time-registration`` — backends/policies register at import time
   only; a call-site registration would make dispatch depend on execution
   order.
+* ``unchecked-unpack`` — page payloads re-enter a cache only through the
+  checksum-verified unpack leg; a raw ``unpack_into_slot`` call outside the
+  movement substrate that never consults the sidecar is a silent-corruption
+  hole (chaos runs gate on zero of these).
 """
 from __future__ import annotations
 
@@ -347,7 +351,8 @@ class ImportTimeRegistrationRule(LintRule):
     doc = "register_backend/register_policy/register_rule inside a function"
 
     REGISTRARS = frozenset({"register_backend", "register_policy",
-                            "register_rule", "register_mechanism"})
+                            "register_rule", "register_mechanism",
+                            "register_fault"})
 
     def applies_to(self, relpath: str) -> bool:
         return relpath.startswith("src/repro/")
@@ -369,4 +374,62 @@ class ImportTimeRegistrationRule(LintRule):
                 self.generic_visit(node)
 
         V().visit(tree)
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# rule 6: unpacked pages must be checksum-verified
+# ---------------------------------------------------------------------------
+
+@register_rule
+class UncheckedUnpackRule(LintRule):
+    """Outside the movement substrate (whose unpack backend verifies the
+    sidecar itself), a function that calls ``unpack_into_slot`` directly
+    must also consult the checksum surface — ``page_checksums`` /
+    ``verify_pages``, or pass the ``sums=`` operand through an
+    ``execute(...)`` env.  A bare unpack re-materializes page bytes into a
+    live cache with no way to notice in-flight or at-rest corruption: the
+    exact hole the chaos bench's zero-silent-corruption gate closes."""
+
+    id = "unchecked-unpack"
+    doc = ("unpack_into_slot call outside movement/ in a function that "
+           "never consults the checksum sidecar")
+
+    SCOPE_EXCLUDE = "src/repro/movement/"
+    VERIFIERS = frozenset({"page_checksums", "verify_pages"})
+
+    def applies_to(self, relpath: str) -> bool:
+        return (relpath.startswith("src/repro/")
+                and not relpath.startswith(self.SCOPE_EXCLUDE))
+
+    def check(self, tree, relpath, source):
+        rule = self
+        findings: List[Finding] = []
+
+        class V(_FuncStackVisitor):
+            def __init__(self):
+                super().__init__()
+                self.unpacks: List[Tuple[Tuple[str, ...], ast.Call]] = []
+                self.verified: Set[Tuple[str, ...]] = set()
+
+            def visit_Call(self, node):
+                name = dotted_name(node.func)
+                leaf = name.split(".")[-1] if name else ""
+                key = tuple(self.stack)
+                if leaf == "unpack_into_slot":
+                    self.unpacks.append((key, node))
+                elif leaf in rule.VERIFIERS or any(
+                        kw.arg == "sums" for kw in node.keywords):
+                    self.verified.add(key)
+                self.generic_visit(node)
+
+        v = V()
+        v.visit(tree)
+        for key, node in v.unpacks:
+            if key not in v.verified:
+                findings.append(rule.finding(
+                    relpath, node,
+                    "unpack_into_slot() without a checksum verify in the "
+                    "same function; route through the movement unpack leg "
+                    "(which verifies the sidecar) or call verify_pages()"))
         return findings

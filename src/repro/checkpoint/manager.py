@@ -20,6 +20,7 @@ import json
 import os
 import shutil
 import tempfile
+import zlib
 from typing import Any, Optional
 
 import jax
@@ -28,6 +29,12 @@ import numpy as np
 from repro import movement as MV
 
 _LAST_COST: Optional[MV.MovementCost] = None
+
+
+class CorruptCheckpoint(RuntimeError):
+    """A checkpoint failed integrity verification: torn write, truncation,
+    or on-disk bit rot.  Raised by :func:`verify_checkpoint` (and hence
+    :func:`restore`) instead of silently restoring garbage state."""
 
 
 def last_move_cost() -> Optional[MV.MovementCost]:
@@ -60,6 +67,17 @@ def _path_str(path) -> str:
     return "/".join(parts)
 
 
+def _file_crc(path: str) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        while True:
+            chunk = f.read(1 << 20)
+            if not chunk:
+                break
+            crc = zlib.crc32(chunk, crc)
+    return crc & 0xFFFFFFFF
+
+
 def save(tree: Any, ckpt_dir: str, step: int, keep_last: int = 3) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
     flat = [(p, l) for p, l in jax.tree_util.tree_flatten_with_path(tree)[0]
@@ -68,10 +86,17 @@ def save(tree: Any, ckpt_dir: str, step: int, keep_last: int = 3) -> str:
     arrays = {_path_str(p): a for (p, _), a in zip(flat, staged)}
     tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
     try:
-        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        npz = os.path.join(tmp, "arrays.npz")
+        np.savez(npz, **arrays)
         with open(os.path.join(tmp, "meta.json"), "w") as f:
             json.dump({"step": step, "n_arrays": len(arrays)}, f,
                       allow_nan=False)
+        # Integrity trailer: crc + size of the payload, written last inside
+        # the tmp dir so the atomic rename publishes data and trailer
+        # together — a torn copy of this directory is always detectable.
+        with open(os.path.join(tmp, "trailer.json"), "w") as f:
+            json.dump({"crc32": _file_crc(npz),
+                       "size": os.path.getsize(npz)}, f, allow_nan=False)
         final = os.path.join(ckpt_dir, f"step_{step:08d}")
         if os.path.exists(final):
             shutil.rmtree(final)
@@ -106,17 +131,55 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def verify_checkpoint(ckpt_dir: str, step: int) -> None:
+    """Check a checkpoint's integrity trailer; raise
+    :class:`CorruptCheckpoint` on any mismatch.
+
+    Catches the failure modes the atomic rename alone cannot: a partial
+    copy of the directory (rsync interrupted mid-``arrays.npz``), a
+    truncated payload, or flipped bits at rest.  A missing trailer is
+    itself treated as corruption — an attacker-free analogue of "fail
+    closed"."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    npz = os.path.join(d, "arrays.npz")
+    trailer_path = os.path.join(d, "trailer.json")
+    if not os.path.exists(npz):
+        raise CorruptCheckpoint(f"{d}: missing arrays.npz")
+    if not os.path.exists(trailer_path):
+        raise CorruptCheckpoint(f"{d}: missing integrity trailer")
+    try:
+        with open(trailer_path) as f:
+            trailer = json.load(f)
+        crc, size = int(trailer["crc32"]), int(trailer["size"])
+    except (ValueError, KeyError, TypeError, json.JSONDecodeError) as e:
+        raise CorruptCheckpoint(f"{d}: unreadable trailer ({e})") from e
+    actual_size = os.path.getsize(npz)
+    if actual_size != size:
+        raise CorruptCheckpoint(
+            f"{d}: arrays.npz truncated or padded "
+            f"({actual_size} bytes, trailer says {size})")
+    actual_crc = _file_crc(npz)
+    if actual_crc != crc:
+        raise CorruptCheckpoint(
+            f"{d}: arrays.npz checksum mismatch "
+            f"(crc32 {actual_crc:#010x}, trailer says {crc:#010x})")
+
+
 def restore(tree_like: Any, ckpt_dir: str, step: Optional[int] = None,
             shardings: Any = None) -> Any:
     """Restore into the structure of ``tree_like`` (shapes/dtypes template).
 
     ``shardings``: optional matching tree of NamedShardings — arrays are
     placed directly onto that (possibly different) mesh: elastic rescale.
+
+    Integrity-verified first: a torn, truncated, or bit-rotted checkpoint
+    raises :class:`CorruptCheckpoint` rather than restoring garbage.
     """
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    verify_checkpoint(ckpt_dir, step)
     path = os.path.join(ckpt_dir, f"step_{step:08d}", "arrays.npz")
     data = np.load(path)
 

@@ -1,0 +1,142 @@
+"""Fault modes + the fault-wrapping layer over the movement backends.
+
+Two pieces, both registry-shaped:
+
+1. **Fault-mode registry** — the fifth instance of the PR 1 registry
+   pattern (CopyMechanism, movement backends, sched policies, lint rules,
+   now fault modes).  Each mode is a *traced* transform
+   ``fn(data, index, xor) -> data`` applied under ``jnp.where`` gating, so
+   a jitted movement body compiled once serves every per-call fault via the
+   uniform ``(mode, index, xor)`` int32 operand (``NULL_FAULT`` when
+   inactive — identical signatures, zero recompiles).
+
+2. **Backend wrappers** — :func:`install_fault_backends` interposes on the
+   ``hop_chain`` and ``page_scatter`` legs through the registry's
+   sanctioned :func:`~repro.movement.registry.wrap_backend` API.  A wrapper
+   consumes the env's ``fault`` operand exactly once (first wrapped leg in
+   the plan) and applies it to the payload: in-flight corruption on the hop
+   chain, landing corruption on the scatter.  Plans that never carry a
+   ``fault`` key trace byte-identical graphs to the unwrapped backends.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax.numpy as jnp
+
+from repro.movement import registry as MR
+from repro.faults.spec import FAULT_CODES, NULL_FAULT  # noqa: F401
+
+FaultMode = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+_FAULT_MODES: Dict[str, FaultMode] = {}
+
+
+def register_fault(name: str) -> Callable[[FaultMode], FaultMode]:
+    """Decorator: register one traced fault mode and assign its code.
+
+    Same contract as the movement-backend registry: re-registering the SAME
+    function (module reload) replaces silently; a different function under
+    a taken name raises.  Codes are handed out in registration order, so
+    they are deterministic per import order.
+    """
+    def deco(fn: FaultMode) -> FaultMode:
+        old = _FAULT_MODES.get(name)
+        if old is not None and (old.__module__, old.__qualname__) != (
+                fn.__module__, fn.__qualname__):
+            raise ValueError(f"fault mode {name!r} already registered by "
+                             f"{old.__module__}.{old.__qualname__}")
+        _FAULT_MODES[name] = fn
+        FAULT_CODES.setdefault(name, len(FAULT_CODES))
+        return fn
+    return deco
+
+
+def get_fault(name: str) -> FaultMode:
+    try:
+        return _FAULT_MODES[name]
+    except KeyError:
+        raise ValueError(f"unknown fault mode {name!r} "
+                         f"(known: {sorted(_FAULT_MODES)})") from None
+
+
+def fault_kinds() -> Tuple[str, ...]:
+    return tuple(sorted(_FAULT_MODES))
+
+
+def apply_fault(data: jnp.ndarray, fault) -> jnp.ndarray:
+    """Apply the traced ``(mode, index, xor)`` operand to ``data``.
+
+    Every registered mode is staged under a ``jnp.where`` on its code, so
+    the graph is identical whichever (or no) fault fires at runtime.
+    """
+    fault = jnp.asarray(fault, jnp.int32)
+    mode = fault[0]
+    out = data
+    for name, fn in _FAULT_MODES.items():
+        out = jnp.where(mode == FAULT_CODES[name],
+                        fn(data, fault[1], fault[2]), out)
+    return out
+
+
+@register_fault("flip_byte")
+def _flip_byte(data: jnp.ndarray, index, xor) -> jnp.ndarray:
+    """XOR one byte of the flat payload (xor != 0 => always detectable)."""
+    flat = data.reshape(-1)
+    t = jnp.clip(index, 0, flat.shape[0] - 1)
+    return flat.at[t].set(flat[t] ^ xor.astype(data.dtype)).reshape(data.shape)
+
+
+@register_fault("drop_page")
+def _drop_page(data: jnp.ndarray, index, xor) -> jnp.ndarray:
+    """Zero one leading-axis page of a pages-major payload (a lost RBM
+    transfer).  Undetectable iff the page was already all-zero — which is
+    why the bench gates inject ``flip_byte``; this mode is exercised by the
+    property tests on nonzero payloads."""
+    t = jnp.clip(index, 0, data.shape[0] - 1)
+    return data.at[t].set(jnp.zeros_like(data[0]))
+
+
+# ---------------------------------------------------------------------------
+# the wrapping layer
+# ---------------------------------------------------------------------------
+
+# legs that carry payload bytes: corrupt post-hop (in flight) or pre-scatter
+# (at landing).  The env's "fault" operand is consumed by the FIRST wrapped
+# leg the plan executes, so a gather->hop->scatter chain applies it once.
+WRAP_KINDS: Tuple[str, ...] = ("hop_chain", "page_scatter")
+_PRE_KINDS = frozenset({"page_scatter"})
+
+
+def _make_wrapper(kind: str, inner: MR.Backend) -> MR.Backend:
+    def fault_wrapped(leg, env):
+        fault = env.get("fault")
+        if fault is None:
+            return inner(leg, env)
+        env = dict(env)
+        del env["fault"]
+        if kind in _PRE_KINDS:
+            env["data"] = apply_fault(env["data"], fault)
+            return inner(leg, env)
+        env = dict(inner(leg, env))
+        env["data"] = apply_fault(env["data"], fault)
+        return env
+    fault_wrapped.__qualname__ = f"fault_wrapped_{kind}"
+    return fault_wrapped
+
+
+def install_fault_backends() -> None:
+    """Interpose the fault wrappers (idempotent).  Must run before the
+    first trace of any jitted body that should honor a ``fault`` operand —
+    :class:`repro.serve.cluster.Cluster` installs at construction when
+    built with ``faults=``."""
+    for kind in WRAP_KINDS:
+        if kind not in MR.wrapped_kinds():
+            MR.wrap_backend(kind, lambda inner, k=kind: _make_wrapper(k,
+                                                                      inner))
+
+
+def uninstall_fault_backends() -> None:
+    """Restore the original backends (tests)."""
+    for kind in WRAP_KINDS:
+        MR.unwrap_backend(kind)

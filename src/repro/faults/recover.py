@@ -1,0 +1,151 @@
+"""Session snapshots and snapshot-backed recovery for the replica fleet.
+
+The recovery source for replica death is a periodic *session snapshot*: the
+suspended pages PLUS their checksum sidecar rows, staged device→host
+through the same priced host-staging movement plan the checkpoint manager
+uses — snapshot traffic is byte-accounted like every other transfer.
+Restore is the reverse plan: host→device staging, an ``adopt_session``
+registration, a slow-pool row write and a fast-tag invalidation (the fast
+tier may hold the pre-failure — possibly corrupt — bytes).
+
+Snapshots can also persist to disk in the checkpoint manager's atomic
+``step_<N>`` format (:func:`save_snapshots` / :func:`load_snapshots`),
+protected by the manager's crash-consistency trailer — a torn snapshot
+directory is rejected, never restored as garbage state.
+
+Everything here is host-driven bookkeeping around device buffers; nothing
+runs inside the tick loop's jitted bodies, and the host reads go through
+movement plans (the ``host_stage`` leg), keeping the serving modules free
+of raw host-sync idioms.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import movement as MV
+from repro.checkpoint import manager as CM
+
+
+class SessionSnapshot(NamedTuple):
+    """One suspended session, host-resident: enough to re-admit it
+    anywhere (pages are dtype-preserving uint8; ``sums`` is the checksum
+    sidecar row computed at suspend time, so a restored session is
+    verify-clean by construction)."""
+    uid: int
+    pos: int
+    tok: int
+    pages: np.ndarray       # (n_pages, P, d) uint8
+    sums: np.ndarray        # (n_pages,) uint32
+
+
+def _zero_cost() -> MV.MovementCost:
+    return MV.MovementCost(0, 0, 0.0, 0.0, 0.0, 0.0)
+
+
+def _add(a: MV.MovementCost, b: MV.MovementCost) -> MV.MovementCost:
+    return MV.MovementCost(a.bytes + b.bytes, max(a.hops, b.hops),
+                           a.ns_lisa + b.ns_lisa,
+                           a.ns_memcpy + b.ns_memcpy,
+                           a.uj_lisa + b.uj_lisa,
+                           a.uj_memcpy + b.uj_memcpy)
+
+
+def snapshot_sessions(cluster) -> Tuple[Dict[int, "SessionSnapshot"],
+                                        MV.MovementCost]:
+    """Snapshot every suspended session in the fleet to host memory.
+
+    One host-staging movement plan per replica with live sessions (the
+    pages and sidecar rows of all its sessions travel as one batched
+    transfer over the modeled channel).  Returns ``(snaps, total_cost)``;
+    the scheduler records the cost as a ``snapshot_wave`` decision —
+    write-behind traffic that overlaps decode, so it is priced but not
+    charged to the critical-path clock.
+    """
+    snaps: Dict[int, SessionSnapshot] = {}
+    total = _zero_cost()
+    for eng in cluster.replicas:
+        # ACTIVE sessions keep a stale session_pos entry; their store row is
+        # a leftover the next suspend overwrites — snapshotting it would
+        # capture out-of-date (possibly sidecar-inconsistent) bytes, so only
+        # truly suspended sessions are snapshot candidates.
+        active = {req.uid for req in eng.active.values()}
+        uids = sorted(u for u in eng.session_pos if u not in active)
+        if not uids:
+            continue
+        idxs = jnp.asarray([u % eng.n_sessions for u in uids], jnp.int32)
+        leaves = [eng.sessions.slow[idxs], eng.session_sums[idxs]]
+        p = MV.plan(MV.Transfer(MV.Tier("device"), MV.Tier("host"),
+                                MV.Layout.tree(leaves)))
+        pages, sums = MV.execute(p, data=leaves)["data"]
+        total = _add(total, p.cost)
+        for j, uid in enumerate(uids):
+            snaps[uid] = SessionSnapshot(uid, eng.session_pos[uid],
+                                         eng.session_tok[uid],
+                                         pages[j], sums[j])
+    return snaps, total
+
+
+def restore_session(cluster, snap: SessionSnapshot,
+                    replica: int) -> MV.MovementCost:
+    """Re-admit one snapshot onto ``replica`` via the priced channel.
+
+    Stages pages + sidecar host→device, registers the session
+    (``adopt_session`` — collisions evict explicitly, like any suspend),
+    overwrites the slow-pool row, and invalidates any stale fast-tier
+    residency so the next resume reads the restored bytes.  Returns the
+    staging cost (the scheduler charges it to the virtual clock as a
+    ``recover_wave`` — recovery IS on the critical path)."""
+    eng = cluster.replicas[replica]
+    leaves = [np.asarray(snap.pages), np.asarray(snap.sums)]
+    p = MV.plan(MV.Transfer(MV.Tier("host"), MV.Tier("device"),
+                            MV.Layout.tree(leaves)))
+    pages_dev, sums_dev = MV.execute(p, data=leaves)["data"]
+    home = cluster.residence.get(snap.uid)
+    if home is not None and snap.uid in cluster.replicas[home].session_pos:
+        cluster.replicas[home].drop_session(snap.uid)
+    idx = eng.adopt_session(snap.uid, snap.pos, snap.tok)
+    eng.sessions = eng.sessions._replace(
+        slow=eng.sessions.slow.at[idx].set(pages_dev))
+    eng.session_sums = eng.session_sums.at[idx].set(sums_dev)
+    cluster._invalidate_fast(eng, [idx])
+    cluster.residence[snap.uid] = replica
+    return p.cost
+
+
+# ---------------------------------------------------------------------------
+# disk persistence (the checkpoint manager's atomic format + crc trailer)
+# ---------------------------------------------------------------------------
+
+def save_snapshots(snaps: Dict[int, SessionSnapshot], ckpt_dir: str,
+                   step: int, keep_last: int = 3) -> str:
+    """Persist a snapshot set through :func:`repro.checkpoint.manager.save`
+    (atomic rename + crc trailer): a crash mid-save can never produce a
+    restorable-but-torn snapshot directory."""
+    tree = {f"u{s.uid}": {"pages": s.pages, "sums": s.sums,
+                          "meta": np.array([s.pos, s.tok], np.int64)}
+            for s in snaps.values()}
+    return CM.save(tree, ckpt_dir, step, keep_last=keep_last)
+
+
+def load_snapshots(ckpt_dir: str,
+                   step: Optional[int] = None) -> Dict[int, SessionSnapshot]:
+    """Load a persisted snapshot set, trailer-verified first: a torn or
+    truncated directory raises :class:`repro.checkpoint.manager.
+    CorruptCheckpoint` instead of yielding garbage sessions."""
+    if step is None:
+        step = CM.latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no snapshots in {ckpt_dir}")
+    CM.verify_checkpoint(ckpt_dir, step)
+    data = np.load(os.path.join(ckpt_dir, f"step_{step:08d}", "arrays.npz"))
+    out: Dict[int, SessionSnapshot] = {}
+    uids = sorted({int(k.split("/")[0][1:]) for k in data.files})
+    for uid in uids:
+        pos, tok = (int(x) for x in data[f"u{uid}/meta"])
+        out[uid] = SessionSnapshot(uid, pos, tok, data[f"u{uid}/pages"],
+                                   data[f"u{uid}/sums"])
+    return out

@@ -49,7 +49,18 @@ placement scores each replica by free slots, VILLA fast-tier occupancy and
 the modeled ICI hop cost from the session's residence; a resume placed off
 its home replica live-migrates the suspended pages as one fused hop-chain
 plan per route.  --no-migrate pins every resume to its home replica (the
-SLO A/B arm)."""
+SLO A/B arm).
+
+Chaos (DESIGN.md Sec. 12): --fault-rate R injects seeded at-rest bit rot
+and migration-leg corruption at per-event probability R.  Every corruption
+is caught by the per-page checksum sidecar; with recovery on (default) the
+scheduler retries corrupted movement legs (priced, backoff on the virtual
+clock) and restores corrupt sessions from periodic snapshots; --no-recovery
+turns the run into a detection-only audit.  --fault-seed picks the chaos
+RNG stream; the same (rate, seed) replays the same faults bit-for-bit:
+
+  %(prog)s --arch tinyllama-1.1b --reduced --replicas 2 --slots 2 \
+--fault-rate 0.25 --fault-seed 7"""
 
 
 def main(argv=None) -> dict:
@@ -80,6 +91,19 @@ def main(argv=None) -> dict:
     p.add_argument("--zipf-s", type=float, default=1.3)
     p.add_argument("--max-new", type=int, default=8)
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--fault-rate", type=float, default=0.0,
+                   help="seeded chaos: per-event probability of injecting "
+                        "a fault (at-rest bit rot, migration-leg "
+                        "corruption); 0 disables injection (default)")
+    p.add_argument("--fault-seed", type=int, default=None,
+                   help="chaos RNG stream (default: --seed); the same "
+                        "(rate, seed) pair replays identical faults")
+    p.add_argument("--no-recovery", action="store_true",
+                   help="detection-only chaos: count checksum detections "
+                        "but never retry or restore (audit arm)")
+    p.add_argument("--snapshot-every", type=int, default=4,
+                   help="ticks between session-snapshot refreshes backing "
+                        "chaos recovery (0 disables snapshots)")
     args = p.parse_args(argv)
 
     wl_prompt_lens = (6, 8, 10, 12)
@@ -91,6 +115,19 @@ def main(argv=None) -> dict:
         p.error(f"--max-len {args.max_len} cannot hold the synthetic "
                 f"workload: prompts run up to {max(wl_prompt_lens)} tokens "
                 f"plus --max-new {args.max_new} decode positions")
+    if not 0.0 <= args.fault_rate <= 1.0:
+        p.error(f"--fault-rate must be a probability in [0, 1] "
+                f"(got {args.fault_rate})")
+    if args.snapshot_every < 0:
+        p.error(f"--snapshot-every must be >= 0 (got {args.snapshot_every})")
+    if args.fault_rate > 0 and args.replicas < 2:
+        p.error("--fault-rate needs --replicas >= 2: chaos injection "
+                "targets the cluster scheduler (migration legs, replica "
+                "storage)")
+    if (args.no_recovery or args.fault_seed is not None) \
+            and args.fault_rate == 0:
+        p.error("--no-recovery / --fault-seed are chaos flags: set "
+                "--fault-rate > 0 to enable injection first")
     policy = args.policy or ("cost_aware_cluster" if args.replicas > 1
                              else "cost_aware")
 
@@ -109,13 +146,22 @@ def main(argv=None) -> dict:
     # QUEUE's problem (a burst beyond the slot count waits, it never raises
     # EngineFull), store pressure would be silent eviction, so size it out
     n_sessions = sched.n_sessions_for(wl)
+    injector = None
+    if args.fault_rate > 0:
+        from repro.faults import FaultInjector, FaultSpec
+        injector = FaultInjector(FaultSpec(
+            rate=args.fault_rate,
+            seed=args.seed if args.fault_seed is None else args.fault_seed,
+            recover=not args.no_recovery))
     if args.replicas > 1:
         cluster = Cluster(cfg, params, n_replicas=args.replicas,
                           slots=args.slots, max_len=args.max_len,
-                          n_sessions=n_sessions)
+                          n_sessions=n_sessions, faults=injector)
         s = sched.ClusterScheduler(cluster, policy=policy,
                                    arrivals=arrivals,
-                                   migrate=not args.no_migrate)
+                                   migrate=not args.no_migrate,
+                                   snapshot_every=(args.snapshot_every
+                                                   if injector else 0))
         eng = cluster
     else:
         engine = Engine(cfg, params, slots=args.slots, max_len=args.max_len,
@@ -144,6 +190,10 @@ def main(argv=None) -> dict:
     if args.replicas > 1:
         out["migrations"] = eng_stats["migrations"]
         out["migrated_bytes"] = eng_stats["migrated_bytes"]
+    if injector is not None:
+        out["fault_ledger"] = injector.summary()
+        out["verify_failed"] = eng.verify_failure_count()
+        out["at_rest_corrupt"] = int(eng.scrub())
     print(json.dumps(out, allow_nan=False))
     return out
 

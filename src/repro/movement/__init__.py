@@ -14,7 +14,13 @@ Public surface::
 See :mod:`repro.movement.plan` for the lowering, DESIGN.md Sec. 8 for the
 paper mapping.
 """
-from repro.movement.paging import PageSpec, pack_slot, unpack_into_slot
+from repro.movement.paging import (
+    PageSpec,
+    pack_slot,
+    page_checksums,
+    unpack_into_slot,
+    verify_pages,
+)
 from repro.movement.plan import (
     HopChainLeg,
     HostStageLeg,
@@ -33,6 +39,7 @@ from repro.movement.plan import (
     UnpackLeg,
     fuse,
     plan,
+    retry_cost,
     ring_plan,
 )
 from repro.movement.registry import (
@@ -41,14 +48,19 @@ from repro.movement.registry import (
     execute,
     get_backend,
     register_backend,
+    unwrap_backend,
+    wrap_backend,
+    wrapped_kinds,
 )
 from repro.movement import backends as _backends  # noqa: F401  (registers)
 
 __all__ = [
     "PageSpec", "pack_slot", "unpack_into_slot",
+    "page_checksums", "verify_pages",
     "Tier", "Layout", "Transfer", "Leg", "MovementCost", "MovementPlan",
     "PackLeg", "UnpackLeg", "PageGatherLeg", "PageScatterLeg",
     "TierReadLeg", "TierWriteLeg", "TileCopyLeg", "HopChainLeg",
-    "HostStageLeg", "plan", "ring_plan", "fuse",
+    "HostStageLeg", "plan", "ring_plan", "fuse", "retry_cost",
     "Env", "register_backend", "get_backend", "backend_kinds", "execute",
+    "wrap_backend", "unwrap_backend", "wrapped_kinds",
 ]

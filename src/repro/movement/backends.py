@@ -40,6 +40,10 @@ def _pack_pages(leg: PackLeg, env: Env) -> Env:
     else:
         env["data"] = paging.pack_slot(leg.page_spec, env["cache"],
                                        env["slot"])
+    # The detection sidecar: every pack leg emits per-page checksums
+    # alongside the payload (ECC computed at the subarray boundary).  Pure
+    # in-graph uint32 arithmetic — no extra dispatch, no host sync.
+    env["sums"] = paging.page_checksums(env["data"])
     return env
 
 
@@ -48,6 +52,19 @@ def _unpack_pages(leg: UnpackLeg, env: Env) -> Env:
     # A wave is declared by the plural env keys, so a fused plan of batch 1
     # (a one-element resume wave) still takes the batched path.
     env = dict(env)
+    expected = env.get("sums")
+    if expected is not None:
+        # Verify at unpack against the checksums the caller carried from
+        # pack time.  ``verify_fail`` counts ITEMS with any corrupt page
+        # (one incident per session) and stays on-device: the verdict rides
+        # the caller's existing sync, never adding one.
+        cs = paging.page_checksums(env["data"])
+        mismatch = cs != jnp.asarray(expected, jnp.uint32)
+        if mismatch.ndim > 1:          # wave: (k, n_pages) -> per-item any
+            env["verify_fail"] = jnp.sum(
+                jnp.any(mismatch, axis=-1).astype(jnp.int32))
+        else:
+            env["verify_fail"] = jnp.any(mismatch).astype(jnp.int32)
     if leg.batch > 1 or "slots" in env:
         def body(cache, xs):
             slot, pages = xs

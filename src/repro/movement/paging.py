@@ -85,6 +85,32 @@ def pack_slot(spec: PageSpec, cache, slot) -> jax.Array:
     return flat.reshape(spec.n_pages, spec.page_rows, spec.page_lanes)
 
 
+def page_checksums(pages: jax.Array) -> jax.Array:
+    """Per-page position-weighted byte checksum (uint32, traceable).
+
+    ``pages`` is (..., P, d) uint8 — any leading batch dims, last two dims
+    one page.  Each page's checksum is ``sum(byte[i] * (2*i + 1)) mod 2^32``.
+    The weights are odd, hence units mod 2^32, so ANY single-byte change
+    (delta in [-255, 255] \\ {0}) shifts the sum by ``delta * w_i != 0`` —
+    every single-byte corruption is detected, by construction.  Computed
+    in-graph: a pack leg pays a few uint32 FLOPs per byte and no host sync.
+    """
+    pb = pages.shape[-2] * pages.shape[-1]
+    flat = pages.reshape(pages.shape[:-2] + (pb,)).astype(jnp.uint32)
+    w = 2 * jnp.arange(pb, dtype=jnp.uint32) + 1
+    return jnp.sum(flat * w, axis=-1, dtype=jnp.uint32)
+
+
+def verify_pages(pages: jax.Array, sums: jax.Array) -> jax.Array:
+    """Count of pages whose recomputed checksum mismatches ``sums``.
+
+    ``pages`` (..., n_pages, P, d) against ``sums`` (..., n_pages); returns
+    an int32 scalar (traceable — the verdict rides whatever sync the caller
+    already performs, never forcing one of its own).
+    """
+    return jnp.sum((page_checksums(pages) != sums).astype(jnp.int32))
+
+
 def unpack_into_slot(spec: PageSpec, cache, slot, pages: jax.Array):
     """Restore pages into cache[:, slot]; inverse of :func:`pack_slot`."""
     flat = pages.reshape(-1)

@@ -261,6 +261,24 @@ class MovementCost(NamedTuple):
                              uj_memcpy=self.uj_memcpy * k)
 
 
+def retry_cost(cost: MovementCost, retries: int,
+               backoff_ns: float = 0.0) -> MovementCost:
+    """The EXTRA cost of ``retries`` re-executions of an already-charged
+    plan, plus retry backoff.
+
+    A checksum-failed leg re-issues the whole transfer, so k retries price
+    exactly ``cost.scaled(k)`` — cost-additivity the chaos property tests
+    pin.  ``backoff_ns`` (bounded-exponential wait between attempts) is
+    mechanism-independent wall latency: it adds to both clocks and moves no
+    bytes, so the modeled LISA-vs-memcpy byte accounting stays honest."""
+    if retries <= 0:
+        base = MovementCost(0, 0, 0.0, 0.0, 0.0, 0.0)
+    else:
+        base = cost.scaled(retries)
+    return base._replace(ns_lisa=base.ns_lisa + backoff_ns,
+                         ns_memcpy=base.ns_memcpy + backoff_ns)
+
+
 _FREE_LEGS = ("pack_pages", "unpack_pages")      # relabeling, not movement
 _CHANNEL_LEGS = ("host_stage",)                  # channel is the only path
 

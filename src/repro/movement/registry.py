@@ -37,14 +37,21 @@ def register_backend(kind: str) -> Callable[[Backend], Backend]:
     Re-registering the SAME backend (same module/qualname — a module
     reload) replaces it silently, so registering modules stay
     reload-safe; a different function under a taken kind still raises.
+    Reload-safety holds under interposition too: while ``kind`` is
+    wrapped, ownership is judged against the stored ORIGINAL, and a
+    reload refreshes that original in place — the wrapper stays
+    installed and the next :func:`unwrap_backend` restores the fresh fn.
     """
     def deco(fn: Backend) -> Backend:
-        old = _BACKENDS.get(kind)
+        old = _WRAPPED.get(kind, _BACKENDS.get(kind))
         if old is not None and (old.__module__, old.__qualname__) != (
                 fn.__module__, fn.__qualname__):
             raise ValueError(f"movement backend {kind!r} already registered "
                              f"by {old.__module__}.{old.__qualname__}")
-        _BACKENDS[kind] = fn
+        if kind in _WRAPPED:
+            _WRAPPED[kind] = fn
+        else:
+            _BACKENDS[kind] = fn
         return fn
     return deco
 
@@ -61,6 +68,41 @@ def get_backend(kind: str) -> Backend:
 
 def backend_kinds() -> Tuple[str, ...]:
     return tuple(sorted(_BACKENDS))
+
+
+# Sanctioned interposition: a wrapper layer (fault injection, tracing) may
+# wrap a registered backend without violating the one-owner contract above.
+# Originals are kept so the wrap is reversible and never stacks silently.
+_WRAPPED: Dict[str, Backend] = {}
+
+
+def wrap_backend(kind: str,
+                 make: Callable[[Backend], Backend]) -> Backend:
+    """Replace backend ``kind`` with ``make(original)``; returns the wrapper.
+
+    Raises if ``kind`` is unknown or already wrapped (wrappers must not
+    stack — unwrap first).  The original is restored by
+    :func:`unwrap_backend`.
+    """
+    if kind in _WRAPPED:
+        raise ValueError(f"movement backend {kind!r} is already wrapped; "
+                         f"unwrap_backend({kind!r}) first")
+    original = get_backend(kind)
+    wrapper = make(original)
+    _WRAPPED[kind] = original
+    _BACKENDS[kind] = wrapper
+    return wrapper
+
+
+def unwrap_backend(kind: str) -> None:
+    """Restore the original backend for ``kind`` (no-op if not wrapped)."""
+    original = _WRAPPED.pop(kind, None)
+    if original is not None:
+        _BACKENDS[kind] = original
+
+
+def wrapped_kinds() -> Tuple[str, ...]:
+    return tuple(sorted(_WRAPPED))
 
 
 def execute(plan: MovementPlan, env: Env | None = None, **operands) -> Env:

@@ -68,6 +68,8 @@ class Decision:
     ns_memcpy: float = 0.0
     uj_lisa: float = 0.0
     uj_memcpy: float = 0.0
+    # chaos-run kinds: "snapshot_wave" (write-behind: priced, not charged
+    # to the clock), "recover_wave", "retry_wave" (both on the clock)
 
 
 class Metrics:
@@ -79,6 +81,8 @@ class Metrics:
         self.decisions: List[Decision] = []
         self._occupancy: List[float] = []
         self._replica_occ: List[List[float]] = []   # cluster runs only
+        self._faults: Dict[str, int] = {}
+        self._fault_class: Dict[int, Dict[str, int]] = {}
 
     # ---- recording --------------------------------------------------------
     def record_job(self, rec: JobRecord) -> None:
@@ -86,6 +90,17 @@ class Metrics:
 
     def record_decision(self, dec: Decision) -> None:
         self.decisions.append(dec)
+
+    def record_fault(self, kind: str, priority: Optional[int] = None,
+                     n: int = 1) -> None:
+        """Count one chaos event (``injected`` / ``detected`` /
+        ``recovered`` / ``lost`` / ``requeued`` / ``retries`` /
+        ``replica_failures`` / ``degraded``), optionally attributed to the
+        affected job's class."""
+        self._faults[kind] = self._faults.get(kind, 0) + n
+        if priority is not None:
+            per = self._fault_class.setdefault(priority, {})
+            per[kind] = per.get(kind, 0) + n
 
     def record_tick(self, n_active: int, n_slots: int,
                     per_replica: Optional[Sequence[float]] = None) -> None:
@@ -151,6 +166,17 @@ class Metrics:
                 percentile_ns([j.latency_ns for j in local], 99), 1),
         }
 
+    def fault_summary(self) -> Dict[str, object]:
+        """The chaos block: fleet-wide event counters plus the per-class
+        retry/recovery/loss attribution.  Buckets that saw nothing report
+        ``None`` (strict-JSON ``null``), never a fake zero distribution —
+        the ``per_class`` map is ``None`` on a fault-free run."""
+        per_class = ({str(c): dict(sorted(d.items()))
+                      for c, d in sorted(self._fault_class.items())}
+                     if self._fault_class else None)
+        return {"counters": dict(sorted(self._faults.items())),
+                "per_class": per_class}
+
     def summary(self) -> Dict[str, object]:
         per_class: Dict[str, Dict[str, object]] = {}
         for cls in sorted({j.priority for j in self.jobs}):
@@ -170,6 +196,7 @@ class Metrics:
             "movement": {k: round(v, 2)
                          for k, v in self.movement_totals().items()},
             "decisions": self.decision_counts(),
+            "faults": self.fault_summary(),
         }
         if self._replica_occ:           # cluster run: per-replica view
             n_rep = len(self._replica_occ[0])

@@ -61,6 +61,7 @@ class PlaceCand(NamedTuple):
     fast_occupancy: float   # fraction of the VILLA fast tier in use
     hop_ns: float
     place_ns: float
+    degraded: bool = False  # VILLA fast tier degraded to slow-only (chaos)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -150,11 +151,17 @@ class CostAwareClusterPolicy(CostAwarePolicy):
     inbound session will keep resuming at slow-subarray timings).  This is
     the paper's Sec. 3.2 "intelligent cost-aware mechanism" applied to
     replica topology: distance-1 neighbors are preferred over far hops
-    exactly as LISA prefers near-subarray RBM chains."""
+    exactly as LISA prefers near-subarray RBM chains.
+
+    A chaos-degraded replica (fast tier offline) sorts behind healthy ones
+    at equal slot pressure: its ``place_ns`` already reroutes to slow-tier
+    pricing (the engine reports no fast residents while degraded), and the
+    explicit ``degraded`` key keeps new sessions off it even when the
+    priced costs tie."""
     name = "cost_aware_cluster"
 
     def place_order(self, cands, ctx):
-        return sorted(cands, key=lambda c: (c.free_slots <= 0,
+        return sorted(cands, key=lambda c: (c.free_slots <= 0, c.degraded,
                                             c.hop_ns + c.place_ns,
                                             c.fast_occupancy, c.replica))
 

@@ -35,8 +35,11 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import math
-from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+from typing import Dict, List, NamedTuple, Optional, Sequence, Set, Tuple
 
+from repro import movement as MV
+from repro.faults.recover import restore_session, snapshot_sessions
+from repro.faults.spec import FaultInjector
 from repro.sched.metrics import Decision, JobRecord, Metrics
 from repro.sched.policy import (AdmitCand, PlaceCand, SchedContext,
                                 SchedPolicy, VictimCand, get_policy)
@@ -502,10 +505,22 @@ class ClusterScheduler(Scheduler):
 
     def __init__(self, cluster, policy="cost_aware_cluster",
                  arrivals: Sequence[Arrival] = (),
-                 cfg: SchedConfig = SchedConfig(), *, migrate: bool = True):
+                 cfg: SchedConfig = SchedConfig(), *, migrate: bool = True,
+                 faults: Optional[FaultInjector] = None,
+                 snapshot_every: int = 0):
         super().__init__(cluster, policy=policy, arrivals=arrivals, cfg=cfg)
         self.cluster = cluster
         self.migrate = migrate
+        if snapshot_every < 0:
+            raise ValueError(f"snapshot_every must be >= 0, "
+                             f"got {snapshot_every}")
+        # chaos wiring: the injector drives at-rest corruption and scheduled
+        # replica/degrade events here; the cluster consumes the SAME
+        # injector for movement-wave faults — one seeded draw stream
+        self.faults = faults if faults is not None else cluster.faults
+        self.snapshot_every = snapshot_every
+        self._snaps: Dict[int, object] = {}     # uid -> SessionSnapshot
+        self._lost_uids: Set[int] = set()       # sessions gone for good
 
     # ---- the tick (parallel replica lanes) --------------------------------
     def tick(self) -> None:
@@ -515,6 +530,7 @@ class ClusterScheduler(Scheduler):
             self.now_ns = max(self.now_ns,
                               self._arrivals[self._next_arrival].t_ns)
         self._admit_arrivals()
+        self._fault_tick()
         self.metrics.record_tick(
             len(self.eng.active), self.eng.slots,
             per_replica=[len(e.active) / e.slots
@@ -549,6 +565,186 @@ class ClusterScheduler(Scheduler):
         # 4. execute the prepared wave
         self.now_ns += self._execute_wave(wave, fast_uids)
 
+    # ---- chaos: injection, snapshots, replica recovery --------------------
+    def _mech_ns(self, c: MV.MovementCost) -> float:
+        return c.ns_lisa if self.cfg.mechanism == "lisa" else c.ns_memcpy
+
+    def _class_of(self, uid: int) -> Optional[int]:
+        """Job class attribution for a chaos event on ``uid`` (latest job
+        wins; chaos events are rare, the scan is fine)."""
+        for j in reversed(list(self._jobs.values())):
+            if j.uid == uid:
+                return j.priority
+        return None
+
+    def _admit_arrivals(self) -> None:
+        super()._admit_arrivals()
+        if self._lost_uids:
+            self._drain_lost()
+
+    def _drain_lost(self) -> None:
+        """Complete (as lost) queued follow-ups whose session died with a
+        replica and has no snapshot: they can never be served, and leaving
+        them queued would spin the run to ``max_ticks``.  A uid whose
+        session has been re-created (fresh re-prefill in flight or done)
+        is servable again and is skipped."""
+        active_uids = {j.uid for j in self._slot_job.values()}
+        fresh_uids = {e.uid for e in self.queue.entries()
+                      if e.kind == "fresh"}
+        resumable = set(self.eng.session_pos)
+        for e in list(self.queue.entries()):
+            if (e.kind != "resume" or e.uid not in self._lost_uids
+                    or e.uid in resumable or e.uid in active_uids
+                    or e.uid in fresh_uids):
+                continue
+            self.queue.remove(e)
+            job = self._jobs[e.job_id]
+            job.target_new = job.done
+            self._complete_job(job, self.now_ns)
+            self.metrics.record_fault("lost", job.priority)
+
+    def _fault_tick(self) -> None:
+        """The chaos gate at the top of every tick: refresh snapshots,
+        fire scheduled replica failures / fast-tier degradations, and take
+        this tick's seeded at-rest corruption draw."""
+        inj, cl = self.faults, self.cluster
+        if self.snapshot_every and self.tick_count % self.snapshot_every == 0:
+            snaps, cost = snapshot_sessions(cl)
+            if inj is not None:
+                # never refresh a ledger-known corrupt session's snapshot:
+                # the LAST CLEAN copy is the one recovery must restore
+                snaps = {u: s for u, s in snaps.items()
+                         if not inj.is_corrupt(u)}
+            if snaps:
+                self._snaps.update(snaps)
+                # write-behind: snapshot bytes are priced and recorded but
+                # NOT charged to the clock — the copy overlaps decode the
+                # way LISA-VILLA's dirty-line writeback overlaps service
+                self.metrics.record_decision(Decision(
+                    tick=self.tick_count, kind="snapshot_wave",
+                    n_items=len(snaps), ns_lisa=cost.ns_lisa,
+                    ns_memcpy=cost.ns_memcpy, uj_lisa=cost.uj_lisa,
+                    uj_memcpy=cost.uj_memcpy))
+        if inj is None:
+            return
+        for r in inj.replica_failures_at(self.tick_count):
+            self._handle_replica_failure(r)
+        for r in inj.degrade_at(self.tick_count):
+            cl.degrade_fast(r)
+            self.metrics.record_fault("degraded")
+        # at-rest corruption: one seeded draw per tick over the suspended,
+        # not-yet-corrupt sessions (deterministic candidate order).  An
+        # ACTIVE session's store row is a stale copy the next suspend
+        # overwrites wholesale — corrupting it would silently heal, so only
+        # truly at-rest snapshots are candidates.
+        active_uids = {req.uid for req in self.eng.active.values()}
+        cands = [u for u in sorted(self.eng.session_pos)
+                 if u not in active_uids and not inj.is_corrupt(u)]
+        if cands:
+            spec = cl.page_spec
+            draw = inj.draw_storage(len(cands), spec.n_pages,
+                                    spec.page_bytes)
+            if draw is not None:
+                ci, page, byte, xor = draw
+                uid = cands[ci]
+                eng = cl.replicas[cl.residence[uid]]
+                eng.corrupt_stored(uid % cl.n_sessions, page, byte, xor)
+                inj.note_corrupt(uid)
+                self.metrics.record_fault("injected", self._class_of(uid))
+
+    def _recovery_target(self, dead: int) -> Optional[int]:
+        """Where refugees from a dead replica land: the surviving replica
+        with the most free slots (lowest index on ties)."""
+        if self.cluster.n_replicas < 2:
+            return None
+        free = self.cluster.free_by_replica()
+        best = max((f, -r) for r, f in enumerate(free) if r != dead)
+        return -best[1]
+
+    def _handle_replica_failure(self, r: int) -> None:
+        """Replica ``r`` dies mid-service.  Suspended sessions with a live
+        snapshot are restored onto a surviving replica over the priced
+        channel (charged to the clock as a ``recover_wave``); in-flight
+        jobs are re-queued under their ORIGINAL admission seq — from their
+        snapshot where one exists, from a fresh re-prefill of the prompt
+        otherwise; sessions with neither are completed as lost so the
+        queue stays drainable (starvation-free: requeues keep their aged
+        class)."""
+        cl, inj = self.cluster, self.faults
+        # capture the jobs running on the dying replica BEFORE the wipe
+        doomed = {g: self._slot_job.pop(g) for g in list(self._slot_job)
+                  if cl.replica_of(g) == r}
+        inflight, suspended = cl.fail_replica(r)
+        self.metrics.record_fault("replica_failures")
+        target = self._recovery_target(r)
+        tot = [0.0, 0.0, 0.0, 0.0]
+        recover_ns, n_restored = 0.0, 0
+
+        def restore(uid: int) -> bool:
+            nonlocal recover_ns, n_restored
+            snap = self._snaps.get(uid)
+            if snap is None or target is None:
+                return False
+            c = restore_session(cl, snap, target)
+            n_restored += 1
+            recover_ns += self._mech_ns(c)
+            for i, v in enumerate((c.ns_lisa, c.ns_memcpy,
+                                   c.uj_lisa, c.uj_memcpy)):
+                tot[i] += v
+            return True
+
+        for uid in suspended:
+            if restore(uid):
+                self.metrics.record_fault("recovered", self._class_of(uid))
+            else:
+                self._lost_uids.add(uid)
+        for g, req in inflight:
+            job = doomed.pop(g, None)
+            if job is None:
+                continue
+            job.state, job.slot = "queued", -1
+            self._last_active[job.uid] = self.tick_count
+            if job.uid not in cl.session_pos:
+                restore(job.uid)
+            if job.uid in cl.session_pos:
+                # tokens decoded since the snapshot died with the replica;
+                # the job resumes from the snapshot state it restored to
+                self.queue.push(job_id=job.job_id, uid=job.uid,
+                                kind="resume", priority=job.priority,
+                                arrival_ns=job.arrival_ns,
+                                slo_ns=job.slo_ns, tick=self.tick_count,
+                                new_tokens=job.target_new - job.done,
+                                seq=job.job_id)
+                self.metrics.record_fault("recovered", job.priority)
+            elif job.kind == "fresh" and len(req.prompt):
+                # no snapshot, but the prompt survives in the request:
+                # re-prefill from scratch under the original admission seq
+                job.done = 0
+                self.queue.push(job_id=job.job_id, uid=job.uid,
+                                kind="fresh", priority=job.priority,
+                                arrival_ns=job.arrival_ns,
+                                slo_ns=job.slo_ns, tick=self.tick_count,
+                                new_tokens=job.target_new,
+                                prompt=req.prompt, seq=job.job_id)
+                self._lost_uids.discard(job.uid)
+                self.metrics.record_fault("requeued", job.priority)
+            else:
+                self._lost_uids.add(job.uid)
+                job.target_new = job.done
+                self._complete_job(job, self.now_ns)
+                self.metrics.record_fault("lost", job.priority)
+        if inj is not None:
+            for uid in list(self._lost_uids):
+                if inj.is_corrupt(uid):
+                    inj.discard_corrupt(uid)
+        if n_restored:
+            self.metrics.record_decision(Decision(
+                tick=self.tick_count, kind="recover_wave",
+                n_items=n_restored, ns_lisa=tot[0], ns_memcpy=tot[1],
+                uj_lisa=tot[2], uj_memcpy=tot[3]))
+            self.now_ns += recover_ns
+        self._drain_lost()
+
     # ---- placement scoring ------------------------------------------------
     def _place_cands(self, e: QueueEntry, fast_uids: frozenset,
                      free: List[int], occ: List[float]) -> List[PlaceCand]:
@@ -573,7 +769,9 @@ class ClusterScheduler(Scheduler):
                 hop = 0.0
             out.append(PlaceCand(replica=r, free_slots=free[r],
                                  fast_occupancy=occ[r], hop_ns=hop,
-                                 place_ns=place))
+                                 place_ns=place,
+                                 degraded=self.cluster.replicas[
+                                     r].fast_degraded))
         return out
 
     # ---- wave preparation (runs while the decodes are in flight) ----------
@@ -720,6 +918,34 @@ class ClusterScheduler(Scheduler):
             ready.append(c)
             extras.append(n + 1)                # +1: the restored seed token
             rtargets.append(t)
+        inj = self.faults
+        if inj is not None and ready:
+            # pre-resume repair: a session the ledger knows is corrupt at
+            # rest is restored from its snapshot BEFORE it resumes (clean
+            # bytes migrate/resume below); without recovery — or without a
+            # snapshot — it resumes as-is and the device-side verify counts
+            # the detection (served corrupt, never silent)
+            for c in ready:
+                uid = c.entry.uid
+                if not inj.is_corrupt(uid):
+                    continue
+                snap = self._snaps.get(uid)
+                if inj.spec.recover and snap is not None:
+                    home = cl.residence[uid]
+                    rc = restore_session(cl, snap, home)
+                    lanes[home] += self._mech_ns(rc)
+                    self.metrics.record_decision(Decision(
+                        tick=self.tick_count, kind="recover_wave",
+                        n_items=1, ns_lisa=rc.ns_lisa,
+                        ns_memcpy=rc.ns_memcpy, uj_lisa=rc.uj_lisa,
+                        uj_memcpy=rc.uj_memcpy))
+                    inj.consume_corrupt(uid, "recovered")
+                    self.metrics.record_fault("recovered",
+                                              self._class_of(uid))
+                else:
+                    inj.consume_corrupt(uid, "detected")
+                    self.metrics.record_fault("detected",
+                                              self._class_of(uid))
         if ready:
             homes = {c.entry.uid: cl.residence[c.entry.uid] for c in ready}
             migs = [(c, t) for c, t in zip(ready, rtargets)
@@ -752,6 +978,32 @@ class ClusterScheduler(Scheduler):
             self._charge_wave("resume_wave", flags, "resume")
             for t, f in zip(rtargets, flags):
                 lanes[t] += self._move_ns("resume", f)
+            if inj is not None:
+                # migration-wave faults: each retried route's re-copies and
+                # backoff are real latency on the inbound lane, priced as
+                # k× the route plan plus the bounded-exponential backoff
+                for ev in cl.drain_fault_events():
+                    retries = int(ev["retries"])
+                    if retries:
+                        base = cl.migration_plan(ev["src"], ev["dst"],
+                                                 ev["k"]).cost
+                        rc = MV.retry_cost(base, retries,
+                                           float(ev["backoff_ns"]))
+                        lanes[ev["dst"]] += self._mech_ns(rc)
+                        self.metrics.record_decision(Decision(
+                            tick=self.tick_count, kind="retry_wave",
+                            n_items=retries, ns_lisa=rc.ns_lisa,
+                            ns_memcpy=rc.ns_memcpy, uj_lisa=rc.uj_lisa,
+                            uj_memcpy=rc.uj_memcpy))
+                        self.metrics.record_fault("retries", n=retries)
+                    uid = ev["corrupt_uid"]
+                    if uid is not None:
+                        # landed corrupt (retries exhausted or recovery
+                        # off) and resumed in this very wave — the device
+                        # verify caught it; close the incident as detected
+                        inj.consume_corrupt(uid, "detected")
+                        self.metrics.record_fault("detected",
+                                                  self._class_of(uid))
 
         # fresh admissions: prefills run concurrently across replicas
         for c, t in pairs:

@@ -53,6 +53,8 @@ from repro.configs.base import ModelConfig
 from repro.core.dram.spec import DDR3_1600, DramSpec
 from repro.core.dram.villa import VillaConfig
 from repro.core.lisa.topology import MeshTopology
+from repro.faults.inject import install_fault_backends
+from repro.faults.spec import NULL_FAULT, FaultInjector
 from repro.serve.engine import Engine, EngineFull, Request, UnknownSession
 
 
@@ -63,9 +65,17 @@ class Cluster:
                  slots: int = 4, max_len: int = 128, n_sessions: int = 64,
                  villa: Optional[VillaConfig] = None,
                  spec: DramSpec = DDR3_1600,
-                 topo: Optional[MeshTopology] = None, axis: str = "replica"):
+                 topo: Optional[MeshTopology] = None, axis: str = "replica",
+                 faults: Optional[FaultInjector] = None):
         if n_replicas < 1:
             raise ValueError(f"need at least one replica (got {n_replicas})")
+        # Chaos mode: interpose the fault wrappers BEFORE any jitted body
+        # traces, so migration waves honor their traced ``fault`` operand.
+        # Without an injector the same bodies run with NULL_FAULT — one
+        # compilation serves clean and chaos runs alike.
+        self.faults = faults
+        if faults is not None:
+            install_fault_backends()
         self.cfg = cfg
         self.n_replicas = n_replicas
         self.slots_per_replica = slots
@@ -98,9 +108,13 @@ class Cluster:
         self.cluster_stats = {"migrations": 0, "migration_waves": 0,
                               "migrated_bytes": 0,
                               "modeled_migration_ns_lisa": 0.0,
-                              "modeled_migration_ns_memcpy": 0.0}
+                              "modeled_migration_ns_memcpy": 0.0,
+                              "migration_retries": 0, "replica_failures": 0,
+                              "retry_ns_lisa": 0.0, "retry_ns_memcpy": 0.0,
+                              "retry_backoff_ns": 0.0}
         self._route_plans: Dict[Tuple[int, int], MV.MovementPlan] = {}
         self._migrate_exec = None       # built lazily (n_replicas > 1 only)
+        self._fault_events: List[Dict[str, object]] = []
 
     # ---- global slot ids ---------------------------------------------------
     def _gslot(self, replica: int, slot: int) -> int:
@@ -309,12 +323,17 @@ class Cluster:
         P, d = self.page_spec.page_rows, self.page_spec.page_lanes
 
         @partial(jax.jit, donate_argnums=(1,))
-        def body(src_slow, dst_slow, src_table, dst_table):
+        def body(src_slow, dst_slow, src_table, dst_table, fault):
+            # ``fault`` is the traced (mode, index, xor) chaos operand —
+            # NULL_FAULT on clean runs — consumed by the fault-wrapped
+            # hop-chain backend when chaos mode installed the wrappers, and
+            # simply unused otherwise: one compilation either way.
             env = MV.execute(exec_plan,
                              src_pool=src_slow.reshape(-1, P, d),
                              src_table=src_table,
                              dst_pool=dst_slow.reshape(-1, P, d),
-                             dst_table=dst_table, local_fabric=True)
+                             dst_table=dst_table, local_fabric=True,
+                             fault=fault)
             return env["dst_pool"].reshape(dst_slow.shape)
 
         return body
@@ -352,6 +371,7 @@ class Cluster:
             self._migrate_exec = self._build_migrate_exec()
 
         spp = self.page_spec.n_pages
+        page_bytes = self.page_spec.page_bytes
         arange = np.arange(spp, dtype=np.int32)
         for (src, dst), route_uids in routes.items():
             s_eng, d_eng = self.replicas[src], self.replicas[dst]
@@ -360,18 +380,70 @@ class Cluster:
             dst_idx = [d_eng.adopt_session(u, p, t)
                        for u, (p, t) in zip(route_uids, metas)]
             self._invalidate_fast(d_eng, dst_idx)
-            src_table = np.concatenate([i * spp + arange for i in src_idx])
-            dst_table = np.concatenate([i * spp + arange for i in dst_idx])
-            with warnings.catch_warnings():
-                warnings.filterwarnings(
-                    "ignore", message="Some donated buffers were not usable")
-                new_slow = self._migrate_exec(
-                    s_eng.sessions.slow, d_eng.sessions.slow,
-                    jnp.asarray(src_table), jnp.asarray(dst_table))
+            src_table = jnp.asarray(
+                np.concatenate([i * spp + arange for i in src_idx]))
+            dst_table = jnp.asarray(
+                np.concatenate([i * spp + arange for i in dst_idx]))
+            k = len(route_uids)
+
+            def run_route(dst_slow, fault):
+                with warnings.catch_warnings():
+                    warnings.filterwarnings(
+                        "ignore",
+                        message="Some donated buffers were not usable")
+                    return self._migrate_exec(
+                        s_eng.sessions.slow, dst_slow, src_table, dst_table,
+                        jnp.asarray(fault))
+
+            inj = self.faults
+            fault = (inj.draw_movement(k * spp * page_bytes, k * spp)
+                     if inj is not None else NULL_FAULT)
+            new_slow = run_route(d_eng.sessions.slow, fault)
+            if inj is not None and int(fault[0]) != 0:
+                # The injector KNOWS it corrupted this wave (host-
+                # deterministic — no mid-loop device read needed): retry the
+                # whole route from the intact source pages, each retry a
+                # fresh draw, bounded by max_retries with exponential
+                # backoff.  The retries and backoff are real latency —
+                # the scheduler prices them into the virtual clock via
+                # drain_fault_events().
+                cost1 = self.migration_plan(src, dst, k).cost
+                retries, backoff_total = 0, 0.0
+                while (inj.spec.recover and int(fault[0]) != 0
+                       and retries < inj.spec.max_retries):
+                    retries += 1
+                    inj.counters["retries"] += 1
+                    backoff_total += inj.backoff_ns(retries)
+                    fault = inj.draw_movement(k * spp * page_bytes, k * spp)
+                    new_slow = run_route(new_slow, fault)
+                corrupt_uid = None
+                if int(fault[0]) != 0:          # landed corrupt (no/lost
+                    mode, index = int(fault[0]), int(fault[1])  # recovery)
+                    page = (index // page_bytes if mode == 1 else index)
+                    corrupt_uid = route_uids[min(page // spp, k - 1)]
+                    inj.note_corrupt(corrupt_uid)
+                elif retries:
+                    inj.counters["retry_fixed"] += 1
+                self.cluster_stats["migration_retries"] += retries
+                self.cluster_stats["retry_ns_lisa"] += (
+                    retries * cost1.ns_lisa)
+                self.cluster_stats["retry_ns_memcpy"] += (
+                    retries * cost1.ns_memcpy)
+                self.cluster_stats["retry_backoff_ns"] += backoff_total
+                self._fault_events.append({
+                    "kind": "migration", "src": src, "dst": dst, "k": k,
+                    "retries": retries, "backoff_ns": backoff_total,
+                    "corrupt_uid": corrupt_uid,
+                    "uids": tuple(route_uids)})
             d_eng.sessions = d_eng.sessions._replace(slow=new_slow)
+            # the checksum sidecar rows travel with the pages — computed at
+            # suspend time on the SOURCE, so corruption in flight is exactly
+            # what the destination's resume-time verify will catch
+            d_eng.session_sums = d_eng.session_sums.at[
+                jnp.asarray(dst_idx)].set(
+                    s_eng.session_sums[jnp.asarray(src_idx)])
             for uid in route_uids:
                 self.residence[uid] = dst
-            k = len(route_uids)
             cost = self.migration_plan(src, dst, k).cost
             self.cluster_stats["migrations"] += k
             self.cluster_stats["migration_waves"] += 1
@@ -379,6 +451,59 @@ class Cluster:
             self.cluster_stats["modeled_migration_ns_lisa"] += cost.ns_lisa
             self.cluster_stats["modeled_migration_ns_memcpy"] += (
                 cost.ns_memcpy)
+
+    def drain_fault_events(self) -> List[Dict[str, object]]:
+        """Hand the scheduler the chaos events since the last drain (retry
+        latency to charge, corrupt sessions to repair or write off)."""
+        out, self._fault_events = self._fault_events, []
+        return out
+
+    # ---- chaos surface ------------------------------------------------------
+    def fail_replica(self, r: int) -> Tuple[List[Tuple[int, Request]],
+                                            Dict[int, Tuple[int, int]]]:
+        """Chaos: replica ``r`` dies.  Its slots, fast-tier tags and
+        in-flight sessions are gone; its suspended snapshots are
+        unreachable.  Returns what the scheduler needs for recovery:
+        the ``(gslot, request)`` pairs that were in flight, and the
+        ``{uid: (pos, tok)}`` bookkeeping of the suspended sessions that
+        died with the pools.  The replica itself restarts empty (capacity
+        returns; state does not) — re-admission goes through snapshots or
+        re-prefill, never through the lost buffers."""
+        if not 0 <= r < self.n_replicas:
+            raise ValueError(f"unknown replica {r}")
+        eng = self.replicas[r]
+        inflight = [(self._gslot(r, s), eng.active[s])
+                    for s in sorted(eng.active)]
+        suspended = {uid: (eng.session_pos[uid], eng.session_tok[uid])
+                     for uid in sorted(eng.session_pos)}
+        eng.active.clear()
+        eng.session_pos.clear()
+        eng.session_tok.clear()
+        eng.store_uid.clear()
+        st = eng.sessions
+        eng.sessions = st._replace(policy=st.policy._replace(
+            tags=jnp.full_like(st.policy.tags, -1)))
+        for uid in [u for u, home in self.residence.items() if home == r]:
+            del self.residence[uid]
+        self.cluster_stats["replica_failures"] += 1
+        return inflight, suspended
+
+    def degrade_fast(self, r: int) -> None:
+        """Chaos: replica ``r``'s VILLA fast tier degrades to slow-only
+        (pricing reroutes; data-path correctness is untouched)."""
+        self.replicas[r].degrade_fast()
+
+    def verify_failure_count(self) -> int:
+        """Fleet total of the device-side resume-verify counters (one
+        explicit sync per replica — bench/test surface, not the tick
+        loop)."""
+        return sum(eng.verify_failure_count() for eng in self.replicas)
+
+    def scrub(self) -> int:
+        """End-of-run audit: device-side checksum scrub of every live
+        suspended snapshot across the fleet; returns the corrupt-session
+        count."""
+        return sum(int(eng.verify_store()) for eng in self.replicas)
 
     @staticmethod
     def _invalidate_fast(eng: Engine, idxs: Sequence[int]) -> None:

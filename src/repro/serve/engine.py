@@ -132,12 +132,21 @@ class Engine:
         self.session_pos: Dict[int, int] = {}       # uid -> next position
         self.session_tok: Dict[int, int] = {}       # uid -> last emitted token
         self.store_uid: Dict[int, int] = {}         # store index -> live uid
-        self._suspend = jax.jit(self._suspend_fn, donate_argnums=(1,))
+        # Detection sidecar: per-page checksums of every suspended snapshot,
+        # written by the pack leg at suspend time and verified at unpack on
+        # resume.  ``verify_failed`` accumulates ON DEVICE — the verdict
+        # rides whichever sync a caller already performs (bench/test
+        # surface), never adding one to the tick loop.
+        self.session_sums = jnp.zeros(
+            (n_sessions, self.page_spec.n_pages), jnp.uint32)
+        self.verify_failed = jnp.zeros((), jnp.int32)
+        self.fast_degraded = False
+        self._suspend = jax.jit(self._suspend_fn, donate_argnums=(1, 2))
         self._suspend_many = jax.jit(self._suspend_many_fn,
-                                     donate_argnums=(1,))
-        self._resume = jax.jit(self._resume_fn, donate_argnums=(0, 1))
+                                     donate_argnums=(1, 2))
+        self._resume = jax.jit(self._resume_fn, donate_argnums=(0, 1, 3))
         self._resume_many = jax.jit(self._resume_many_fn,
-                                    donate_argnums=(0, 1))
+                                    donate_argnums=(0, 1, 3))
 
         # Every suspend/resume is a planned movement between the compute
         # tier and the VILLA slow tier, lowered ONCE here against the spec;
@@ -173,14 +182,17 @@ class Engine:
                 full, p.astype(full.dtype), slot, axis=1), cache, cache1)
         return nxt, cache
 
-    def _suspend_fn(self, cache, store, slot, idx):
-        return MV.execute(self.plan_suspend, cache=cache, slot=slot,
-                          store=store, item=idx)["store"]
+    def _suspend_fn(self, cache, store, sums, slot, idx):
+        env = MV.execute(self.plan_suspend, cache=cache, slot=slot,
+                         store=store, item=idx)
+        # the pack leg emitted per-page checksums; persist them in the
+        # sidecar row for this store index (donated: updated in place)
+        return env["store"], sums.at[idx].set(env["sums"])
 
-    def _resume_fn(self, cache, store, slot, idx):
+    def _resume_fn(self, cache, store, sums, failed, slot, idx):
         env = MV.execute(self.plan_resume, cache=cache, store=store,
-                         slot=slot, item=idx)
-        return env["cache"], env["store"]
+                         slot=slot, item=idx, sums=sums[idx])
+        return env["cache"], env["store"], failed + env["verify_fail"]
 
     def _wave_plan(self, single: MV.MovementPlan, k: int) -> MV.MovementPlan:
         """A whole wave as ONE fused plan (k identical transfers -> one
@@ -191,15 +203,16 @@ class Engine:
             self._wave_plans[key] = MV.fuse([single] * k)
         return self._wave_plans[key]
 
-    def _suspend_many_fn(self, cache, store, slots, idxs):
-        return MV.execute(self._wave_plan(self.plan_suspend, slots.shape[0]),
-                          cache=cache, slots=slots, store=store,
-                          items=idxs)["store"]
+    def _suspend_many_fn(self, cache, store, sums, slots, idxs):
+        env = MV.execute(self._wave_plan(self.plan_suspend, slots.shape[0]),
+                         cache=cache, slots=slots, store=store, items=idxs)
+        return env["store"], sums.at[idxs].set(env["sums"])
 
-    def _resume_many_fn(self, cache, store, slots, idxs):
+    def _resume_many_fn(self, cache, store, sums, failed, slots, idxs):
         env = MV.execute(self._wave_plan(self.plan_resume, slots.shape[0]),
-                         cache=cache, store=store, slots=slots, items=idxs)
-        return env["cache"], env["store"]
+                         cache=cache, store=store, slots=slots, items=idxs,
+                         sums=sums[idxs])
+        return env["cache"], env["store"], failed + env["verify_fail"]
 
     # ---- scheduling -------------------------------------------------------
     def free_slots(self) -> List[int]:
@@ -419,8 +432,9 @@ class Engine:
             raise ValueError(f"slot {slot} has no active request to suspend "
                              f"(active slots: {sorted(self.active)})")
         idx = self._suspend_bookkeep(slot)
-        self.sessions = _quiet(self._suspend, self.cache, self.sessions,
-                               jnp.int32(slot), jnp.int32(idx))
+        self.sessions, self.session_sums = _quiet(
+            self._suspend, self.cache, self.sessions, self.session_sums,
+            jnp.int32(slot), jnp.int32(idx))
         self._charge_move(self.plan_suspend)
 
     def suspend_many(self, slots: Sequence[int]) -> None:
@@ -435,9 +449,9 @@ class Engine:
                              f"(got {list(slots)}; active: "
                              f"{sorted(self.active)})")
         idxs = [self._suspend_bookkeep(s) for s in slots]
-        self.sessions = _quiet(self._suspend_many, self.cache, self.sessions,
-                               jnp.asarray(slots, jnp.int32),
-                               jnp.asarray(idxs, jnp.int32))
+        self.sessions, self.session_sums = _quiet(
+            self._suspend_many, self.cache, self.sessions, self.session_sums,
+            jnp.asarray(slots, jnp.int32), jnp.asarray(idxs, jnp.int32))
         self._charge_move(self._wave_plan(self.plan_suspend, len(slots)))
 
     def _check_resumable(self, uid: int, extra_new: int) -> int:
@@ -480,9 +494,9 @@ class Engine:
         serving-level VILLA metric.  One jitted dispatch, no host sync."""
         idx = self._check_resumable(uid, extra_new)
         slot = self._take_slot()
-        self.cache, self.sessions = _quiet(
-            self._resume, self.cache, self.sessions, jnp.int32(slot),
-            jnp.int32(idx))
+        self.cache, self.sessions, self.verify_failed = _quiet(
+            self._resume, self.cache, self.sessions, self.session_sums,
+            self.verify_failed, jnp.int32(slot), jnp.int32(idx))
         self._activate(slot, uid, extra_new)
         self.stats["resumes"] += 1
         self._charge_move(self.plan_resume)
@@ -511,9 +525,10 @@ class Engine:
             raise EngineFull(f"{len(uids)} resumes requested but only "
                              f"{len(free)} slots free")
         slots = free[:len(uids)]
-        self.cache, self.sessions = _quiet(
-            self._resume_many, self.cache, self.sessions,
-            jnp.asarray(slots, jnp.int32), jnp.asarray(idxs, jnp.int32))
+        self.cache, self.sessions, self.verify_failed = _quiet(
+            self._resume_many, self.cache, self.sessions, self.session_sums,
+            self.verify_failed, jnp.asarray(slots, jnp.int32),
+            jnp.asarray(idxs, jnp.int32))
         for slot, uid, extra in zip(slots, uids, extras):
             self._activate(slot, uid, extra)
             self.stats["resumes"] += 1
@@ -532,13 +547,73 @@ class Engine:
         now (one small device→host read of the policy tags).  The scheduler
         consults this for occupancy-aware cost scoring: a resident resume is
         a fast-subarray read, a resident suspend pays the write-through to
-        both pools."""
+        both pools.  A degraded fast tier reports empty — every movement is
+        priced at slow-tier cost."""
+        if self.fast_degraded:
+            return frozenset()
         tags = np.asarray(self.sessions.policy.tags)
         return frozenset(self.store_uid[int(t)] for t in tags
                          if t >= 0 and int(t) in self.store_uid)
 
     def hit_rate(self) -> float:
         return float(VC.hit_rate(self.sessions))
+
+    # ---- chaos surface ----------------------------------------------------
+    def degrade_fast(self) -> None:
+        """Take the VILLA fast tier offline for pricing purposes: tags are
+        dropped (nothing to write back — the store is write-through, so the
+        slow tier is already current, the fault-model analogue of
+        LISA-VILLA's dirty-line writeback being a no-op) and
+        :meth:`fast_resident_uids` reports empty from now on, rerouting
+        every scheduler cost estimate to slow-tier prices.  Data-path
+        correctness is untouched; only the pricing surface degrades."""
+        self.fast_degraded = True
+        st = self.sessions
+        self.sessions = st._replace(policy=st.policy._replace(
+            tags=jnp.full_like(st.policy.tags, -1)))
+
+    def corrupt_stored(self, idx: int, page: int, byte: int,
+                       xor: int) -> None:
+        """Chaos hook: XOR one byte of suspended snapshot ``idx`` at rest —
+        in the slow pool AND, if the snapshot is fast-resident, in the fast
+        copy (both tiers hold the same rotted bits, as one failing subarray
+        would).  The checksum sidecar is deliberately NOT updated: the next
+        resume's unpack verify must catch this.  Pure device ops, no host
+        sync."""
+        P, d = self.page_spec.page_rows, self.page_spec.page_lanes
+        row, lane = byte // d, byte % d
+        if not (0 <= page < self.page_spec.n_pages and 0 <= row < P):
+            raise ValueError(f"corrupt_stored target out of range: "
+                             f"page={page}, byte={byte}")
+        x = jnp.uint8(xor)
+        st = self.sessions
+        slow = st.slow.at[idx, page, row, lane].set(
+            st.slow[idx, page, row, lane] ^ x)
+        tags = st.policy.tags
+        hit = jnp.any(tags == idx)
+        f = jnp.argmax(tags == idx)
+        fast = jnp.where(hit, st.fast.at[f, page, row, lane].set(
+            st.fast[f, page, row, lane] ^ x), st.fast)
+        self.sessions = st._replace(slow=slow, fast=fast)
+
+    def verify_store(self) -> jax.Array:
+        """Scrub: recompute every LIVE suspended snapshot's checksums
+        against the sidecar; returns the ON-DEVICE int32 count of corrupt
+        sessions.  Callers (the chaos bench's end-of-run audit, tests) sync
+        it explicitly — the tick loop never calls this."""
+        idxs = sorted(i for i, u in self.store_uid.items()
+                      if u in self.session_pos)
+        if not idxs:
+            return jnp.zeros((), jnp.int32)
+        ii = jnp.asarray(idxs, jnp.int32)
+        cs = PS.page_checksums(self.sessions.slow[ii])
+        mismatch = jnp.any(cs != self.session_sums[ii], axis=-1)
+        return jnp.sum(mismatch.astype(jnp.int32))
+
+    def verify_failure_count(self) -> int:
+        """Sync the device-side resume-verify counter (bench/test surface —
+        one explicit read, outside the tick loop)."""
+        return int(self.verify_failed)
 
     def compile_counts(self) -> Dict[str, int]:
         """Jit-cache sizes of the hot-path entry points (compilations seen).

@@ -23,7 +23,9 @@ from repro.core.lisa import villa_cache as VC
 from repro.movement.paging import (  # noqa: F401  (serving-layer re-exports)
     PageSpec,
     pack_slot,
+    page_checksums,
     unpack_into_slot,
+    verify_pages,
 )
 
 

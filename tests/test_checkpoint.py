@@ -68,6 +68,38 @@ def test_missing_dir_raises(tmp_path):
         ckpt.restore(_state(), str(tmp_path / "nope"))
 
 
+def test_restore_rejects_torn_or_truncated_checkpoint(tmp_path):
+    """Crash-consistency regression: the crc trailer (written LAST inside
+    the tmp dir, before the atomic rename) catches every partial-write
+    shape — truncation, in-place corruption, missing trailer — as a typed
+    CorruptCheckpoint instead of restoring garbage."""
+    tree = {"w": jnp.arange(64.0).reshape(8, 8), "b": jnp.ones(8)}
+
+    ckpt.save(tree, str(tmp_path), 1)           # truncated payload
+    npz = tmp_path / "step_00000001" / "arrays.npz"
+    npz.write_bytes(npz.read_bytes()[: npz.stat().st_size // 2])
+    with pytest.raises(ckpt.CorruptCheckpoint, match="truncated"):
+        ckpt.restore(tree, str(tmp_path), step=1)
+
+    ckpt.save(tree, str(tmp_path), 2)           # same-size bit rot
+    npz = tmp_path / "step_00000002" / "arrays.npz"
+    raw = bytearray(npz.read_bytes())
+    raw[len(raw) // 2] ^= 0xFF
+    npz.write_bytes(bytes(raw))
+    with pytest.raises(ckpt.CorruptCheckpoint, match="crc"):
+        ckpt.restore(tree, str(tmp_path), step=2)
+
+    ckpt.save(tree, str(tmp_path), 3)           # trailer never landed
+    (tmp_path / "step_00000003" / "trailer.json").unlink()
+    with pytest.raises(ckpt.CorruptCheckpoint, match="trailer"):
+        ckpt.restore(tree, str(tmp_path), step=3)
+
+    ckpt.save(tree, str(tmp_path), 4)           # intact step still restores
+    back = ckpt.restore(tree, str(tmp_path), step=4)
+    assert np.allclose(np.asarray(back["w"]), np.arange(64.0).reshape(8, 8))
+    assert ckpt.verify_checkpoint(str(tmp_path), 4) is None
+
+
 ELASTIC = r"""
 import jax, jax.numpy as jnp, numpy as np, sys
 from jax.sharding import NamedSharding, PartitionSpec as P

@@ -1,0 +1,406 @@
+"""Chaos subsystem: seeded fault injection, checksummed movement with
+priced retries, and snapshot-backed replica-failure recovery.
+
+``CHAOS_SEED`` (the CI matrix knob) offsets every fault seed used here, so
+the determinism and zero-silent-corruption claims are exercised per RNG
+stream, never against one blessed seed.  Property tests ride
+``_hypothesis_compat`` (skip cleanly without hypothesis); each has a
+fixed-case fallback that always runs.
+"""
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro import movement as MV
+from repro import sched
+from repro.checkpoint.manager import CorruptCheckpoint
+from repro.configs import get_reduced
+from repro.faults import (FAULT_CODES, NULL_FAULT, FaultInjector, FaultSpec,
+                          apply_fault, fault_kinds, load_snapshots,
+                          restore_session, save_snapshots, snapshot_sessions)
+from repro.models import lm
+from repro.movement import paging as PG
+from repro.serve.cluster import Cluster
+from repro.serve.engine import Request
+
+CHAOS_SEED = int(os.environ.get("CHAOS_SEED", "0"))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_reduced("tinyllama-1.1b")
+    return cfg, lm.init_lm(cfg, jax.random.key(0))
+
+
+def _greedy_reference(cfg, params, prompt, n_new, max_len=48):
+    cache = lm.init_cache(cfg, 1, max_len=max_len)
+    logits, cache = lm.prefill(cfg, params, jnp.asarray(prompt)[None], cache)
+    toks = [int(jnp.argmax(logits[0, -1]))]
+    pos = len(prompt)
+    while len(toks) < n_new:
+        lg, cache = lm.decode_step(cfg, params, cache,
+                                   jnp.asarray([[toks[-1]]]), jnp.int32(pos))
+        toks.append(int(jnp.argmax(lg[0, 0])))
+        pos += 1
+    return toks
+
+
+def _drain(cl, uid, prompt, max_new, replica):
+    req = Request(uid=uid, prompt=prompt, max_new=max_new)
+    cl.submit(req, replica=replica)
+    while cl.active:
+        cl.step()
+    return req
+
+
+# ---------------------------------------------------------------------------
+# checksum sidecar: every single-byte corruption is detected
+# ---------------------------------------------------------------------------
+
+_DTYPES = {"int8": np.int8, "bf16": "bf16", "f32": np.float32}
+
+
+def _typed_pages(seed, dtname, n_pages=3, P=4, d=8):
+    """A (n_pages, P, d*itemsize) uint8 page block whose bytes are a REAL
+    typed payload (int8 / bf16 / f32 values), not arbitrary noise — the
+    sidecar must detect flips in the byte patterns serving actually moves."""
+    rng = np.random.default_rng((CHAOS_SEED, seed))
+    if dtname == "int8":
+        arr = rng.integers(-128, 128, (n_pages, P, d)).astype(np.int8)
+    elif dtname == "f32":
+        arr = rng.standard_normal((n_pages, P, d)).astype(np.float32)
+    else:                                   # bf16 via jnp (numpy lacks it)
+        arr = np.asarray(jnp.asarray(
+            rng.standard_normal((n_pages, P, d)), jnp.bfloat16
+        ).view(jnp.uint8))
+    raw = np.frombuffer(arr.tobytes(), np.uint8)
+    return raw.reshape(n_pages, P, -1).copy()
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 10**6), st.sampled_from(sorted(_DTYPES)),
+       st.integers(0, 10**9), st.integers(1, 255))
+def test_checksum_detects_every_single_byte_flip(seed, dtname, pos, xor):
+    """Property: for ANY payload, position and nonzero xor, flipping one
+    byte flips exactly that page's checksum (the odd position weights make
+    every single-byte delta visible mod 2^32)."""
+    pages = _typed_pages(seed, dtname)
+    sums = PG.page_checksums(jnp.asarray(pages))
+    assert int(PG.verify_pages(jnp.asarray(pages), sums)) == 0
+    flat = pages.reshape(-1)
+    flat[pos % flat.size] ^= xor
+    corrupt = flat.reshape(pages.shape)
+    assert int(PG.verify_pages(jnp.asarray(corrupt), sums)) == 1
+
+
+def test_checksum_detects_single_byte_flip_fixed_cases():
+    """Fixed-case fallback: first/last byte of each dtype's block, plus the
+    all-zero payload (a zeroed byte in a zero page is the adversarial case
+    for sum-style checksums; position weighting still catches xor flips)."""
+    for dtname in sorted(_DTYPES):
+        pages = _typed_pages(1, dtname)
+        sums = PG.page_checksums(jnp.asarray(pages))
+        for pos in (0, pages.size - 1, pages.size // 2):
+            flat = pages.copy().reshape(-1)
+            flat[pos] ^= 0xA5
+            bad = flat.reshape(pages.shape)
+            assert int(PG.verify_pages(jnp.asarray(bad), sums)) == 1
+    zero = np.zeros((2, 4, 16), np.uint8)
+    zsums = PG.page_checksums(jnp.asarray(zero))
+    zero[1, 2, 3] = 7
+    assert int(PG.verify_pages(jnp.asarray(zero), zsums)) == 1
+
+
+def test_fault_mode_registry_and_apply():
+    """The fifth registry: flip_byte / drop_page are registered with
+    deterministic codes; apply_fault is gated (NULL_FAULT is identity) and
+    drop_page zeroes exactly the indexed page."""
+    assert set(fault_kinds()) == {"flip_byte", "drop_page"}
+    assert FAULT_CODES["none"] == 0
+    pages = jnp.asarray(_typed_pages(2, "f32"))
+    same = apply_fault(pages, jnp.asarray(NULL_FAULT))
+    assert bool(jnp.array_equal(same, pages))
+    drop = apply_fault(pages, jnp.asarray(
+        [FAULT_CODES["drop_page"], 1, 0], jnp.int32))
+    assert not bool(jnp.any(drop[1]))
+    assert bool(jnp.array_equal(drop[0], pages[0]))
+    flip = apply_fault(pages, jnp.asarray(
+        [FAULT_CODES["flip_byte"], 5, 0x40], jnp.int32))
+    diff = np.asarray(flip).reshape(-1) != np.asarray(pages).reshape(-1)
+    assert diff.sum() == 1 and diff[5]
+
+
+# ---------------------------------------------------------------------------
+# retry pricing: k retries == k x the leg plan, plus mechanism-free backoff
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 6), st.floats(0.0, 1e6, allow_nan=False))
+def test_retry_cost_is_additive(k, backoff):
+    base = MV.MovementCost(4096, 3, 120.0, 950.0, 0.7, 5.3)
+    rc = MV.retry_cost(base, k, backoff)
+    assert rc.ns_lisa == pytest.approx(base.ns_lisa * k + backoff)
+    assert rc.ns_memcpy == pytest.approx(base.ns_memcpy * k + backoff)
+    assert rc.uj_lisa == pytest.approx(base.uj_lisa * k)
+    assert rc.bytes == base.bytes * k
+
+
+def test_retry_cost_fixed_cases():
+    base = MV.MovementCost(1000, 1, 10.0, 50.0, 1.0, 5.0)
+    zero = MV.retry_cost(base, 0)
+    assert zero.bytes == 0 and zero.ns_lisa == 0.0
+    three = MV.retry_cost(base, 3, backoff_ns=700.0)
+    assert three.bytes == 3000 and three.ns_lisa == pytest.approx(730.0)
+    assert three.ns_memcpy == pytest.approx(850.0)
+    # backoff is latency, not movement: it never touches the energy books
+    assert three.uj_lisa == pytest.approx(3.0)
+
+
+def test_injector_is_replayable_and_counter_based():
+    """Two injectors with the same spec emit identical draw sequences
+    (counter-based RNG, no global state); a different seed diverges."""
+    spec = FaultSpec(rate=0.5, seed=CHAOS_SEED + 13)
+    a, b = FaultInjector(spec), FaultInjector(spec)
+    seq_a = [a.draw_movement(4096, 8).tolist() for _ in range(20)]
+    seq_b = [b.draw_movement(4096, 8).tolist() for _ in range(20)]
+    assert seq_a == seq_b
+    c = FaultInjector(FaultSpec(rate=0.5, seed=CHAOS_SEED + 14))
+    assert [c.draw_movement(4096, 8).tolist() for _ in range(20)] != seq_a
+    # the ledger closes every incident into exactly one bucket
+    inj = FaultInjector(spec)
+    assert inj.note_corrupt(7) and not inj.note_corrupt(7)   # merge
+    inj.note_corrupt(8)
+    inj.note_corrupt(9)
+    inj.consume_corrupt(7, "detected")
+    inj.consume_corrupt(8, "recovered")
+    inj.discard_corrupt(9)
+    s = inj.summary()
+    assert (s["new_corrupt"], s["merged"]) == (3, 1)
+    assert (s["detected"], s["recovered"], s["destroyed"]) == (1, 1, 1)
+    assert s["at_rest_corrupt"] == 0
+    assert inj.backoff_ns(1) == 500.0 and inj.backoff_ns(2) == 1000.0
+    assert inj.backoff_ns(50) == 8000.0                       # capped
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="rate"):
+        FaultSpec(rate=1.5)
+    with pytest.raises(ValueError, match="max_retries"):
+        FaultSpec(max_retries=-1)
+    with pytest.raises(ValueError, match="kinds"):
+        FaultSpec(kinds=())
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultInjector(FaultSpec(kinds=("bitrot_gamma",)))
+
+
+# ---------------------------------------------------------------------------
+# checksummed movement: corrupted migration legs retry until clean
+# ---------------------------------------------------------------------------
+
+def test_migration_retries_until_clean_and_stays_bit_exact(setup):
+    """Under a heavy movement-fault rate with recovery armed, migrations
+    re-issue corrupted hop chains from the intact source: every wave whose
+    event closes clean lands bit-exactly, retries are counted, and the
+    retry events price as k x the route plan (cost-additivity e2e)."""
+    cfg, params = setup
+    inj = FaultInjector(FaultSpec(rate=0.6, seed=CHAOS_SEED + 3,
+                                  max_retries=8))
+    cl = Cluster(cfg, params, n_replicas=2, slots=2, max_len=48,
+                 n_sessions=8, faults=inj)
+    rng = np.random.default_rng(CHAOS_SEED)
+    prompt = rng.integers(0, cfg.vocab_size, 7).astype(np.int32)
+    _drain(cl, 3, prompt, 3, replica=0)
+    src = 0
+    n_retries, n_events = 0, 0
+    for _ in range(10):
+        dst = 1 - src
+        want = np.asarray(cl.replicas[src].sessions.slow[3]).copy()
+        cl.migrate(3, dst)
+        for ev in cl.drain_fault_events():
+            n_events += 1
+            n_retries += ev["retries"]
+            assert ev["retries"] <= inj.spec.max_retries
+            if ev["corrupt_uid"] is None:
+                got = np.asarray(cl.replicas[dst].sessions.slow[3])
+                assert np.array_equal(got, want)    # clean == bit-exact
+            else:
+                assert inj.is_corrupt(ev["corrupt_uid"])
+                inj.consume_corrupt(ev["corrupt_uid"], "detected")
+        src = dst
+    s = inj.summary()
+    assert s["movement_fired"] >= 1                 # rate 0.6 over 10 waves
+    assert s["retries"] == n_retries
+    # every incident (one drained event each) closes into exactly one
+    # bucket: retried clean, landed corrupt (new), or merged into an
+    # already-open corruption.  ``fired`` also counts the re-fires of
+    # retry attempts, so it bounds the incidents from above.
+    assert n_events == s["retry_fixed"] + s["new_corrupt"] + s["merged"]
+    assert s["fired"] >= n_events
+    # retry pricing is k x the already-priced route plan plus backoff
+    base = cl.migration_plan(0, 1).cost
+    rc = MV.retry_cost(base, 2, 1500.0)
+    assert rc.ns_lisa == pytest.approx(2 * base.ns_lisa + 1500.0)
+
+
+def test_corrupt_at_rest_is_detected_on_resume(setup):
+    """An at-rest byte flip under a session's feet is caught by the
+    device-side verify at the next resume — the counter is folded into the
+    jitted resume (no extra host sync) and read back once, explicitly."""
+    cfg, params = setup
+    inj = FaultInjector(FaultSpec(rate=0.0, seed=CHAOS_SEED))
+    cl = Cluster(cfg, params, n_replicas=2, slots=2, max_len=48,
+                 n_sessions=8, faults=inj)
+    rng = np.random.default_rng(CHAOS_SEED + 1)
+    prompt = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+    _drain(cl, 2, prompt, 3, replica=0)
+    assert cl.verify_failure_count() == 0
+    eng = cl.replicas[0]
+    eng.corrupt_stored(2 % eng.n_sessions, page=0, byte=5, xor=0x11)
+    assert int(cl.scrub()) == 1                     # at rest: scrub sees it
+    cl.resume(2, extra_new=2)
+    while cl.active:
+        cl.step()
+    assert cl.verify_failure_count() == 1           # resume verify caught it
+
+
+# ---------------------------------------------------------------------------
+# snapshot-backed recovery: replica death, bit-exact resumption
+# ---------------------------------------------------------------------------
+
+def test_failed_replica_restore_decodes_bit_exact(setup):
+    """The PR 5 parity chain extended across a failure: drain on replica 0,
+    snapshot, kill replica 0, restore from the snapshot on replica 1 —
+    the remaining decode matches the uninterrupted run token-for-token and
+    passes the checksum verify (the snapshot carries the sidecar row)."""
+    cfg, params = setup
+    rng = np.random.default_rng(CHAOS_SEED + 2)
+    prompt = rng.integers(0, cfg.vocab_size, 9).astype(np.int32)
+    straight = _greedy_reference(cfg, params, prompt, 8)
+    inj = FaultInjector(FaultSpec(rate=0.0, seed=CHAOS_SEED))
+    cl = Cluster(cfg, params, n_replicas=2, slots=2, max_len=48,
+                 n_sessions=8, faults=inj)
+    req = _drain(cl, 7, prompt, 4, replica=0)
+    snaps, cost = snapshot_sessions(cl)
+    assert 7 in snaps and cost.bytes > 0            # priced, not free
+    inflight, suspended = cl.fail_replica(0)
+    assert inflight == [] and 7 in suspended
+    assert 7 not in cl.session_pos                  # state died with it
+    restore_session(cl, snaps[7], 1)
+    assert cl.residence[7] == 1
+    slot = cl.resume(7, extra_new=5)
+    r2 = cl.active[slot]
+    while cl.active:
+        cl.step()
+    assert req.generated + r2.generated[1:] == straight
+    assert cl.verify_failure_count() == 0           # restored bytes verify
+
+
+def test_snapshots_persist_and_reject_torn_files(tmp_path, setup):
+    """Snapshot sets round-trip through the checkpoint manager's atomic
+    format; a truncated arrays file is rejected as CorruptCheckpoint, never
+    restored as garbage sessions."""
+    cfg, params = setup
+    cl = Cluster(cfg, params, n_replicas=2, slots=2, max_len=48,
+                 n_sessions=8)
+    rng = np.random.default_rng(CHAOS_SEED + 4)
+    for uid in (1, 5):
+        _drain(cl, uid, rng.integers(0, cfg.vocab_size, 6).astype(np.int32),
+               3, replica=0)
+    snaps, _ = snapshot_sessions(cl)
+    save_snapshots(snaps, str(tmp_path), step=3)
+    back = load_snapshots(str(tmp_path))
+    assert sorted(back) == [1, 5]
+    for uid in (1, 5):
+        assert back[uid].pos == snaps[uid].pos
+        assert np.array_equal(back[uid].pages, snaps[uid].pages)
+        assert np.array_equal(back[uid].sums, snaps[uid].sums)
+    npz = tmp_path / "step_00000003" / "arrays.npz"
+    npz.write_bytes(npz.read_bytes()[:-40])         # torn write
+    with pytest.raises(CorruptCheckpoint):
+        load_snapshots(str(tmp_path))
+
+
+def test_scheduler_survives_replica_failure(setup):
+    """A scheduled mid-run replica death: recoverable sessions re-admit
+    from snapshots via the priced channel, the rest re-queue under their
+    original admission seq, and the run completes every offered job."""
+    cfg, params = setup
+    wl = sched.WorkloadConfig(n_fresh=4, n_followups=6)
+    arrivals = sched.generate_workload(wl, seed=5, vocab_size=cfg.vocab_size)
+    inj = FaultInjector(FaultSpec(rate=0.0, seed=CHAOS_SEED,
+                                  replica_failures=((25, 1),)))
+    cl = Cluster(cfg, params, n_replicas=2, slots=2, max_len=48,
+                 n_sessions=sched.n_sessions_for(wl), faults=inj)
+    s = sched.ClusterScheduler(cl, arrivals=arrivals, snapshot_every=8)
+    summary = s.run()
+    assert summary["jobs_completed"] == len(arrivals)
+    f = summary["faults"]["counters"]
+    assert f["replica_failures"] == 1
+    assert f.get("recovered", 0) + f.get("requeued", 0) \
+        + f.get("lost", 0) >= 1                     # the failure had teeth
+    # nothing lands on the dead replica afterwards
+    assert all(r == 0 for r in cl.residence.values())
+    # snapshot waves are priced but never charged to the critical path
+    kinds = s.metrics.decision_counts()
+    assert kinds.get("snapshot_wave", 0) >= 1
+
+
+def test_chaos_run_is_deterministic_per_seed(setup):
+    """The whole chaos pipeline replays bit-identically from (spec, seed):
+    same ledger, same device detections, same job metrics — and a
+    different chaos seed leaves the clean-run job count intact (faults
+    cost latency, never correctness)."""
+    cfg, params = setup
+    wl = sched.WorkloadConfig(n_fresh=4, n_followups=6)
+    arrivals = sched.generate_workload(wl, seed=5, vocab_size=cfg.vocab_size)
+
+    def run(seed):
+        inj = FaultInjector(FaultSpec(rate=0.4, seed=seed))
+        cl = Cluster(cfg, params, n_replicas=2, slots=2, max_len=48,
+                     n_sessions=sched.n_sessions_for(wl), faults=inj)
+        s = sched.ClusterScheduler(cl, arrivals=arrivals, snapshot_every=2)
+        summary = s.run()
+        return (inj.summary(), cl.verify_failure_count(), int(cl.scrub()),
+                summary["jobs_completed"], summary["p99_latency_ns"])
+
+    a = run(CHAOS_SEED + 21)
+    b = run(CHAOS_SEED + 21)
+    assert a == b
+    led, vf, scrub, jobs, _ = a
+    assert jobs == len(arrivals)
+    # zero-silent-corruption: device detections + at-rest scrub close every
+    # incident the ledger opened
+    assert vf == led["detected"]
+    assert scrub == led["at_rest_corrupt"]
+    assert led["new_corrupt"] == (led["detected"] + led["recovered"]
+                                  + led["destroyed"]
+                                  + led["at_rest_corrupt"])
+
+
+def test_degraded_fast_tier_reroutes_pricing(setup):
+    """degrade_fast turns the VILLA fast tier off: the engine reports no
+    fast residents, resume pricing falls back to slow-tier costs, and the
+    cluster policy sorts the degraded replica behind healthy ones."""
+    cfg, params = setup
+    inj = FaultInjector(FaultSpec(rate=0.0, seed=CHAOS_SEED,
+                                  degrade_fast=((0, 1),)))
+    cl = Cluster(cfg, params, n_replicas=2, slots=2, max_len=48,
+                 n_sessions=8, faults=inj)
+    cl.degrade_fast(1)
+    assert cl.replicas[1].fast_degraded
+    assert not cl.replicas[1].fast_resident_uids()
+    # policy: equal slots + equal price -> healthy replica wins
+    from repro.sched.policy import PlaceCand, SchedContext, get_policy
+    pol = get_policy("cost_aware_cluster")
+    cands = [PlaceCand(replica=1, free_slots=2, fast_occupancy=0.0,
+                       hop_ns=0.0, place_ns=100.0, degraded=True),
+             PlaceCand(replica=0, free_slots=2, fast_occupancy=0.0,
+                       hop_ns=0.0, place_ns=100.0, degraded=False)]
+    order = pol.place_order(cands, SchedContext(tick=0, now_ns=0.0,
+                                                mechanism="lisa"))
+    assert [c.replica for c in order] == [0, 1]
