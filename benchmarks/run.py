@@ -867,6 +867,156 @@ def bench_faults(out_path="BENCH_faults.json"):
         f"graceful={bench['graceful_degradation']}")
 
 
+def bench_fork(out_path="BENCH_fork.json"):
+    """Shared-prefix serving A/B: 64 sessions sharing one long system
+    prompt, forked (zero-copy CoW aliasing — the RowClone analogue) vs
+    admitted independently (one prefill each).  Writes ``BENCH_fork.json``.
+
+    The fork-ON arm prefills the shared prefix ONCE, forks 64 children off
+    the suspended template (pure host bookkeeping — the in-bench dispatch
+    delta pins ZERO device work), then forces a store-index collision on
+    the shared row to exercise the demotion path (a shared snapshot is
+    migrated, never destroyed).  The fork-OFF arm prefills the same prefix
+    64 times.  Both arms then decode the same per-child divergence seeds;
+    the gate demands bit-exact tokens — aliasing must be invisible to the
+    data path."""
+    from repro.analysis import testlib as TL
+    from repro.configs import get_reduced
+    from repro.models import lm as LM
+    from repro.serve.engine import Engine, Request
+
+    cfg = get_reduced("tinyllama-1.1b")
+    params = LM.init_lm(cfg, jax.random.key(0))
+    rng = np.random.default_rng(7)
+    n_children, decode_n = 64, 4
+    prefix = rng.integers(0, cfg.vocab_size, 24).astype(np.int32)
+    seeds = [int(s) for s in rng.integers(1, cfg.vocab_size, n_children)]
+    # geometry: template uid 0 homes at row 0; children uids 6..69 home at
+    # rows 6..69, leaving rows 1..5 as demotion headroom so the forced
+    # collision never cascades into the children's own write-breaks
+    template_uid, collider_uid = 0, 70
+    children = list(range(6, 6 + n_children))
+
+    def mk():
+        return Engine(cfg, params, slots=8, max_len=96, n_sessions=70)
+
+    # warm the shared jits (prefill/suspend/decode and the wave widths both
+    # arms use) so admission wall-clock measures the steady state
+    eng_w = mk()
+    eng_w.submit(Request(uid=0, prompt=prefix, max_new=1))
+    eng_w.resume_many([0], extra_new=1 + decode_n)
+    while eng_w.active:
+        eng_w.step()
+
+    def drain(eng, toks):
+        while eng.active:
+            for _, req in eng.step():
+                toks[req.uid] = [int(t) for t in req.generated]
+
+    def decode_children(eng):
+        toks = {}
+        for i in range(0, n_children, eng.slots):
+            wave = children[i:i + eng.slots]
+            eng.resume_many(wave, extra_new=1 + decode_n)
+            drain(eng, toks)
+        return toks
+
+    # ---- fork ON: prefill once, alias everywhere --------------------------
+    eng_on = mk()
+    eng_on.adopt_jits(eng_w)
+    jax.block_until_ready(eng_on.sessions.slow)
+    t0 = time.perf_counter()
+    eng_on.submit(Request(uid=template_uid, prompt=prefix, max_new=1))
+    before = TL.snapshot_stats(eng_on)
+    eng_on.fork_many(template_uid, children, seed_tokens=seeds)
+    jax.block_until_ready(eng_on.sessions.slow)
+    admit_on_s = time.perf_counter() - t0
+    # the fork fast path is PURE host bookkeeping: zero fused dispatches,
+    # zero device->host transfers over the fork_many window
+    TL.assert_dispatch_delta(before, eng_on.stats, decode=0, host=0)
+    fork_zero_dispatch = (
+        eng_on.stats["decode_dispatches"] == before["decode_dispatches"]
+        and eng_on.stats["host_transfers"] == before["host_transfers"])
+    # collide with the SHARED row while all 64 aliases still read it: the
+    # fork-aware store demotes (clones + repoints) instead of destroying
+    eng_on.submit(Request(uid=collider_uid, prompt=prefix, max_new=1))
+    assert eng_on.stats["demotions"] == 1, eng_on.stats
+    toks_on = decode_children(eng_on)
+    stats_on = dict(eng_on.stats)
+    verify_failed_on = eng_on.verify_failure_count()
+
+    # ---- fork OFF: 64 independent admissions ------------------------------
+    eng_off = mk()
+    eng_off.adopt_jits(eng_w)
+    jax.block_until_ready(eng_off.sessions.slow)
+    t0 = time.perf_counter()
+    for uid, seed in zip(children, seeds):
+        eng_off.submit(Request(uid=uid, prompt=prefix, max_new=1))
+        eng_off.reseed(uid, seed)
+    jax.block_until_ready(eng_off.sessions.slow)
+    admit_off_s = time.perf_counter() - t0
+    eng_off.submit(Request(uid=collider_uid, prompt=prefix, max_new=1))
+    toks_off = decode_children(eng_off)
+    stats_off = dict(eng_off.stats)
+
+    tokens_match = toks_on == toks_off and len(toks_on) == n_children
+    fp = eng_on.plan_fork.cost
+    modeled_ratio = fp.ns_memcpy / fp.ns_lisa
+    bench = {
+        "n_children": n_children,
+        "prefix_len": len(prefix),
+        "decode_per_child": decode_n,
+        "fork_on": {
+            "shared_prefix_prefills": 1,     # the template's, ever
+            "prefills": stats_on["prefills"],
+            "forks": stats_on["forks"],
+            "bytes_not_copied": stats_on["bytes_not_copied"],
+            "demotions": stats_on["demotions"],
+            "evictions": stats_on["evictions"],
+            "verify_failed": verify_failed_on,
+            "admission_s": round(admit_on_s, 6),
+        },
+        "fork_off": {
+            "shared_prefix_prefills": n_children,
+            "prefills": stats_off["prefills"],
+            "forks": stats_off["forks"],
+            "bytes_not_copied": stats_off["bytes_not_copied"],
+            "admission_s": round(admit_off_s, 6),
+        },
+        # modeled per-session admission: the fork-kind plan prices the alias
+        # as RowClone FPM (ns_lisa) vs the full-snapshot copy it avoids
+        # (ns_memcpy) — the Table-1 gap at serving granularity
+        "modeled_admission_ratio": round(modeled_ratio, 2),
+        "modeled_fork_ns_lisa": fp.ns_lisa,
+        "modeled_fork_ns_memcpy": fp.ns_memcpy,
+        "bytes_not_copied": stats_on["bytes_not_copied"],
+        "snapshot_bytes": eng_on.snapshot_bytes,
+        "fork_zero_dispatch": bool(fork_zero_dispatch),
+        "tokens_match": bool(tokens_match),
+        "admission_speedup_wallclock": round(
+            admit_off_s / max(admit_on_s, 1e-9), 2),   # recorded, not gated
+        "config": {"arch": "tinyllama-1.1b-reduced", "slots": 8,
+                   "max_len": 96, "n_sessions": 70,
+                   "template_uid": template_uid,
+                   "collider_uid": collider_uid,
+                   "child_uids": [children[0], children[-1]],
+                   "seed": 7},
+    }
+    with open(out_path, "w") as f:
+        json.dump(bench, f, indent=2, allow_nan=False)
+    row("fork_admission", admit_on_s * 1e6 / n_children,
+        f"prefills_on={stats_on['prefills']};"
+        f"prefills_off={stats_off['prefills']};"
+        f"wallclock_speedup={bench['admission_speedup_wallclock']}x")
+    row("fork_modeled_ratio", 0.0,
+        f"rowclone_vs_memcpy={bench['modeled_admission_ratio']}x;"
+        f"bytes_not_copied={bench['bytes_not_copied']}")
+    row("fork_cow_divergence", 0.0,
+        f"tokens_match={tokens_match};demotions={stats_on['demotions']};"
+        f"evictions={stats_on['evictions']};"
+        f"zero_dispatch={fork_zero_dispatch}")
+
+
 # ---------------------------------------------------------------------------
 # --check: validate committed BENCH_*.json against their deterministic gates
 # ---------------------------------------------------------------------------
@@ -956,6 +1106,40 @@ def _check_faults(b, errs):
                     "snapshot restore")
 
 
+def _check_fork(b, errs):
+    n = b["n_children"]
+    if b["fork_on"]["shared_prefix_prefills"] != 1:
+        errs.append("fork: fork-on arm prefilled the shared prefix more "
+                    "than once (amortization gate)")
+    if b["fork_off"]["shared_prefix_prefills"] < 64 or n < 64:
+        errs.append(f"fork: A/B must span >= 64 shared-prefix sessions "
+                    f"(got {n})")
+    if b["fork_on"]["forks"] != n:
+        errs.append(f"fork: {b['fork_on']['forks']} forks for {n} children")
+    if not b["modeled_admission_ratio"] >= 10:
+        errs.append(f"fork: modeled admission ratio "
+                    f"{b['modeled_admission_ratio']}x < 10x (RowClone FPM "
+                    f"pricing gate)")
+    if not b["bytes_not_copied"] > 0:
+        errs.append("fork: no bytes credited to the zero-copy path")
+    if not b["fork_zero_dispatch"]:
+        errs.append("fork: fork_many issued device work (zero-dispatch "
+                    "fast-path gate)")
+    if not b["tokens_match"]:
+        errs.append("fork: forked children diverged from independent "
+                    "sessions (bit-exactness gate)")
+    if b["fork_on"]["demotions"] != 1:
+        errs.append(f"fork: shared-row collision recorded "
+                    f"{b['fork_on']['demotions']} demotions, expected 1")
+    if b["fork_on"]["evictions"] != 0:
+        errs.append(f"fork: {b['fork_on']['evictions']} evictions — a "
+                    f"shared snapshot was destroyed, not migrated")
+    if b["fork_on"]["verify_failed"] != 0:
+        errs.append(f"fork: {b['fork_on']['verify_failed']} checksum "
+                    f"failures after demotion (sidecar must travel with "
+                    f"the clone)")
+
+
 def _check_lint(b, errs):
     """The committed repro-lint report: clean, waiver-free, and covering
     every registered jitted entry point (regenerate with
@@ -997,6 +1181,7 @@ BENCH_SCHEMAS = {
     "BENCH_sched.json": _check_sched,
     "BENCH_cluster.json": _check_cluster,
     "BENCH_faults.json": _check_faults,
+    "BENCH_fork.json": _check_fork,
     "LINT_REPORT.json": _check_lint,
 }
 
@@ -1068,6 +1253,7 @@ BENCHES = {
     "sched": bench_sched,
     "cluster": bench_cluster,
     "faults": bench_faults,
+    "fork": bench_fork,
     "roofline": bench_roofline_summary,
 }
 

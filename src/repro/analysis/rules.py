@@ -30,6 +30,10 @@ Each rule guards one paper invariant (DESIGN.md Sec. 11 has the mapping):
   checksum-verified unpack leg; a raw ``unpack_into_slot`` call outside the
   movement substrate that never consults the sidecar is a silent-corruption
   hole (chaos runs gate on zero of these).
+* ``unrefcounted-alias`` — serving code that drives the snapshot scatter
+  (``_suspend`` / ``_suspend_many``) must consult the fork table's refcount
+  API in the same function: a bare scatter into a row that forked sessions
+  may alias overwrites every alias's bytes without a copy-on-write detach.
 """
 from __future__ import annotations
 
@@ -432,4 +436,74 @@ class UncheckedUnpackRule(LintRule):
                     "unpack_into_slot() without a checksum verify in the "
                     "same function; route through the movement unpack leg "
                     "(which verifies the sidecar) or call verify_pages()"))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# rule 7: snapshot scatters respect the fork table's refcounts
+# ---------------------------------------------------------------------------
+
+@register_rule
+class UnrefcountedAliasRule(LintRule):
+    """Forked sessions alias ONE physical store row (``repro.fork``); the
+    row is written by the ``_suspend`` / ``_suspend_many`` scatter
+    dispatches.  A serving function that drives that scatter — calling
+    the dispatch directly or handing it to a wrapper like ``_quiet`` —
+    without touching the fork table's refcount API (``write_break`` /
+    ``bind`` / ``fork_child`` / ``release``) in the same function would
+    overwrite a possibly-shared row with one writer's bytes and silently
+    corrupt every other alias: the copy-on-write detach MUST gate the
+    scatter.  (Benchmarks drive ``eng._suspend`` raw for A/B timing — the
+    scope is the serving and fork packages, where the alias ledger is
+    live.)"""
+
+    id = "unrefcounted-alias"
+    doc = ("_suspend/_suspend_many scatter in serving code with no fork-"
+           "table refcount call (write_break/bind/fork_child/release) in "
+           "the same function")
+
+    SCOPE_PREFIXES = ("src/repro/serve/", "src/repro/fork/")
+    MUTATORS = frozenset({"_suspend", "_suspend_many"})
+    VERIFIERS = frozenset({"write_break", "bind", "fork_child", "release"})
+
+    def applies_to(self, relpath: str) -> bool:
+        return any(relpath.startswith(p) for p in self.SCOPE_PREFIXES)
+
+    def check(self, tree, relpath, source):
+        rule = self
+        findings: List[Finding] = []
+
+        class V(_FuncStackVisitor):
+            def __init__(self):
+                super().__init__()
+                self.scatters: List[Tuple[Tuple[str, ...], ast.Call]] = []
+                self.verified: Set[Tuple[str, ...]] = set()
+
+            def visit_Call(self, node):
+                key = tuple(self.stack)
+                name = dotted_name(node.func)
+                leaf = name.split(".")[-1] if name else ""
+                if leaf in rule.MUTATORS:
+                    self.scatters.append((key, node))
+                else:
+                    # the dispatch handed to a wrapper: _quiet(self._suspend,
+                    # ...) drives the same scatter
+                    for a in node.args:
+                        an = dotted_name(a)
+                        if an and an.split(".")[-1] in rule.MUTATORS:
+                            self.scatters.append((key, node))
+                            break
+                if leaf in rule.VERIFIERS:
+                    self.verified.add(key)
+                self.generic_visit(node)
+
+        v = V()
+        v.visit(tree)
+        for key, node in v.scatters:
+            if key not in v.verified:
+                findings.append(rule.finding(
+                    relpath, node,
+                    "snapshot scatter without a fork-table refcount call in "
+                    "the same function; a forked alias may share this row — "
+                    "CoW-detach via write_break() before writing"))
         return findings

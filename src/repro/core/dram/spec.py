@@ -376,6 +376,22 @@ register_mechanism(CopyMechanism(
     e_per_hop=lambda s: s.energy.e_rbm_hop,
     description="LISA-RISC: RBM hop chain between subarrays (Sec. 3.1)"))
 
+# The fork subsystem's pricing anchor (repro/fork, PAPERS.md arXiv
+# 1805.03502): an in-subarray page alias costs one RowClone FPM
+# (ACT->ACT->PRE, 83.75 ns / 0.06 uJ at hops=1 — identical to rc_intrasa),
+# and a cross-subarray materialization grows per hop like a LISA chain
+# (same hop-linear rewrite as lisa: base' = base - per_hop, cost(h) =
+# base' + per_hop * h).  NOT a Table-1 row: table1() is the paper's fixed
+# set; this mechanism exists so plan() can price `fork` transfers.
+register_mechanism(CopyMechanism(
+    name="rowclone", mech_id=5, occupies_channel=False, hop_dependent=True,
+    lat_base=lambda s: _lat_rc_intrasa(s) - s.lisa.t_rbm_hop,
+    lat_per_hop=lambda s: s.lisa.t_rbm_hop,
+    e_base=lambda s: 2 * s.energy.e_act_pre - s.energy.e_rbm_hop,
+    e_per_hop=lambda s: s.energy.e_rbm_hop,
+    description="RowClone page alias: FPM in-subarray, LISA-hop "
+                "materialization across (fork/CoW pricing)"))
+
 
 # ---------------------------------------------------------------------------
 # Preset registry.

@@ -167,6 +167,29 @@ def write_many(store: TieredStore, item_ids: jax.Array, data: jax.Array
     return store
 
 
+def clone_item(store: TieredStore, src_id: jax.Array,
+               dst_id: jax.Array) -> TieredStore:
+    """Device-side slow-row clone ``src_id -> dst_id`` (a shared-row
+    demotion: the fork table is about to repoint aliases onto ``dst_id``
+    and hand ``src_id`` to a new exclusive owner).
+
+    Copies through the same priced page gather/scatter plans as any other
+    pool movement, and invalidates any fast-tier residency of the
+    DESTINATION row on-device (``jnp.where`` over the tags — no host
+    sync): the fast slot, if any, still tags the SOURCE id, which keeps
+    serving the aliases until their next access re-resolves.
+    """
+    src_id = jnp.asarray(src_id, jnp.int32)
+    dst_id = jnp.asarray(dst_id, jnp.int32)
+    data = _read_item(store.slow, src_id, tier="slow")
+    slow = _write_item(store.slow, dst_id, data, tier="slow")
+    tags = jnp.where(store.policy.tags == dst_id,
+                     jnp.full_like(store.policy.tags, -1),
+                     store.policy.tags)
+    return store._replace(slow=slow,
+                          policy=store.policy._replace(tags=tags))
+
+
 def hit_rate(store: TieredStore) -> jax.Array:
     return jnp.where(store.accesses > 0,
                      store.hits / jnp.maximum(store.accesses, 1), 0.0)

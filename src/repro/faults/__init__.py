@@ -30,6 +30,7 @@ from repro.faults.inject import (
 from repro.faults.recover import (
     SessionSnapshot,
     load_snapshots,
+    repair_row,
     restore_session,
     save_snapshots,
     snapshot_sessions,
@@ -41,5 +42,6 @@ __all__ = [
     "register_fault", "get_fault", "fault_kinds", "apply_fault",
     "install_fault_backends", "uninstall_fault_backends",
     "SessionSnapshot", "snapshot_sessions", "restore_session",
+    "repair_row",
     "save_snapshots", "load_snapshots",
 ]

@@ -34,12 +34,20 @@ class SessionSnapshot(NamedTuple):
     """One suspended session, host-resident: enough to re-admit it
     anywhere (pages are dtype-preserving uint8; ``sums`` is the checksum
     sidecar row computed at suspend time, so a restored session is
-    verify-clean by construction)."""
+    verify-clean by construction).
+
+    A FORKED family snapshots its shared physical row ONCE: the
+    lowest-uid alias carries the pages, every other alias is a meta-only
+    entry with ``alias_of`` naming the carrier and ``pages``/``sums``
+    None.  Restore re-attaches aliases to the carrier's restored row by
+    bookkeeping alone — one staged copy, one repair, the whole family
+    healed."""
     uid: int
     pos: int
     tok: int
-    pages: np.ndarray       # (n_pages, P, d) uint8
-    sums: np.ndarray        # (n_pages,) uint32
+    pages: Optional[np.ndarray]       # (n_pages, P, d) uint8; None for alias
+    sums: Optional[np.ndarray]        # (n_pages,) uint32; None for alias
+    alias_of: Optional[int] = None    # carrier uid when this is an alias
 
 
 def _zero_cost() -> MV.MovementCost:
@@ -76,21 +84,37 @@ def snapshot_sessions(cluster) -> Tuple[Dict[int, "SessionSnapshot"],
         uids = sorted(u for u in eng.session_pos if u not in active)
         if not uids:
             continue
-        idxs = jnp.asarray([u % eng.n_sessions for u in uids], jnp.int32)
+        # fork-aware: stage each PHYSICAL row once.  The lowest-uid alias
+        # of a shared row is its carrier; the rest become meta-only alias
+        # entries — a 64-way fork family costs ONE row of snapshot traffic,
+        # not 64.
+        phys_of = {u: (eng.forks.resolve(u) if u in eng.forks
+                       else u % eng.n_sessions) for u in uids}
+        carrier_of: Dict[int, int] = {}
+        for u in uids:                       # sorted: lowest uid carries
+            carrier_of.setdefault(phys_of[u], u)
+        carriers = sorted(carrier_of.values())
+        idxs = jnp.asarray([phys_of[u] for u in carriers], jnp.int32)
         leaves = [eng.sessions.slow[idxs], eng.session_sums[idxs]]
         p = MV.plan(MV.Transfer(MV.Tier("device"), MV.Tier("host"),
                                 MV.Layout.tree(leaves)))
         pages, sums = MV.execute(p, data=leaves)["data"]
         total = _add(total, p.cost)
-        for j, uid in enumerate(uids):
+        for j, uid in enumerate(carriers):
             snaps[uid] = SessionSnapshot(uid, eng.session_pos[uid],
                                          eng.session_tok[uid],
                                          pages[j], sums[j])
+        for uid in uids:
+            if uid in snaps:
+                continue
+            snaps[uid] = SessionSnapshot(
+                uid, eng.session_pos[uid], eng.session_tok[uid],
+                None, None, alias_of=carrier_of[phys_of[uid]])
     return snaps, total
 
 
 def restore_session(cluster, snap: SessionSnapshot,
-                    replica: int) -> MV.MovementCost:
+                    replica: int) -> Optional[MV.MovementCost]:
     """Re-admit one snapshot onto ``replica`` via the priced channel.
 
     Stages pages + sidecar host→device, registers the session
@@ -98,8 +122,26 @@ def restore_session(cluster, snap: SessionSnapshot,
     overwrites the slow-pool row, and invalidates any stale fast-tier
     residency so the next resume reads the restored bytes.  Returns the
     staging cost (the scheduler charges it to the virtual clock as a
-    ``recover_wave`` — recovery IS on the critical path)."""
+    ``recover_wave`` — recovery IS on the critical path).
+
+    An ALIAS snapshot (``alias_of`` set) restores for free: its carrier
+    already staged the shared row, so the alias re-attaches to the
+    carrier's restored row by fork-table bookkeeping alone.  The carrier
+    must be restored on ``replica`` FIRST (the scheduler orders owners
+    before aliases); returns None if it is not — the caller writes the
+    alias off as lost."""
     eng = cluster.replicas[replica]
+    if snap.alias_of is not None:
+        if (snap.alias_of not in eng.session_pos
+                or snap.alias_of not in eng.forks):
+            return None
+        home = cluster.residence.get(snap.uid)
+        if (home is not None
+                and snap.uid in cluster.replicas[home].session_pos):
+            cluster.replicas[home].drop_session(snap.uid)
+        eng.adopt_alias(snap.uid, snap.pos, snap.tok, snap.alias_of)
+        cluster.residence[snap.uid] = replica
+        return _zero_cost()
     leaves = [np.asarray(snap.pages), np.asarray(snap.sums)]
     p = MV.plan(MV.Transfer(MV.Tier("host"), MV.Tier("device"),
                             MV.Layout.tree(leaves)))
@@ -116,6 +158,36 @@ def restore_session(cluster, snap: SessionSnapshot,
     return p.cost
 
 
+def repair_row(cluster, snap: SessionSnapshot,
+               replica: int) -> Optional[MV.MovementCost]:
+    """Heal the PHYSICAL row behind a (possibly shared) snapshot in place.
+
+    Stages the carrier's pages + sidecar host→device and overwrites the row
+    ``snap.uid`` currently resolves to — fork table, refcounts and every
+    alias's host metadata untouched.  This is the pre-resume repair for a
+    corrupt SHARED row: a shared row's bytes are immutable while shared
+    (divergence write-breaks onto a fresh row first), so the carrier's
+    snapshot matches the row by construction and one staged copy heals the
+    whole family — :func:`restore_session` would instead re-admit the
+    carrier, demoting the still-corrupt row to the siblings.  Returns the
+    staging cost, or None when ``snap`` carries no pages or its uid no
+    longer owns a row on ``replica``."""
+    eng = cluster.replicas[replica]
+    if snap.pages is None or snap.uid not in eng.session_pos:
+        return None
+    idx = (eng.forks.resolve(snap.uid) if snap.uid in eng.forks
+           else snap.uid % eng.n_sessions)
+    leaves = [np.asarray(snap.pages), np.asarray(snap.sums)]
+    p = MV.plan(MV.Transfer(MV.Tier("host"), MV.Tier("device"),
+                            MV.Layout.tree(leaves)))
+    pages_dev, sums_dev = MV.execute(p, data=leaves)["data"]
+    eng.sessions = eng.sessions._replace(
+        slow=eng.sessions.slow.at[idx].set(pages_dev))
+    eng.session_sums = eng.session_sums.at[idx].set(sums_dev)
+    cluster._invalidate_fast(eng, [idx])
+    return p.cost
+
+
 # ---------------------------------------------------------------------------
 # disk persistence (the checkpoint manager's atomic format + crc trailer)
 # ---------------------------------------------------------------------------
@@ -125,9 +197,16 @@ def save_snapshots(snaps: Dict[int, SessionSnapshot], ckpt_dir: str,
     """Persist a snapshot set through :func:`repro.checkpoint.manager.save`
     (atomic rename + crc trailer): a crash mid-save can never produce a
     restorable-but-torn snapshot directory."""
-    tree = {f"u{s.uid}": {"pages": s.pages, "sums": s.sums,
-                          "meta": np.array([s.pos, s.tok], np.int64)}
-            for s in snaps.values()}
+    tree = {}
+    for s in snaps.values():
+        alias = -1 if s.alias_of is None else s.alias_of
+        entry = {"meta": np.array([s.pos, s.tok, alias], np.int64)}
+        if s.pages is not None:
+            # alias entries persist meta-only: the carrier's row is the
+            # one copy of the shared bytes on disk, exactly as in memory
+            entry["pages"] = s.pages
+            entry["sums"] = s.sums
+        tree[f"u{s.uid}"] = entry
     return CM.save(tree, ckpt_dir, step, keep_last=keep_last)
 
 
@@ -145,7 +224,14 @@ def load_snapshots(ckpt_dir: str,
     out: Dict[int, SessionSnapshot] = {}
     uids = sorted({int(k.split("/")[0][1:]) for k in data.files})
     for uid in uids:
-        pos, tok = (int(x) for x in data[f"u{uid}/meta"])
-        out[uid] = SessionSnapshot(uid, pos, tok, data[f"u{uid}/pages"],
-                                   data[f"u{uid}/sums"])
+        meta = [int(x) for x in data[f"u{uid}/meta"]]
+        # length-2 metas predate fork-aware snapshots — accept them
+        pos, tok = meta[0], meta[1]
+        alias = meta[2] if len(meta) > 2 else -1
+        has_pages = f"u{uid}/pages" in data.files
+        out[uid] = SessionSnapshot(
+            uid, pos, tok,
+            data[f"u{uid}/pages"] if has_pages else None,
+            data[f"u{uid}/sums"] if has_pages else None,
+            alias_of=None if alias < 0 else alias)
     return out

@@ -1,0 +1,9 @@
+"""Zero-copy session forking: refcounted CoW page aliasing (RowClone).
+
+See :mod:`repro.fork.table` for the ledger and DESIGN.md Sec. 13 for the
+paper mapping (alias = RowClone FPM, materialize = PSM via LISA hops,
+CoW trigger = first post-fork activate).
+"""
+from repro.fork.table import ForkPageTable
+
+__all__ = ["ForkPageTable"]

@@ -31,12 +31,13 @@ import json
 import time
 
 import jax
+import numpy as np
 
 from repro import sched
 from repro.configs import get_config, get_reduced
 from repro.models import lm
 from repro.serve.cluster import Cluster
-from repro.serve.engine import Engine
+from repro.serve.engine import Engine, Request
 
 QUICKSTART = """examples:
   %(prog)s --arch tinyllama-1.1b --reduced --requests 12 --followups 24
@@ -60,7 +61,17 @@ turns the run into a detection-only audit.  --fault-seed picks the chaos
 RNG stream; the same (rate, seed) replays the same faults bit-for-bit:
 
   %(prog)s --arch tinyllama-1.1b --reduced --replicas 2 --slots 2 \
---fault-rate 0.25 --fault-seed 7"""
+--fault-rate 0.25 --fault-seed 7
+
+Shared-prefix forking (DESIGN.md Sec. 13): --fork-prefix N prefills one
+N-token system prompt ONCE, then admits every fresh session as a zero-copy
+FORK of that template (refcounted page alias, RowClone FPM pricing); each
+session diverges at its first decode and copies-on-write at its first
+suspend.  --no-fork is the A/B arm: the same shared prefix is prepended to
+every prompt and prefilled per session.  The prefix must leave room for
+the decode budget: --fork-prefix + --max-new <= --max-len.
+
+  %(prog)s --arch tinyllama-1.1b --reduced --requests 12 --fork-prefix 24"""
 
 
 def main(argv=None) -> dict:
@@ -104,6 +115,15 @@ def main(argv=None) -> dict:
     p.add_argument("--snapshot-every", type=int, default=4,
                    help="ticks between session-snapshot refreshes backing "
                         "chaos recovery (0 disables snapshots)")
+    p.add_argument("--fork-prefix", type=int, default=None, metavar="N",
+                   help="serve every fresh session as a zero-copy fork of "
+                        "ONE N-token shared system prompt (prefilled once; "
+                        "children alias its snapshot and copy-on-write at "
+                        "divergence)")
+    p.add_argument("--no-fork", action="store_true",
+                   help="A/B arm for --fork-prefix: prepend the same shared "
+                        "prefix to every prompt and prefill it per session "
+                        "(no aliasing)")
     args = p.parse_args(argv)
 
     wl_prompt_lens = (6, 8, 10, 12)
@@ -128,6 +148,25 @@ def main(argv=None) -> dict:
             and args.fault_rate == 0:
         p.error("--no-recovery / --fault-seed are chaos flags: set "
                 "--fault-rate > 0 to enable injection first")
+    if args.no_fork and args.fork_prefix is None:
+        p.error("--no-fork is the A/B arm of --fork-prefix: set "
+                "--fork-prefix N to define the shared prefix first")
+    if args.fork_prefix is not None:
+        if args.fork_prefix < 1:
+            p.error(f"--fork-prefix must be >= 1 (got {args.fork_prefix})")
+        # the envelope: a forked child resumes at position N and must fit
+        # its whole decode budget before max_len (the engine refuses
+        # out-of-envelope resumes — fail fast at the CLI instead)
+        if args.fork_prefix + args.max_new > args.max_len:
+            p.error(f"--fork-prefix {args.fork_prefix} + --max-new "
+                    f"{args.max_new} exceeds --max-len {args.max_len}: the "
+                    f"shared prefix must leave room for the decode budget")
+        if args.no_fork and (args.fork_prefix + max(wl_prompt_lens)
+                             + args.max_new > args.max_len):
+            p.error(f"--no-fork prefills the prefix plus each prompt (up "
+                    f"to {max(wl_prompt_lens)} tokens): --max-len "
+                    f"{args.max_len} is too small for --fork-prefix "
+                    f"{args.fork_prefix} + --max-new {args.max_new}")
     policy = args.policy or ("cost_aware_cluster" if args.replicas > 1
                              else "cost_aware")
 
@@ -146,6 +185,25 @@ def main(argv=None) -> dict:
     # QUEUE's problem (a burst beyond the slot count waits, it never raises
     # EngineFull), store pressure would be silent eviction, so size it out
     n_sessions = sched.n_sessions_for(wl)
+    fork_template_uid, fork_seeds, prefix = None, {}, None
+    if args.fork_prefix is not None:
+        frng = np.random.default_rng(args.seed + 1)
+        prefix = frng.integers(0, cfg.vocab_size,
+                               args.fork_prefix).astype(np.int32)
+        if args.no_fork:
+            # A/B arm: the same shared prefix, prefilled per session
+            arrivals = [a._replace(prompt=np.concatenate([prefix, a.prompt]))
+                        if a.kind == "fresh" else a for a in arrivals]
+        else:
+            # template homes at row n_sessions (no workload uid maps there);
+            # each fresh arrival becomes a RESUME of its forked child, which
+            # diverges at the first token of its original prompt
+            fork_template_uid = n_sessions
+            n_sessions += 1
+            fork_seeds = {a.uid: int(a.prompt[0]) for a in arrivals
+                          if a.kind == "fresh"}
+            arrivals = [a._replace(kind="resume", prompt=None)
+                        if a.kind == "fresh" else a for a in arrivals]
     injector = None
     if args.fault_rate > 0:
         from repro.faults import FaultInjector, FaultSpec
@@ -169,6 +227,23 @@ def main(argv=None) -> dict:
         s = sched.Scheduler(engine, policy=policy, arrivals=arrivals)
         eng = engine
 
+    if fork_template_uid is not None:
+        # prefill the shared prefix ONCE (max_new=1 auto-suspends at the
+        # prefill token) and alias every workload session off its snapshot
+        # — zero device dispatches for the whole fan-out
+        uids = sorted(fork_seeds)
+        if args.replicas > 1:
+            cluster.submit(Request(uid=fork_template_uid, prompt=prefix,
+                                   max_new=1), replica=0)
+            for uid in uids:
+                cluster.fork(fork_template_uid, uid,
+                             seed_token=fork_seeds[uid])
+        else:
+            engine.submit(Request(uid=fork_template_uid, prompt=prefix,
+                                  max_new=1))
+            engine.fork_many(fork_template_uid, uids,
+                             seed_tokens=[fork_seeds[u] for u in uids])
+
     t0 = time.time()
     summary = s.run()
     dt = time.time() - t0
@@ -187,6 +262,16 @@ def main(argv=None) -> dict:
                               1),
         "seconds": round(dt, 1),
     }
+    if args.fork_prefix is not None:
+        out["fork"] = {
+            "enabled": not args.no_fork,
+            "prefix_len": args.fork_prefix,
+            "prefills": eng_stats["prefills"],
+            "forks": eng_stats["forks"],
+            "bytes_not_copied": eng_stats["bytes_not_copied"],
+            "demotions": eng_stats["demotions"],
+            "evictions": eng_stats["evictions"],
+        }
     if args.replicas > 1:
         out["migrations"] = eng_stats["migrations"]
         out["migrated_bytes"] = eng_stats["migrated_bytes"]

@@ -29,6 +29,7 @@ from repro.movement.plan import (
     MovementCost,
     MovementPlan,
     PackLeg,
+    PageAliasLeg,
     PageGatherLeg,
     PageScatterLeg,
     TierReadLeg,
@@ -58,7 +59,8 @@ __all__ = [
     "PageSpec", "pack_slot", "unpack_into_slot",
     "page_checksums", "verify_pages",
     "Tier", "Layout", "Transfer", "Leg", "MovementCost", "MovementPlan",
-    "PackLeg", "UnpackLeg", "PageGatherLeg", "PageScatterLeg",
+    "PackLeg", "UnpackLeg", "PageAliasLeg", "PageGatherLeg",
+    "PageScatterLeg",
     "TierReadLeg", "TierWriteLeg", "TileCopyLeg", "HopChainLeg",
     "HostStageLeg", "plan", "ring_plan", "fuse", "retry_cost",
     "Env", "register_backend", "get_backend", "backend_kinds", "execute",

@@ -120,6 +120,17 @@ def _hop_chain(leg: HopChainLeg, env: Env) -> Env:
     return env
 
 
+@register_backend("page_alias")
+def _page_alias(leg: Leg, env: Env) -> Env:
+    # Zero-copy fork fast path (repro/fork): the physical bytes stay where
+    # they are — the ForkPageTable repointed the child's logical row on the
+    # host BEFORE this plan executed.  The leg exists so the alias is a
+    # first-class priced movement (RowClone FPM on the lisa arm, the
+    # avoided per-session copy on the memcpy arm); executing it dispatches
+    # NOTHING (pinned by repro.analysis.testlib in tests/test_fork.py).
+    return env
+
+
 @register_backend("host_stage")
 def _host_stage(leg: Leg, env: Env) -> Env:
     env = dict(env)

@@ -111,6 +111,19 @@ def verify_pages(pages: jax.Array, sums: jax.Array) -> jax.Array:
     return jnp.sum((page_checksums(pages) != sums).astype(jnp.int32))
 
 
+def row_page_table(spec: PageSpec, row) -> jax.Array:
+    """The flat-pool page table addressing one store row's pages.
+
+    Pool rows are ``spec.n_pages`` consecutive pages once the pool is
+    reshaped flat, so row ``r`` (a traced index is fine) is pages
+    ``r * n_pages + [0, n_pages)``.  Fork-aware callers pass the PHYSICAL
+    row a :class:`repro.fork.ForkPageTable` resolved, so every alias of a
+    shared row gathers the same bytes.
+    """
+    return jnp.asarray(row, jnp.int32) * spec.n_pages + jnp.arange(
+        spec.n_pages, dtype=jnp.int32)
+
+
 def unpack_into_slot(spec: PageSpec, cache, slot, pages: jax.Array):
     """Restore pages into cache[:, slot]; inverse of :func:`pack_slot`."""
     flat = pages.reshape(-1)

@@ -134,12 +134,19 @@ class Transfer:
     page movement.  ``preserve_dtype`` documents the staging contract: paged
     lowering bitcasts to uint8 pages and restores bit-exactly (the only
     supported mode for paged layouts — no silent upcasts on any path).
+
+    ``kind`` defaults to a data-moving transfer; ``kind="fork"`` requests
+    the CoW alias lowering instead (repro/fork): same-replica forks lower
+    to one ``page_alias`` leg — host bookkeeping priced as a RowClone FPM,
+    with the payload recorded as bytes NOT copied — and cross-replica
+    forks materialize over the priced migration route.
     """
     src: Tier
     dst: Tier
     layout: Layout
     policy: Optional[VillaConfig] = None
     preserve_dtype: bool = True
+    kind: str = "move"
 
 
 # ---------------------------------------------------------------------------
@@ -234,6 +241,16 @@ class HostStageLeg(Leg):
     to_host: bool = True
 
 
+@dataclasses.dataclass(frozen=True)
+class PageAliasLeg(Leg):
+    """A zero-copy page alias (fork fast path): the backend is the host
+    identity — the ForkPageTable repoints the logical row, no bytes move.
+    Priced as a RowClone FPM (``rowclone`` at ``max(hops, 1)``) against the
+    memcpy a real per-session copy would have cost; ``nbytes * batch`` is
+    the bytes-NOT-copied credit."""
+    kind: str = "page_alias"
+
+
 # ---------------------------------------------------------------------------
 # Cost model.
 # ---------------------------------------------------------------------------
@@ -284,6 +301,17 @@ _CHANNEL_LEGS = ("host_stage",)                  # channel is the only path
 
 
 def _price_leg(leg: Leg, spec: DramSpec) -> MovementCost:
+    if isinstance(leg, PageAliasLeg):
+        # Fork fast path: no bytes cross any channel — the lisa arm prices
+        # the in-DRAM RowClone alias, the memcpy arm prices the per-session
+        # copy the alias avoided.  bytes records what was NOT copied.
+        rows = leg.batch * max(1, math.ceil(leg.nbytes / spec.row_bytes))
+        h = max(leg.hops, 1)
+        return MovementCost(leg.batch * leg.nbytes, leg.hops,
+                            rows * spec.copy_latency("rowclone", h),
+                            rows * spec.copy_latency("memcpy"),
+                            rows * spec.copy_energy("rowclone", h),
+                            rows * spec.copy_energy("memcpy"))
     if leg.kind in _FREE_LEGS or leg.nbytes == 0:
         return MovementCost(0, leg.hops, 0.0, 0.0, 0.0, 0.0)
     if isinstance(leg, HopChainLeg):
@@ -349,6 +377,43 @@ def plan(transfer: Transfer, spec: DramSpec = DDR3_1600, *,
     pair = (src.kind, dst.kind)
     n, b = lay.nbytes, lay.batch
     legs: Tuple[Leg, ...]
+
+    if transfer.kind == "fork":
+        # Session fork (repro/fork).  Same replica: ONE page_alias leg —
+        # the ForkPageTable repoints the child onto the parent's physical
+        # row, zero device dispatches, priced as a RowClone FPM with the
+        # per-session copy it avoided on the memcpy arm.  Cross-replica:
+        # the alias cannot span slow pools, so the fork MATERIALIZES over
+        # the same priced migration route a session move takes.
+        if pair != ("slow", "slow"):
+            raise ValueError(f"fork transfers alias slow-tier pages "
+                             f"(slow->slow); got {pair[0]}->{pair[1]}")
+        if transfer.policy is not None:
+            raise ValueError("fork transfers are not policy-mediated "
+                             "(aliasing never touches the fast tier)")
+        if src.index is None or dst.index is None \
+                or src.index == dst.index:
+            legs = (PageAliasLeg(nbytes=n, batch=b, hops=0),)
+        else:
+            if src.axis is None or src.axis != dst.axis:
+                raise ValueError(
+                    "cross-replica forks need matching mesh axis names "
+                    f"(got {src.axis!r} -> {dst.axis!r})")
+            if topo is None:
+                raise ValueError(
+                    "cross-replica forks materialize over the migration "
+                    "route: pass plan(..., topo=MeshTopology(n_replicas)) "
+                    "so the copy is priced over the executed ring")
+            legs = (PageGatherLeg(nbytes=0, batch=b, pool_key="src_pool",
+                                  table_key="src_table"),
+                    HopChainLeg(nbytes=n,
+                                hops=topo.hops(src.index, dst.index),
+                                batch=b, axis=src.axis, src=src.index,
+                                dst=dst.index, wraparound=topo.wraparound),
+                    PageScatterLeg(nbytes=0, batch=b, pool_key="dst_pool",
+                                   table_key="dst_table"))
+        cost = _sum_costs([_price_leg(leg, spec) for leg in legs])
+        return MovementPlan(transfer=transfer, legs=legs, cost=cost)
 
     if transfer.policy and pair not in (("compute", "slow"),
                                         ("slow", "compute")):
@@ -478,7 +543,7 @@ def ring_plan(axis: str, axis_size: int, layout: Layout,
 #: policy access / vmapped pack / scanned unpack).  Other kinds would
 #: silently move one item while the fused cost reports k — refuse them.
 _WAVE_KINDS = frozenset(
-    {"pack_pages", "unpack_pages", "tier_read", "tier_write"})
+    {"pack_pages", "unpack_pages", "tier_read", "tier_write", "page_alias"})
 
 
 def fuse(plans: Sequence[MovementPlan]) -> MovementPlan:

@@ -48,6 +48,10 @@ class VictimCand(NamedTuple):
     last_active_tick: int   # activation tick (LRU signal)
     suspend_ns: float       # modeled suspend cost under the active mechanism
     fast_resident: bool
+    # the session's snapshot row is aliased by other (forked) sessions:
+    # evicting it forces a shared-row demotion and hurts every alias, so
+    # shared sessions are structurally the WORST victims
+    shared: bool = False
 
 
 class PlaceCand(NamedTuple):
@@ -62,6 +66,10 @@ class PlaceCand(NamedTuple):
     hop_ns: float
     place_ns: float
     degraded: bool = False  # VILLA fast tier degraded to slow-only (chaos)
+    # the placed session's fork family already resides here: landing on
+    # this replica keeps the fork an alias (zero-copy) instead of a
+    # cross-replica materialization
+    shared_resident: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,7 +143,11 @@ class CostAwarePolicy(SchedPolicy):
         return sorted(cands, key=key)
 
     def victim_order(self, cands, ctx):
-        return sorted(cands, key=lambda c: (-c.priority, c.suspend_ns,
+        # ``shared`` before the cost keys: preempting a forked session
+        # whose row other aliases still read forces a demotion clone and
+        # cools the whole family — only ever the last resort
+        return sorted(cands, key=lambda c: (-c.priority, c.shared,
+                                            c.suspend_ns,
                                             c.last_active_tick, c.slot))
 
 
@@ -161,7 +173,11 @@ class CostAwareClusterPolicy(CostAwarePolicy):
     name = "cost_aware_cluster"
 
     def place_order(self, cands, ctx):
+        # ``not shared_resident`` ahead of the priced keys: a replica
+        # already holding the session's fork family serves it by alias
+        # (zero-copy) — cheaper than any hop the cost model can quote
         return sorted(cands, key=lambda c: (c.free_slots <= 0, c.degraded,
+                                            not c.shared_resident,
                                             c.hop_ns + c.place_ns,
                                             c.fast_occupancy, c.replica))
 

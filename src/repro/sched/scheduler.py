@@ -38,7 +38,8 @@ import math
 from typing import Dict, List, NamedTuple, Optional, Sequence, Set, Tuple
 
 from repro import movement as MV
-from repro.faults.recover import restore_session, snapshot_sessions
+from repro.faults.recover import (repair_row, restore_session,
+                                  snapshot_sessions)
 from repro.faults.spec import FaultInjector
 from repro.sched.metrics import Decision, JobRecord, Metrics
 from repro.sched.policy import (AdmitCand, PlaceCand, SchedContext,
@@ -284,13 +285,15 @@ class Scheduler:
     # ---- wave preparation (runs while the decode is in flight) ------------
     def _victim_cands(self, fast_uids: frozenset) -> List[VictimCand]:
         out = []
+        shared = self.eng.shared_uids()     # host dicts only — no sync
         for slot, job in self._slot_job.items():
             resident = job.uid in fast_uids
             out.append(VictimCand(
                 slot=slot, uid=job.uid, priority=job.priority,
                 last_active_tick=self._last_active.get(job.uid, 0),
                 suspend_ns=self._move_ns("suspend", resident),
-                fast_resident=resident))
+                fast_resident=resident,
+                shared=job.uid in shared))
         return out
 
     def _prepare_wave(self, fast_uids: frozenset) -> Wave:
@@ -638,8 +641,13 @@ class ClusterScheduler(Scheduler):
         # overwrites wholesale — corrupting it would silently heal, so only
         # truly at-rest snapshots are candidates.
         active_uids = {req.uid for req in self.eng.active.values()}
+        # fork-aware exclusion: the corruption target is the PHYSICAL row,
+        # so a row with a marked alias is already corrupt for its whole
+        # family — drawing a sibling would be a second incident on the
+        # same bytes that one repair closes, splitting the ledger
         cands = [u for u in sorted(self.eng.session_pos)
-                 if u not in active_uids and not inj.is_corrupt(u)]
+                 if u not in active_uids
+                 and not any(inj.is_corrupt(f) for f in self._family(u))]
         if cands:
             spec = cl.page_spec
             draw = inj.draw_storage(len(cands), spec.n_pages,
@@ -648,9 +656,22 @@ class ClusterScheduler(Scheduler):
                 ci, page, byte, xor = draw
                 uid = cands[ci]
                 eng = cl.replicas[cl.residence[uid]]
-                eng.corrupt_stored(uid % cl.n_sessions, page, byte, xor)
+                # the PHYSICAL row (fork-aware): corrupting a shared row
+                # rots every alias's bytes at once — and the scrub detects
+                # it ONCE, per row, not per alias
+                eng.corrupt_stored(eng.forks.resolve(uid), page, byte, xor)
                 inj.note_corrupt(uid)
                 self.metrics.record_fault("injected", self._class_of(uid))
+
+    def _family(self, uid: int) -> Tuple[int, ...]:
+        """Every uid aliasing ``uid``'s physical store row on its home
+        replica (``(uid,)`` for an exclusive row) — the unit chaos
+        accounting works in, since corruption and repair both act on the
+        row, not the alias."""
+        eng = self.cluster.replicas[self.cluster.residence[uid]]
+        if uid not in eng.forks:
+            return (uid,)
+        return eng.forks.aliases(eng.forks.resolve(uid))
 
     def _recovery_target(self, dead: int) -> Optional[int]:
         """Where refugees from a dead replica land: the surviving replica
@@ -686,6 +707,8 @@ class ClusterScheduler(Scheduler):
             if snap is None or target is None:
                 return False
             c = restore_session(cl, snap, target)
+            if c is None:       # alias snap whose owner was not restored
+                return False
             n_restored += 1
             recover_ns += self._mech_ns(c)
             for i, v in enumerate((c.ns_lisa, c.ns_memcpy,
@@ -693,7 +716,16 @@ class ClusterScheduler(Scheduler):
                 tot[i] += v
             return True
 
-        for uid in suspended:
+        # owners before aliases: an aliased snapshot restores by
+        # re-attaching to its owner's already-restored physical row (one
+        # repair heals the whole fork family), so the owner must land first
+        def _owner_first(uid: int) -> tuple:
+            snap = self._snaps.get(uid)
+            alias = snap is not None and getattr(snap, "alias_of",
+                                                 None) is not None
+            return (alias, uid)
+
+        for uid in sorted(suspended, key=_owner_first):
             if restore(uid):
                 self.metrics.record_fault("recovered", self._class_of(uid))
             else:
@@ -758,6 +790,11 @@ class ClusterScheduler(Scheduler):
         else:
             reps = range(self.cluster.n_replicas)
         mech = self.cfg.mechanism
+        # replicas already holding this session's fork family (the shared
+        # physical row): placing there keeps the session an alias — a
+        # zero-copy resume — instead of a cross-replica materialization
+        family = {rr for rr, eng in enumerate(self.cluster.replicas)
+                  if e.uid in eng.shared_uids()}
         out = []
         for r in reps:
             if e.kind == "resume":
@@ -771,7 +808,8 @@ class ClusterScheduler(Scheduler):
                                  fast_occupancy=occ[r], hop_ns=hop,
                                  place_ns=place,
                                  degraded=self.cluster.replicas[
-                                     r].fast_degraded))
+                                     r].fast_degraded,
+                                 shared_resident=r in family))
         return out
 
     # ---- wave preparation (runs while the decodes are in flight) ----------
@@ -927,25 +965,53 @@ class ClusterScheduler(Scheduler):
             # the detection (served corrupt, never silent)
             for c in ready:
                 uid = c.entry.uid
-                if not inj.is_corrupt(uid):
+                # fork-aware: corruption lives on the PHYSICAL row, so the
+                # incident may be ledgered under a sibling alias of the
+                # row this resume is about to read
+                fam = self._family(uid)
+                marked = [f for f in fam if inj.is_corrupt(f)]
+                if not marked:
                     continue
-                snap = self._snaps.get(uid)
-                if inj.spec.recover and snap is not None:
-                    home = cl.residence[uid]
-                    rc = restore_session(cl, snap, home)
+                home = cl.residence[uid]
+                rc = None
+                if inj.spec.recover:
+                    if len(fam) > 1:
+                        # a SHARED row heals in place from any family
+                        # member's pages-bearing snapshot (aliases are
+                        # meta-only): restore_session would re-admit the
+                        # carrier and demote the corrupt row to the
+                        # siblings, repairing one alias instead of all
+                        snap = next(
+                            (self._snaps[f] for f in fam
+                             if f in self._snaps
+                             and self._snaps[f].pages is not None), None)
+                        if snap is not None:
+                            rc = repair_row(cl, snap, home)
+                    else:
+                        snap = self._snaps.get(uid)
+                        if snap is not None:
+                            rc = restore_session(cl, snap, home)
+                if rc is not None:
                     lanes[home] += self._mech_ns(rc)
                     self.metrics.record_decision(Decision(
                         tick=self.tick_count, kind="recover_wave",
-                        n_items=1, ns_lisa=rc.ns_lisa,
+                        n_items=len(marked), ns_lisa=rc.ns_lisa,
                         ns_memcpy=rc.ns_memcpy, uj_lisa=rc.uj_lisa,
                         uj_memcpy=rc.uj_memcpy))
-                    inj.consume_corrupt(uid, "recovered")
-                    self.metrics.record_fault("recovered",
-                                              self._class_of(uid))
+                    for f in marked:
+                        inj.consume_corrupt(f, "recovered")
+                        self.metrics.record_fault("recovered",
+                                                  self._class_of(f))
                 else:
-                    inj.consume_corrupt(uid, "detected")
-                    self.metrics.record_fault("detected",
-                                              self._class_of(uid))
+                    # served corrupt; the device verify counts the read.
+                    # NB an unrepaired shared row can be read by several
+                    # aliases (one incident, many corrupt serves), so in
+                    # the no-recovery/no-snapshot corner the device
+                    # counter can exceed ledger ``detected``
+                    for f in marked:
+                        inj.consume_corrupt(f, "detected")
+                        self.metrics.record_fault("detected",
+                                                  self._class_of(f))
         if ready:
             homes = {c.entry.uid: cl.residence[c.entry.uid] for c in ready}
             migs = [(c, t) for c, t in zip(ready, rtargets)

@@ -111,8 +111,9 @@ class Cluster:
                               "modeled_migration_ns_memcpy": 0.0,
                               "migration_retries": 0, "replica_failures": 0,
                               "retry_ns_lisa": 0.0, "retry_ns_memcpy": 0.0,
-                              "retry_backoff_ns": 0.0}
-        self._route_plans: Dict[Tuple[int, int], MV.MovementPlan] = {}
+                              "retry_backoff_ns": 0.0,
+                              "fork_materializations": 0}
+        self._route_plans: Dict[Tuple, MV.MovementPlan] = {}
         self._migrate_exec = None       # built lazily (n_replicas > 1 only)
         self._fault_events: List[Dict[str, object]] = []
 
@@ -452,6 +453,89 @@ class Cluster:
             self.cluster_stats["modeled_migration_ns_memcpy"] += (
                 cost.ns_memcpy)
 
+    # ---- zero-copy forking (cluster semantics) -------------------------------
+    def fork(self, parent_uid: int, child_uid: int,
+             replica: Optional[int] = None,
+             seed_token: Optional[int] = None) -> None:
+        """Fork ``child_uid`` off a suspended parent.
+
+        Same replica (default): a zero-copy ALIAS fork — the child
+        refcounts the parent's physical row on that replica's fork table,
+        zero device dispatches (``Engine.fork``).
+
+        Different replica: the alias cannot span pools (refcounts are
+        per-replica), so the fork MATERIALIZES — the parent's snapshot row
+        is copied over the existing priced migration route (page gather ->
+        mesh hop chain -> page scatter, ONE dispatch) into an exclusive row
+        on the destination; the parent and its refcounts are untouched.
+        The copy is drawn with NULL_FAULT deliberately: materialization is
+        a fresh admission, not an in-flight session move — chaos targets
+        migrations of live state, and a corrupted fork would be detected at
+        the child's first resume anyway (the checksum sidecar travels).
+        """
+        src = self._home(parent_uid)
+        dst = src if replica is None else replica
+        if not 0 <= dst < self.n_replicas:
+            raise ValueError(f"unknown replica {dst}")
+        if child_uid in self.residence or any(
+                r.uid == child_uid for r in self.active.values()):
+            raise ValueError(f"child uid {child_uid} already in use")
+        if dst == src:
+            self.replicas[src].fork(parent_uid, child_uid, seed_token)
+            self.residence[child_uid] = src
+            return
+        s_eng, d_eng = self.replicas[src], self.replicas[dst]
+        pos, tok = s_eng.session_meta(parent_uid)
+        if parent_uid in {r.uid for r in self.active.values()}:
+            raise ValueError(f"parent uid {parent_uid} is active; suspend "
+                             f"it before forking")
+        src_phys = s_eng.forks.resolve(parent_uid)
+        seed = tok if seed_token is None else int(seed_token)
+        dst_idx = d_eng.adopt_session(child_uid, pos, seed)
+        self._invalidate_fast(d_eng, [dst_idx])
+        if self._migrate_exec is None:
+            self._migrate_exec = self._build_migrate_exec()
+        spp = self.page_spec.n_pages
+        arange = np.arange(spp, dtype=np.int32)
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            new_slow = self._migrate_exec(
+                s_eng.sessions.slow, d_eng.sessions.slow,
+                jnp.asarray(src_phys * spp + arange),
+                jnp.asarray(dst_idx * spp + arange),
+                jnp.asarray(NULL_FAULT))
+        d_eng.sessions = d_eng.sessions._replace(slow=new_slow)
+        d_eng.session_sums = d_eng.session_sums.at[dst_idx].set(
+            s_eng.session_sums[src_phys])
+        self.residence[child_uid] = dst
+        cost = self._fork_route_plan(src, dst).cost
+        self.cluster_stats["fork_materializations"] += 1
+        self.cluster_stats["migrated_bytes"] += cost.bytes
+        self.cluster_stats["modeled_migration_ns_lisa"] += cost.ns_lisa
+        self.cluster_stats["modeled_migration_ns_memcpy"] += cost.ns_memcpy
+
+    def _fork_route_plan(self, src: int, dst: int) -> MV.MovementPlan:
+        """The priced cross-replica ``fork``-kind plan (gather -> hop chain
+        -> scatter: a materialization is a real copy, priced like the
+        migration route it rides)."""
+        key = ("fork", src, dst)
+        if key not in self._route_plans:
+            self._route_plans[key] = MV.plan(
+                MV.Transfer(MV.Tier("slow", index=src, axis=self.axis),
+                            MV.Tier("slow", index=dst, axis=self.axis),
+                            MV.Layout.pages(self.page_spec), kind="fork"),
+                self.spec, topo=self.topo)
+        return self._route_plans[key]
+
+    def shared_uids(self) -> frozenset:
+        """Fleet union of per-replica shared uids (fork-aware scheduling
+        input: worst victims, preferred placements)."""
+        out: set = set()
+        for eng in self.replicas:
+            out |= eng.shared_uids()
+        return frozenset(out)
+
     def drain_fault_events(self) -> List[Dict[str, object]]:
         """Hand the scheduler the chaos events since the last drain (retry
         latency to charge, corrupt sessions to repair or write off)."""
@@ -480,6 +564,7 @@ class Cluster:
         eng.session_pos.clear()
         eng.session_tok.clear()
         eng.store_uid.clear()
+        eng.forks.clear()       # aliases died with the rows they shared
         st = eng.sessions
         eng.sessions = st._replace(policy=st.policy._replace(
             tags=jnp.full_like(st.policy.tags, -1)))

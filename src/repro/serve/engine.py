@@ -131,7 +131,13 @@ class Engine:
                                               self.villa_cfg)
         self.session_pos: Dict[int, int] = {}       # uid -> next position
         self.session_tok: Dict[int, int] = {}       # uid -> last emitted token
-        self.store_uid: Dict[int, int] = {}         # store index -> live uid
+        self.store_uid: Dict[int, int] = {}         # phys row -> owner uid
+        # CoW alias ledger (repro/fork): logical uids -> physical store
+        # rows, refcounted.  Forked sessions alias ONE row until a writer
+        # diverges; all alias mutation goes through its API (the
+        # `unrefcounted-alias` lint rule).  store_uid tracks one
+        # representative owner per physical row (the last writer).
+        self.forks = PS.make_fork_table()
         # Detection sidecar: per-page checksums of every suspended snapshot,
         # written by the pack leg at suspend time and verified at unpack on
         # resume.  ``verify_failed`` accumulates ON DEVICE — the verdict
@@ -147,6 +153,10 @@ class Engine:
         self._resume = jax.jit(self._resume_fn, donate_argnums=(0, 1, 3))
         self._resume_many = jax.jit(self._resume_many_fn,
                                     donate_argnums=(0, 1, 3))
+        # shared-row demotion: device-clone one slow row (store + checksum
+        # sidecar) so a shared snapshot can yield its index without being
+        # destroyed
+        self._clone = jax.jit(self._clone_fn, donate_argnums=(0, 1))
 
         # Every suspend/resume is a planned movement between the compute
         # tier and the VILLA slow tier, lowered ONCE here against the spec;
@@ -159,11 +169,22 @@ class Engine:
         self.plan_resume = MV.plan(MV.Transfer(
             MV.Tier("slow"), MV.Tier("compute"), _layout,
             policy=self.villa_cfg), spec)
+        # Fork fast path: a same-replica ``fork``-kind transfer lowers to
+        # ONE page_alias leg — host bookkeeping priced as RowClone FPM on
+        # the lisa arm vs the per-session copy it avoids on the memcpy arm
+        # (cost.bytes = bytes NOT copied).  A shared-row demotion moves one
+        # row's real bytes within the pool, priced under the same alias
+        # mechanism (an in-subarray RowClone of one row).
+        self.plan_fork = MV.plan(MV.Transfer(
+            MV.Tier("slow"), MV.Tier("slow"), _layout, kind="fork"), spec)
+        self.plan_demote = self.plan_fork
         self._wave_plans: Dict[tuple, MV.MovementPlan] = {}
         self.snapshot_bytes = self.page_spec.total_bytes
-        self.stats = {"decoded_tokens": 0, "suspends": 0, "resumes": 0,
+        self.stats = {"decoded_tokens": 0, "prefills": 0, "suspends": 0,
+                      "resumes": 0,
                       "decode_dispatches": 0, "host_transfers": 0,
-                      "evictions": 0,
+                      "evictions": 0, "demotions": 0,
+                      "forks": 0, "bytes_not_copied": 0,
                       "modeled_move_ns_lisa": 0.0,
                       "modeled_move_ns_memcpy": 0.0}
 
@@ -214,6 +235,13 @@ class Engine:
                          sums=sums[idxs])
         return env["cache"], env["store"], failed + env["verify_fail"]
 
+    def _clone_fn(self, store, sums, src, dst):
+        """Shared-row demotion body: clone slow row src -> dst (pages AND
+        checksum sidecar) in one dispatch; the fork table repoints the
+        aliases right after."""
+        return (VC.clone_item(store, src, dst),
+                sums.at[dst].set(sums[src]))
+
     # ---- scheduling -------------------------------------------------------
     def free_slots(self) -> List[int]:
         return [s for s in range(self.slots) if s not in self.active]
@@ -250,6 +278,7 @@ class Engine:
             self._prefill, self.params, self.cache, jnp.asarray(toks)[None],
             positions, jnp.int32(n), jnp.int32(slot))
         req.generated.append(int(nxt))
+        self.stats["prefills"] += 1
         self.active[slot] = req
         self.pos[slot] = n
         if len(req.generated) >= req.max_new:
@@ -369,20 +398,86 @@ class Engine:
         self._suspend_many = other._suspend_many
         self._resume = other._resume
         self._resume_many = other._resume_many
+        self._clone = other._clone
         self._wave_plans = other._wave_plans
 
-    # ---- VILLA session tiering --------------------------------------------
-    def _store_index(self, uid: int) -> int:
-        """Map uid -> store index, evicting an aliased session explicitly
-        (uid % n_sessions collisions must not silently corrupt state)."""
+    # ---- VILLA session tiering (fork-aware row allocation) ----------------
+    def _claim_row(self, uid: int) -> int:
+        """Free the home index (uid % n_sessions) for ``uid``'s next write
+        and return it.  An EXCLUSIVE occupant is destroy-evicted (legacy
+        collision semantics); a SHARED occupant is *demoted* — its bytes
+        device-cloned to a free row and every alias repointed — never
+        destroyed.  Also the ``alloc`` callback of
+        :meth:`~repro.fork.ForkPageTable.write_break`."""
         idx = uid % self.n_sessions
-        old = self.store_uid.get(idx)
-        if old is not None and old != uid:
-            self.session_pos.pop(old, None)
-            self.session_tok.pop(old, None)
-            self.stats["evictions"] += 1
-        self.store_uid[idx] = uid
+        owner = self.store_uid.get(idx)
+        if owner is not None and owner != uid:
+            if self.forks.refs.get(idx, 0) > 1:
+                self._demote_row(idx)
+            else:
+                self._evict_row(idx)
+        elif owner == uid and idx in self.forks.refs:
+            # uid's own home is the shared row it is detaching from:
+            # demote it (uid's alias moves along; write_break re-resolves)
+            self._demote_row(idx)
+        assert idx not in self.forks.refs, (idx, self.forks.refs)
         return idx
+
+    def _evict_row(self, idx: int) -> None:
+        """Destroy the exclusive snapshot occupying ``idx``."""
+        old = self.store_uid.pop(idx)
+        self.session_pos.pop(old, None)
+        self.session_tok.pop(old, None)
+        if old in self.forks and self.forks.resolve(old) == idx:
+            self.forks.release(old)
+        self.stats["evictions"] += 1
+
+    def _demote_row(self, src: int) -> None:
+        """Migrate a SHARED row out of the way: device-clone its pages and
+        checksum sidecar to a free row, repoint every alias as one unit
+        (refcount preserved).  Shared snapshots are never destroyed by a
+        collision — the fork-aware eviction contract."""
+        free = [i for i in range(self.n_sessions)
+                if i not in self.forks.refs and i not in self.store_uid]
+        if not free:
+            raise RuntimeError(
+                f"store full: cannot demote shared row {src} "
+                f"(aliases {self.forks.aliases(src)}); drop a session first")
+        dst = free[0]
+        self.sessions, self.session_sums = _quiet(
+            self._clone, self.sessions, self.session_sums,
+            jnp.int32(src), jnp.int32(dst))
+        self.forks.repoint(src, dst)
+        self.store_uid[dst] = self.store_uid.pop(src)
+        self.stats["demotions"] += 1
+        self._charge_move(self.plan_demote)
+
+    def _own_row(self, uid: int, idx: int) -> None:
+        """Post-write bookkeeping: a fresh uid binds its claimed row; any
+        row ``uid`` no longer backs is handed to a surviving alias so
+        ``store_uid`` always names a live alias of every owned row."""
+        if uid not in self.forks:
+            self.forks.bind(uid, idx)
+        for phys in [p for p, o in self.store_uid.items()
+                     if o == uid and p != idx]:
+            alts = [a for a in self.forks.aliases(phys) if a != uid]
+            if alts:
+                self.store_uid[phys] = alts[0]
+            else:
+                del self.store_uid[phys]
+        self.store_uid[idx] = uid
+
+    def _release_row(self, uid: int) -> Optional[int]:
+        """Drop ``uid``'s alias claim; returns the physical row iff it was
+        the last alias (now reclaimable), else None.  Ownership of a still-
+        shared row passes to a surviving alias."""
+        phys = self.forks.resolve(uid)
+        freed = self.forks.release(uid)
+        if freed is not None:
+            self.store_uid.pop(freed, None)
+        elif self.store_uid.get(phys) == uid:
+            self.store_uid[phys] = self.forks.aliases(phys)[0]
+        return freed
 
     # ---- session residence metadata (migration support) -------------------
     def session_meta(self, uid: int) -> tuple:
@@ -396,42 +491,68 @@ class Engine:
 
     def adopt_session(self, uid: int, pos: int, tok: int) -> int:
         """Register an inbound migrated session and return the store index
-        its pages must be scattered into.  Collisions evict explicitly,
-        exactly like a local suspend."""
-        idx = self._store_index(uid)
+        its pages must be scattered into (an EXCLUSIVE row — an inbound
+        snapshot is materialized bytes, not an alias).  Collisions evict or
+        demote explicitly, exactly like a local suspend."""
+        if uid in self.forks:
+            self._release_row(uid)      # stale claim: re-adoption replaces
+        idx = self._claim_row(uid)
+        self.forks.bind(uid, idx)
+        self.store_uid[idx] = uid
         self.session_pos[uid] = int(pos)
         self.session_tok[uid] = int(tok)
         return idx
 
+    def adopt_alias(self, uid: int, pos: int, tok: int,
+                    owner_uid: int) -> int:
+        """Register a session as an ALIAS of an already-resident owner
+        (snapshot restore of a forked family: the owner's row was restored
+        ONCE; each alias re-attaches by bookkeeping alone — zero device
+        work, one repair heals every alias).  Returns the shared row."""
+        if uid in self.forks:
+            self._release_row(uid)
+        phys = self.forks.fork_child(owner_uid, uid)
+        self.session_pos[uid] = int(pos)
+        self.session_tok[uid] = int(tok)
+        return phys
+
     def drop_session(self, uid: int) -> int:
         """Forget a suspended session (its pages migrated away); returns
-        the store index the snapshot occupied.  The bytes in the pool are
-        left as-is — the index is dead until a new session claims it."""
+        the PHYSICAL row the snapshot occupied — for a forked alias that is
+        the shared row, which survives for the other aliases.  The bytes in
+        the pool are left as-is; an exclusive row is dead until a new
+        session claims it."""
         pos = self.session_pos.pop(uid, None)
         if pos is None:
             raise UnknownSession(f"uid {uid} has no suspended session on "
                                  f"replica {self.replica_id}")
         self.session_tok.pop(uid, None)
-        idx = uid % self.n_sessions
-        if self.store_uid.get(idx) == uid:
-            del self.store_uid[idx]
+        if uid not in self.forks:
+            return uid % self.n_sessions      # pre-fork legacy bookkeeping
+        idx = self.forks.resolve(uid)
+        self._release_row(uid)
         return idx
 
     def _suspend_bookkeep(self, slot: int) -> int:
         """Pop the request off ``slot`` and record its session state;
-        returns the store index its snapshot lands in."""
+        returns the uid (row allocation is the caller's CoW write-break)."""
         req = self.active.pop(slot)
-        idx = self._store_index(req.uid)
         self.session_pos[req.uid] = int(self.pos[slot])
         self.session_tok[req.uid] = req.generated[-1] if req.generated else 0
         self.stats["suspends"] += 1
-        return idx
+        return req.uid
 
     def suspend(self, slot: int) -> None:
         if slot not in self.active:
             raise ValueError(f"slot {slot} has no active request to suspend "
                              f"(active slots: {sorted(self.active)})")
-        idx = self._suspend_bookkeep(slot)
+        uid = self._suspend_bookkeep(slot)
+        # CoW write-break BEFORE the scatter: the `unrefcounted-alias` lint
+        # rule requires the refcount API in any function that drives the
+        # _suspend scatter.
+        idx = (self.forks.write_break(uid, alloc=self._claim_row)
+               if uid in self.forks else self._claim_row(uid))
+        self._own_row(uid, idx)
         self.sessions, self.session_sums = _quiet(
             self._suspend, self.cache, self.sessions, self.session_sums,
             jnp.int32(slot), jnp.int32(idx))
@@ -448,7 +569,15 @@ class Engine:
             raise ValueError(f"suspend wave needs distinct active slots "
                              f"(got {list(slots)}; active: "
                              f"{sorted(self.active)})")
-        idxs = [self._suspend_bookkeep(s) for s in slots]
+        uids = [self._suspend_bookkeep(s) for s in slots]
+        # per-uid CoW write-break (host bookkeeping; the scatter below stays
+        # ONE fused dispatch for the whole wave)
+        idxs = []
+        for uid in uids:
+            idx = (self.forks.write_break(uid, alloc=self._claim_row)
+                   if uid in self.forks else self._claim_row(uid))
+            self._own_row(uid, idx)
+            idxs.append(idx)
         self.sessions, self.session_sums = _quiet(
             self._suspend_many, self.cache, self.sessions, self.session_sums,
             jnp.asarray(slots, jnp.int32), jnp.asarray(idxs, jnp.int32))
@@ -475,7 +604,9 @@ class Engine:
                 f"more tokens would write past max_len={self.max_len}; "
                 f"clamp extra_new to the context envelope (repro.sched "
                 f"truncates follow-ups this way)")
-        return uid % self.n_sessions
+        # the PHYSICAL row: a forked child resumes by gathering straight
+        # from the parent's shared row (read-through aliasing)
+        return self.forks.resolve(uid)
 
     def _activate(self, slot: int, uid: int, extra_new: int) -> None:
         req = Request(uid=uid, prompt=np.zeros(0, np.int32), max_new=extra_new)
@@ -542,6 +673,83 @@ class Engine:
         self.stats["modeled_move_ns_lisa"] += plan.cost.ns_lisa
         self.stats["modeled_move_ns_memcpy"] += plan.cost.ns_memcpy
 
+    # ---- zero-copy session forking (RowClone analogue) --------------------
+    def fork_many(self, parent_uid: int, child_uids: Sequence[int],
+                  seed_tokens: Optional[Sequence[int]] = None) -> None:
+        """Fork N children off a SUSPENDED parent: each child aliases the
+        parent's physical snapshot row (refcount += 1) and inherits its
+        position — pure host bookkeeping, ZERO device dispatches (pinned by
+        repro.analysis.testlib).  The shared prefix is prefilled once, ever.
+
+        ``seed_tokens`` overrides each child's first decode input (the
+        divergence point); default is the parent's last emitted token.  The
+        real copy is deferred: a child's first post-fork decode scatters
+        only its slot cache, and its next suspend write-breaks onto a row
+        of its own — still one fused dispatch per wave.
+
+        Charges one ``fork``-kind movement plan per child (RowClone FPM on
+        the lisa arm vs the avoided full-snapshot copy on the memcpy arm)
+        and credits ``stats["bytes_not_copied"]``.
+        """
+        if not child_uids:
+            return
+        if parent_uid not in self.session_pos:
+            raise UnknownSession(
+                f"uid {parent_uid} has no suspended session to fork "
+                f"(suspend the parent first — fork aliases its snapshot)")
+        for slot, r in self.active.items():
+            if r.uid == parent_uid:
+                raise ValueError(
+                    f"parent uid {parent_uid} is active in slot {slot}; "
+                    f"suspend it before forking (the snapshot row must be "
+                    f"quiescent)")
+        if len(set(child_uids)) != len(child_uids):
+            raise ValueError(f"duplicate child uids: {list(child_uids)}")
+        taken = [c for c in child_uids
+                 if c == parent_uid or c in self.session_pos
+                 or c in self.forks
+                 or any(r.uid == c for r in self.active.values())]
+        if taken:
+            raise ValueError(f"child uids already in use: {taken}")
+        seeds = (list(seed_tokens) if seed_tokens is not None
+                 else [self.session_tok[parent_uid]] * len(child_uids))
+        if len(seeds) != len(child_uids):
+            raise ValueError(f"{len(seeds)} seed tokens for "
+                             f"{len(child_uids)} children")
+        for child, seed in zip(child_uids, seeds):
+            self.forks.fork_child(parent_uid, child)
+            self.session_pos[child] = self.session_pos[parent_uid]
+            self.session_tok[child] = int(seed)
+        fplan = self._wave_plan(self.plan_fork, len(child_uids))
+        self._charge_move(fplan)
+        self.stats["forks"] += len(child_uids)
+        self.stats["bytes_not_copied"] += fplan.cost.bytes
+
+    def fork(self, parent_uid: int, child_uid: int,
+             seed_token: Optional[int] = None) -> None:
+        """Fork ONE child — see :meth:`fork_many`."""
+        self.fork_many(parent_uid, [child_uid],
+                       None if seed_token is None else [seed_token])
+
+    def reseed(self, uid: int, token: int) -> None:
+        """Override a suspended session's next decode input (host
+        bookkeeping only): the benchmark's fork-OFF arm drives identical
+        divergence tokens through independent sessions this way."""
+        if uid not in self.session_pos:
+            raise UnknownSession(f"uid {uid} has no suspended session")
+        for slot, r in self.active.items():
+            if r.uid == uid:
+                raise ValueError(f"uid {uid} is active in slot {slot}")
+        self.session_tok[uid] = int(token)
+
+    def shared_uids(self) -> frozenset:
+        """uids whose snapshot row is aliased by at least one other session
+        (host dicts only — no device read).  The scheduler treats these as
+        the WORST eviction victims and their replicas as preferred fork
+        placements."""
+        return frozenset(u for u, p in self.forks.phys_of.items()
+                         if self.forks.refs[p] > 1)
+
     def fast_resident_uids(self) -> frozenset:
         """uids whose snapshots are resident in the VILLA fast tier right
         now (one small device→host read of the policy tags).  The scheduler
@@ -552,8 +760,18 @@ class Engine:
         if self.fast_degraded:
             return frozenset()
         tags = np.asarray(self.sessions.policy.tags)
-        return frozenset(self.store_uid[int(t)] for t in tags
-                         if t >= 0 and int(t) in self.store_uid)
+        out = set()
+        for t in tags:
+            t = int(t)
+            if t < 0:
+                continue
+            if t in self.forks.refs:
+                # a resident SHARED row makes every alias fast-resident —
+                # they all read the same physical pages
+                out.update(self.forks.aliases(t))
+            elif t in self.store_uid:
+                out.add(self.store_uid[t])
+        return frozenset(out)
 
     def hit_rate(self) -> float:
         return float(VC.hit_rate(self.sessions))
@@ -599,10 +817,15 @@ class Engine:
     def verify_store(self) -> jax.Array:
         """Scrub: recompute every LIVE suspended snapshot's checksums
         against the sidecar; returns the ON-DEVICE int32 count of corrupt
-        sessions.  Callers (the chaos bench's end-of-run audit, tests) sync
-        it explicitly — the tick loop never calls this."""
+        PHYSICAL rows.  A shared row is checked ONCE however many sessions
+        alias it — one corruption, one detection, and the one repair that
+        follows heals every alias.  Callers (the chaos bench's end-of-run
+        audit, tests) sync it explicitly — the tick loop never calls
+        this."""
         idxs = sorted(i for i, u in self.store_uid.items()
-                      if u in self.session_pos)
+                      if u in self.session_pos
+                      or any(a in self.session_pos
+                             for a in self.forks.aliases(i)))
         if not idxs:
             return jnp.zeros((), jnp.int32)
         ii = jnp.asarray(idxs, jnp.int32)
@@ -623,6 +846,7 @@ class Engine:
         for name, fn in [("decode", self._decode), ("prefill", self._prefill),
                          ("suspend", self._suspend), ("resume", self._resume),
                          ("suspend_many", self._suspend_many),
-                         ("resume_many", self._resume_many)]:
+                         ("resume_many", self._resume_many),
+                         ("clone", self._clone)]:
             out[name] = fn._cache_size() if hasattr(fn, "_cache_size") else -1
         return out

@@ -20,10 +20,12 @@ import jax.numpy as jnp
 
 from repro.core.dram.villa import VillaConfig
 from repro.core.lisa import villa_cache as VC
+from repro.fork import ForkPageTable
 from repro.movement.paging import (  # noqa: F401  (serving-layer re-exports)
     PageSpec,
     pack_slot,
     page_checksums,
+    row_page_table,
     unpack_into_slot,
     verify_pages,
 )
@@ -36,3 +38,11 @@ def make_session_store(spec: PageSpec, n_sessions: int,
     slow = jnp.zeros((n_sessions, spec.n_pages, spec.page_rows,
                       spec.page_lanes), jnp.uint8)
     return VC.make_store(slow, cfg)
+
+
+def make_fork_table() -> ForkPageTable:
+    """The store's CoW alias ledger (one per store/replica): logical uids
+    -> physical slow-pool rows, refcounted so N forked sessions alias one
+    row until a writer diverges.  All alias mutation goes through its API
+    (the `unrefcounted-alias` lint rule enforces this for serving code)."""
+    return ForkPageTable()

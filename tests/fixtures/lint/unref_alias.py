@@ -1,0 +1,24 @@
+"""Planted `unrefcounted-alias` violation.
+
+tests/test_analysis.py lints this module AS IF it lived at a
+src/repro/serve path (the rule's scope — serving code, where the fork
+table's alias ledger is live).  The bare wave below drives the
+``_suspend_many`` scatter with no fork-table refcount call in the same
+function: if a forked session aliases one of the target rows, the scatter
+overwrites every alias's bytes with one writer's snapshot.  The rule must
+fire exactly once — on the bare wave, and NOT on the compliant one, whose
+``write_break`` CoW-detaches each writer before the scatter.
+"""
+
+
+class SneakyEngine:
+    def suspend_wave_bare(self, slots, idxs):
+        # scatters into possibly-shared rows; no refcount API in sight
+        self.sessions, self.session_sums = self._suspend_many(
+            self.cache, self.sessions, self.session_sums, slots, idxs)
+
+    def suspend_wave_compliant(self, slots, uids):
+        idxs = [self.forks.write_break(u, alloc=self._claim_row)
+                for u in uids]
+        self.sessions, self.session_sums = self._suspend_many(
+            self.cache, self.sessions, self.session_sums, slots, idxs)

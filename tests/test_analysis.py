@@ -44,6 +44,7 @@ PLANTED = [
      "wallclock-in-virtual-clock"),
     ("import_reg.py", "src/repro/movement/fixture.py",
      "import-time-registration"),
+    ("unref_alias.py", "src/repro/serve/fixture.py", "unrefcounted-alias"),
 ]
 
 
