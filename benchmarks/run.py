@@ -12,7 +12,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * ``kernel_*`` — Pallas kernels (interpret mode) vs jnp oracles.
   * ``ring_*``  — LISA hop-chain collectives on 8 host devices (subprocess).
   * ``train/serve_throughput`` — end-to-end reduced-model system benches.
-  * ``roofline_*`` — summary of the dry-run artifacts (EXPERIMENTS.md).
+  * ``roofline_*`` — live lowering + HLO byte/flop attribution of every
+    audited jitted entry point (writes ``ROOFLINE_REPORT.json``).
+
+Every invocation appends its headline gates to ``BENCH_TRAJECTORY.jsonl``
+(strict JSON per line, monotone ``seq`` — validated by ``--check``).
 """
 from __future__ import annotations
 
@@ -506,6 +510,34 @@ def bench_movement(out_path="BENCH_movement.json"):
         f"modeled_advantage={bench['modeled_advantage']}x")
 
 
+def _roofline_attribution(path="ROOFLINE_REPORT.json"):
+    """Span-name -> roofline attrs from the committed live report (empty
+    dict when absent/unreadable): traced decode/prefill spans then carry
+    the dominant HLO kernel and its byte/flop totals, tying the virtual
+    timeline back to the lowered IR."""
+    if not os.path.exists(path):
+        return {}
+    try:
+        with open(path) as f:
+            rep = json.load(f)
+        entries = rep["entries"]
+    except (OSError, ValueError, KeyError, TypeError):
+        return {}
+
+    def attrs(e):
+        return {"hlo_dominant": e["dominant"],
+                "hlo_gflops": round(e["flops"] / 1e9, 4),
+                "hlo_gbytes": round(e["bytes"] / 1e9, 4)}
+
+    out = {}
+    if "decode" in entries:
+        out["decode"] = attrs(entries["decode"])
+    buckets = sorted(n for n in entries if n.startswith("prefill["))
+    if buckets:
+        out["prefill"] = attrs(entries[buckets[-1]])
+    return out
+
+
 def bench_sched(out_path="BENCH_sched.json"):
     """Scheduler A/B: ``fifo`` vs ``cost_aware`` serving the SAME offered
     load (identical arrival stream, engine geometry and virtual-clock
@@ -533,7 +565,15 @@ def bench_sched(out_path="BENCH_sched.json"):
     for pol in ("fifo", "cost_aware"):
         eng = Engine(cfg, params, slots=4, max_len=96,
                      n_sessions=sched.n_sessions_for(wl))
-        s = sched.Scheduler(eng, policy=pol, arrivals=arrivals)
+        tracer = None
+        if pol == "cost_aware":
+            # the headline arm runs traced: zero device dispatches, zero
+            # schedule impact — the summary gains a "trace" rollup block
+            from repro.obs import Tracer
+            tracer = Tracer()
+            tracer.bind_attribution(_roofline_attribution())
+        s = sched.Scheduler(eng, policy=pol, arrivals=arrivals,
+                            tracer=tracer)
         t0 = time.perf_counter()
         summary = s.run()
         dt = time.perf_counter() - t0
@@ -1061,6 +1101,13 @@ def _check_sched(b, errs):
             errs.append(f"sched: {pol} resume_many compiles {cc}")
         if cc["decode"] not in (1, -1):
             errs.append(f"sched: {pol} decode compiles {cc['decode']}")
+    tr = b["cost_aware"].get("trace")
+    if not tr or not tr.get("spans"):
+        errs.append("sched: cost_aware arm lost its trace rollup")
+    else:
+        for phase in ("tick", "decode", "move", "leg"):
+            if phase not in tr["per_phase"]:
+                errs.append(f"sched: trace rollup missing phase {phase!r}")
 
 
 def _check_cluster(b, errs):
@@ -1175,6 +1222,38 @@ def _check_lint(b, errs):
             errs.append(f"lint: {t['name']} has in-graph host transfers")
 
 
+def _check_roofline(b, errs):
+    """The committed live-roofline report: every audited entry point
+    present with positive traffic and a kernel attribution (regenerate
+    with ``python benchmarks/run.py roofline``)."""
+    if b["schema"] != "roofline-report/v1":
+        errs.append(f"roofline: unknown report schema {b['schema']!r}")
+        return
+    names = set(b["entries"])
+    need = {"decode", "suspend", "suspend_many", "resume", "resume_many",
+            "migrate", "simulate_params"}
+    if need - names:
+        errs.append(f"roofline: missing entry points {sorted(need - names)}")
+    if not any(n.startswith("prefill[") for n in names):
+        errs.append("roofline: no prefill bucket attributed")
+    if b["n_entry_points"] != len(names):
+        errs.append(f"roofline: n_entry_points {b['n_entry_points']} != "
+                    f"{len(names)} entries")
+    if len(names) < 9:
+        errs.append(f"roofline: {len(names)} entry points, expected >= 9")
+    for n in sorted(names):
+        e = b["entries"][n]
+        if not e["bytes"] > 0:
+            errs.append(f"roofline: {n} has no memory traffic")
+        if not e["flops"] >= 0:
+            errs.append(f"roofline: {n} flops negative")
+        if not e["top_kernels"]:
+            errs.append(f"roofline: {n} has no kernel attribution")
+        elif e["dominant"] != e["top_kernels"][0]["name"]:
+            errs.append(f"roofline: {n} dominant kernel disagrees with "
+                        f"its top_kernels ranking")
+
+
 BENCH_SCHEMAS = {
     "BENCH_serve.json": _check_serve,
     "BENCH_movement.json": _check_movement,
@@ -1183,6 +1262,7 @@ BENCH_SCHEMAS = {
     "BENCH_faults.json": _check_faults,
     "BENCH_fork.json": _check_fork,
     "LINT_REPORT.json": _check_lint,
+    "ROOFLINE_REPORT.json": _check_roofline,
 }
 
 
@@ -1210,36 +1290,137 @@ def check_artifacts(root=".") -> int:
         except (KeyError, TypeError) as e:
             errs.append(f"{name}: schema drifted ({type(e).__name__}: {e})")
         clean += len(errs) == before
+    before = len(errs)
+    _check_trajectory(os.path.join(root, "BENCH_TRAJECTORY.jsonl"), errs,
+                      reject)
+    clean += len(errs) == before
     for e in errs:
         print(f"CHECK FAIL {e}")
-    print(f"bench check: {clean}/{len(BENCH_SCHEMAS)} artifacts clean, "
+    print(f"bench check: {clean}/{len(BENCH_SCHEMAS) + 1} artifacts clean, "
           f"{len(errs)} failure(s)")
     return len(errs)
 
 
-def bench_roofline_summary():
-    import glob
-    cells = sorted(glob.glob("experiments/dryrun/*_baseline.json"))
-    if not cells:
-        row("roofline_summary", 0.0, "no_dryrun_artifacts")
+def _check_trajectory(path, errs, reject):
+    """``BENCH_TRAJECTORY.jsonl``: strict JSON per line, ``seq`` a strictly
+    increasing int — an append-only record of every bench invocation's
+    headline gates (plot it to see the repo's trajectory)."""
+    name = os.path.basename(path)
+    if not os.path.exists(path):
+        errs.append(f"{name}: missing (run any bench to append a line)")
         return
-    n_ok = 0
-    worst = (None, 1e9)
-    for f in cells:
-        a = json.load(open(f))
-        if a.get("status") != "ok":
+    last = None
+    with open(path) as f:
+        for i, line in enumerate(f, 1):
+            if not line.strip():
+                errs.append(f"{name}:{i}: blank line in append-only log")
+                continue
+            try:
+                rec = json.loads(line, parse_constant=reject)
+            except ValueError as e:
+                errs.append(f"{name}:{i}: invalid strict JSON ({e})")
+                continue
+            seq = rec.get("seq")
+            if not isinstance(seq, int):
+                errs.append(f"{name}:{i}: seq missing or not an int")
+                continue
+            if last is not None and seq <= last:
+                errs.append(f"{name}:{i}: seq {seq} not monotone "
+                            f"(previous {last})")
+            last = seq
+            if not isinstance(rec.get("benches"), list):
+                errs.append(f"{name}:{i}: benches missing or not a list")
+            if not isinstance(rec.get("gates"), dict):
+                errs.append(f"{name}:{i}: gates missing or not a dict")
+    if last is None:
+        errs.append(f"{name}: no records")
+
+
+def _append_trajectory(benches, path="BENCH_TRAJECTORY.jsonl"):
+    """Append one strict-JSON line per bench invocation: which benches ran,
+    every headline ``derived`` value this run printed, and each committed
+    artifact's gate status at append time.  ``seq`` continues monotonically
+    from the last committed line (``--check`` validates)."""
+    last = -1
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                if line.strip():
+                    try:
+                        seq = json.loads(line).get("seq", -1)
+                        if isinstance(seq, int):
+                            last = max(last, seq)
+                    except ValueError:
+                        pass
+    gates = {}
+    for name, check in BENCH_SCHEMAS.items():
+        if not os.path.exists(name):
+            gates[name] = None          # never generated: not a failure
             continue
-        n_ok += 1
-        r = a["roofline"]
-        frac = r["roofline_fraction_kernel"]
-        if a["mesh"] == "single" and frac < worst[1]:
-            worst = (f"{a['arch']}/{a['shape']}", frac)
-        row(f"roofline_{a['arch']}_{a['shape']}_{a['mesh']}",
-            a["compile_s"] * 1e6,
-            f"dom={r['dominant_kernel']};frac={frac:.4f};"
-            f"useful={r['useful_flops_ratio']:.3f}")
-    row("roofline_cells_ok", 0.0, f"{n_ok}")
-    row("roofline_worst_cell", 0.0, f"{worst[0]}={worst[1]:.4f}")
+        art_errs = []
+        try:
+            with open(name) as f:
+                check(json.load(f), art_errs)
+        except (ValueError, KeyError, TypeError) as e:
+            art_errs.append(str(e))
+        gates[name] = not art_errs
+    rec = {"seq": last + 1, "ts": round(time.time(), 2),
+           "benches": sorted(benches),
+           "rows": {name: derived for name, _us, derived in ROWS},
+           "gates": gates}
+    with open(path, "a") as f:
+        f.write(json.dumps(rec, sort_keys=True, separators=(",", ":"),
+                           allow_nan=False) + "\n")
+
+
+def bench_roofline(out_path="ROOFLINE_REPORT.json"):
+    """Live roofline attribution over the audited hot path: lower every
+    registered jitted entry point (``analysis.entrypoints.default_targets``
+    — the SAME live jit objects serving runs and repro-lint audits) at
+    audit geometry, run the optimized HLO through ``roofline.hlo.analyze``
+    + ``roofline.attribution.attribute``, and write ``ROOFLINE_REPORT.json``
+    (strict JSON, schema ``roofline-report/v1``, validated by ``--check``).
+    This replaces the old dry-run-artifact scan: the report now always
+    describes the code as committed, not a stale experiment directory."""
+    from repro.analysis.entrypoints import default_targets
+    from repro.roofline import attribution as ATTR
+    from repro.roofline import hlo as H
+
+    targets, engine = default_targets()
+    entries = {}
+    for t in targets:
+        t0 = time.perf_counter()
+        txt = t.fn.lower(*t.args, **t.kwargs).compile().as_text()
+        dt = time.perf_counter() - t0
+        cost = H.analyze(txt)
+        top = ATTR.attribute(txt, top=5)
+        names = list(top)
+        flops, nbytes = cost["flops"], cost["bytes"]
+        entries[t.name] = {
+            "flops": flops,
+            "bytes": nbytes,
+            "bytes_kernel_adjusted": cost["bytes_kernel_adjusted"],
+            "link_bytes_total": cost["link_bytes_total"],
+            "arithmetic_intensity": round(flops / max(nbytes, 1.0), 4),
+            "dominant": names[0] if names else None,
+            "top_kernels": [{"name": k, "weighted_bytes": v}
+                            for k, v in top.items()],
+            "compile_s": round(dt, 3),
+        }
+        row(f"roofline_{t.name}", dt * 1e6,
+            f"GF={flops / 1e9:.3f};GB={nbytes / 1e9:.4f};"
+            f"AI={entries[t.name]['arithmetic_intensity']}")
+    report = {
+        "schema": "roofline-report/v1",
+        "arch": "tinyllama-1.1b-reduced",
+        "geometry": {"slots": engine.slots, "max_len": engine.max_len},
+        "n_entry_points": len(entries),
+        "entries": entries,
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True, allow_nan=False)
+        f.write("\n")
+    row("roofline_entry_points", 0.0, f"{len(entries)}")
 
 
 BENCHES = {
@@ -1254,7 +1435,7 @@ BENCHES = {
     "cluster": bench_cluster,
     "faults": bench_faults,
     "fork": bench_fork,
-    "roofline": bench_roofline_summary,
+    "roofline": bench_roofline,
 }
 
 
@@ -1274,9 +1455,13 @@ def main(argv=None) -> None:
         raise SystemExit(f"unknown benches {sorted(unknown)}; "
                          f"choose from {sorted(BENCHES)}")
     print("name,us_per_call,derived")
+    ran = []
     for name, fn in BENCHES.items():
         if not sel or name in sel:
             fn()
+            ran.append(name)
+    if ran:
+        _append_trajectory(ran)
 
 
 if __name__ == "__main__":

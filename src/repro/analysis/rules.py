@@ -34,6 +34,11 @@ Each rule guards one paper invariant (DESIGN.md Sec. 11 has the mapping):
   (``_suspend`` / ``_suspend_many``) must consult the fork table's refcount
   API in the same function: a bare scatter into a row that forked sessions
   may alias overwrites every alias's bytes without a copy-on-write detach.
+* ``unclosed-span`` — a ``begin_span`` with no ``end_span`` in the same
+  function leaves the span open on its lane forever: every later span on
+  that lane nests under it, and the trace's parent/child additivity
+  contract silently breaks.  Use the ``span()`` context manager or close
+  in the function that opened.
 """
 from __future__ import annotations
 
@@ -259,7 +264,9 @@ class WallClockRule(LintRule):
     id = "wallclock-in-virtual-clock"
     doc = "wall-clock read or unseeded RNG in a virtual-clock module"
 
-    SCOPE_PREFIX = "src/repro/sched/"
+    # obs/ records MODELED time only — a wall-clock read there would stamp
+    # host time onto the virtual timeline and break byte-stable traces
+    SCOPE_PREFIX = ("src/repro/sched/", "src/repro/obs/")
     WALL = frozenset({"time.time", "time.time_ns", "time.perf_counter",
                       "time.perf_counter_ns", "time.monotonic",
                       "time.monotonic_ns", "datetime.now",
@@ -506,4 +513,65 @@ class UnrefcountedAliasRule(LintRule):
                     "snapshot scatter without a fork-table refcount call in "
                     "the same function; a forked alias may share this row — "
                     "CoW-detach via write_break() before writing"))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# rule 8: tracer spans close where they open
+# ---------------------------------------------------------------------------
+
+@register_rule
+class UnclosedSpanRule(LintRule):
+    """A span opened with ``begin_span`` and never closed stays on its
+    lane's stack forever: every later span on that lane silently nests
+    under it, its duration covers the rest of the run, and the trace's
+    parent/child additivity contract (tests/test_obs.py) breaks without an
+    error.  So the pairing is STRUCTURAL, like ``unrefcounted-alias``'s
+    scatter/refcount pairing: a function that calls ``begin_span`` must
+    also call ``end_span`` (on any span) in the same function — or use the
+    ``span()`` context manager, which cannot leak.  ``emit`` / ``instant``
+    / ``move_span`` are self-closing and need no pairing."""
+
+    id = "unclosed-span"
+    doc = ("begin_span with no end_span in the same function; use the "
+           "span() context manager or close where you open")
+
+    OPENER = "begin_span"
+    CLOSER = "end_span"
+
+    def applies_to(self, relpath: str) -> bool:
+        # everywhere the tracer may be driven; obs/tracer.py itself defines
+        # the pairing (span()/emit/move_span all open AND close)
+        return relpath.startswith("src/repro/") or \
+            relpath.startswith("benchmarks/")
+
+    def check(self, tree, relpath, source):
+        rule = self
+        findings: List[Finding] = []
+
+        class V(_FuncStackVisitor):
+            def __init__(self):
+                super().__init__()
+                self.opens: List[Tuple[Tuple[str, ...], ast.Call]] = []
+                self.closed: Set[Tuple[str, ...]] = set()
+
+            def visit_Call(self, node):
+                name = dotted_name(node.func)
+                leaf = name.split(".")[-1] if name else ""
+                key = tuple(self.stack)
+                if leaf == rule.OPENER:
+                    self.opens.append((key, node))
+                elif leaf == rule.CLOSER:
+                    self.closed.add(key)
+                self.generic_visit(node)
+
+        v = V()
+        v.visit(tree)
+        for key, node in v.opens:
+            if key not in v.closed:
+                findings.append(rule.finding(
+                    relpath, node,
+                    "begin_span() with no end_span() in the same function "
+                    "leaves the span open on its lane (all later spans nest "
+                    "under it); use tracer.span() or close here"))
         return findings

@@ -124,6 +124,12 @@ def main(argv=None) -> dict:
                    help="A/B arm for --fork-prefix: prepend the same shared "
                         "prefix to every prompt and prefill it per session "
                         "(no aliasing)")
+    p.add_argument("--trace-out", default=None, metavar="PATH",
+                   help="record the run's virtual-clock span trace and "
+                        "write it as Chrome trace_events JSON (open in "
+                        "Perfetto); composes with every chaos/fork flag — "
+                        "fault incidents, retries, snapshots, forks and "
+                        "CoW breaks all appear as spans")
     args = p.parse_args(argv)
 
     wl_prompt_lens = (6, 8, 10, 12)
@@ -211,6 +217,12 @@ def main(argv=None) -> dict:
             rate=args.fault_rate,
             seed=args.seed if args.fault_seed is None else args.fault_seed,
             recover=not args.no_recovery))
+    tracer = None
+    if args.trace_out:
+        from repro import movement as MV
+        from repro.obs import Tracer
+        tracer = Tracer()
+        MV.set_tracer(tracer)       # host-side plan executes -> exec marks
     if args.replicas > 1:
         cluster = Cluster(cfg, params, n_replicas=args.replicas,
                           slots=args.slots, max_len=args.max_len,
@@ -219,12 +231,14 @@ def main(argv=None) -> dict:
                                    arrivals=arrivals,
                                    migrate=not args.no_migrate,
                                    snapshot_every=(args.snapshot_every
-                                                   if injector else 0))
+                                                   if injector else 0),
+                                   tracer=tracer)
         eng = cluster
     else:
         engine = Engine(cfg, params, slots=args.slots, max_len=args.max_len,
                         n_sessions=n_sessions)
-        s = sched.Scheduler(engine, policy=policy, arrivals=arrivals)
+        s = sched.Scheduler(engine, policy=policy, arrivals=arrivals,
+                            tracer=tracer)
         eng = engine
 
     if fork_template_uid is not None:
@@ -279,6 +293,22 @@ def main(argv=None) -> dict:
         out["fault_ledger"] = injector.summary()
         out["verify_failed"] = eng.verify_failure_count()
         out["at_rest_corrupt"] = int(eng.scrub())
+    if tracer is not None:
+        from repro import movement as MV
+        from repro.obs import write_chrome_trace
+        MV.set_tracer(None)         # don't leak into later runs in-process
+        write_chrome_trace(tracer, args.trace_out)
+        roll = tracer.rollup()
+        # replaces the summary's rollup-only "trace" key with the launcher
+        # digest: per-phase span counts, per-leg ns split, top-5 spans
+        out["trace"] = {
+            "spans": roll["spans"],
+            "per_phase": {k: v["count"]
+                          for k, v in roll["per_phase"].items()},
+            "legs": roll["legs"],
+            "top_spans_ns": tracer.top_spans(5),
+            "chrome_trace": args.trace_out,
+        }
     print(json.dumps(out, allow_nan=False))
     return out
 

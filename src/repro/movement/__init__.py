@@ -39,6 +39,7 @@ from repro.movement.plan import (
     Transfer,
     UnpackLeg,
     fuse,
+    leg_costs,
     plan,
     retry_cost,
     ring_plan,
@@ -49,6 +50,7 @@ from repro.movement.registry import (
     execute,
     get_backend,
     register_backend,
+    set_tracer,
     unwrap_backend,
     wrap_backend,
     wrapped_kinds,
@@ -62,7 +64,7 @@ __all__ = [
     "PackLeg", "UnpackLeg", "PageAliasLeg", "PageGatherLeg",
     "PageScatterLeg",
     "TierReadLeg", "TierWriteLeg", "TileCopyLeg", "HopChainLeg",
-    "HostStageLeg", "plan", "ring_plan", "fuse", "retry_cost",
+    "HostStageLeg", "plan", "ring_plan", "fuse", "retry_cost", "leg_costs",
     "Env", "register_backend", "get_backend", "backend_kinds", "execute",
-    "wrap_backend", "unwrap_backend", "wrapped_kinds",
+    "wrap_backend", "unwrap_backend", "wrapped_kinds", "set_tracer",
 ]

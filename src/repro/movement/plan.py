@@ -342,6 +342,18 @@ def _sum_costs(costs: Sequence[MovementCost]) -> MovementCost:
         uj_memcpy=sum(c.uj_memcpy for c in costs))
 
 
+def leg_costs(plan: "MovementPlan",
+              spec: DramSpec = DDR3_1600) -> Tuple[MovementCost, ...]:
+    """Per-leg :class:`MovementCost` breakdown of ``plan`` under ``spec``.
+
+    This re-runs the exact ``_price_leg`` arithmetic that produced
+    ``plan.cost`` (same spec, same order), so a left-to-right sum over the
+    returned tuple reproduces the plan total bit-for-bit — the contract the
+    observability layer's per-leg span attribution relies on.
+    """
+    return tuple(_price_leg(leg, spec) for leg in plan.legs)
+
+
 class MovementPlan(NamedTuple):
     """A lowered transfer: typed legs + the priced cost.  Execute with
     :func:`repro.movement.registry.execute`."""

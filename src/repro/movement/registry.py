@@ -105,6 +105,30 @@ def wrapped_kinds() -> Tuple[str, ...]:
     return tuple(sorted(_WRAPPED))
 
 
+# Optional execution tracing (repro.obs): when a tracer is installed,
+# host-side executes mark each leg as an instant on the tracer's current
+# lane cursor (cat="exec").  Pricing spans stay the scheduler's job — exec
+# marks record WHICH backends actually ran, so plan-vs-execution drift is
+# visible in the same timeline.  Under an active jax trace (execute
+# composing inside jit) nothing is recorded: a span per compile would
+# misattribute one-time tracing work as steady-state movement.
+_TRACER: Any = None
+
+
+def set_tracer(tracer: Any) -> None:
+    """Install (or with ``None`` remove) the execution tracer."""
+    global _TRACER
+    _TRACER = tracer
+
+
+def _tracing_clean() -> bool:
+    try:
+        from jax.core import trace_state_clean
+        return trace_state_clean()
+    except ImportError:                          # pragma: no cover - version
+        return False
+
+
 def execute(plan: MovementPlan, env: Env | None = None, **operands) -> Env:
     """Run every leg of ``plan`` through its registered backend.
 
@@ -115,6 +139,13 @@ def execute(plan: MovementPlan, env: Env | None = None, **operands) -> Env:
     """
     env = dict(env or {})
     env.update(operands)
+    tr = _TRACER
+    mark = (tr is not None and getattr(tr, "enabled", False)
+            and _tracing_clean())
     for leg in plan.legs:
+        if mark:
+            tr.instant(leg.kind, cat="exec",
+                       attrs={"nbytes": leg.nbytes, "batch": leg.batch,
+                              "hops": leg.hops})
         env = get_backend(leg.kind)(leg, env)
     return env

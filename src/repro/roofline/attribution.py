@@ -62,7 +62,8 @@ def attribute(hlo_text: str, top: int = 20) -> Dict[str, float]:
 
 
 def main() -> None:
-    txt = open(sys.argv[1]).read()
+    with open(sys.argv[1]) as f:
+        txt = f.read()
     for k, v in attribute(txt).items():
         print(f"{v:.3e}  {k[:150]}")
 

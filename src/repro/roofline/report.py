@@ -8,7 +8,7 @@ import argparse
 import glob
 import json
 import os
-from collections import defaultdict
+import sys
 
 NOTE = {
     # one sentence per (dominant term) on what would move it down
@@ -24,9 +24,22 @@ NOTE = {
 
 
 def load(dir_: str, variant: str = "baseline"):
+    """Collect the ok dry-run cells.  Files open under a context manager
+    (the old ``json.load(open(f))`` leaked the handle until GC), and a
+    cell that fails to parse is SKIPPED with a warning rather than taking
+    the whole report down — one corrupt artifact should cost one row."""
     cells = []
     for f in sorted(glob.glob(os.path.join(dir_, f"*_{variant}.json"))):
-        a = json.load(open(f))
+        try:
+            with open(f) as fh:
+                a = json.load(fh)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"report: skipping {f}: {e}", file=sys.stderr)
+            continue
+        if not isinstance(a, dict):
+            print(f"report: skipping {f}: not a JSON object",
+                  file=sys.stderr)
+            continue
         if a.get("status") == "ok":
             cells.append(a)
     return cells
@@ -92,8 +105,17 @@ def main():
     p.add_argument("--what", default="roofline",
                    choices=["roofline", "dryrun", "pick"])
     p.add_argument("--mesh", default="single")
+    p.add_argument("--json", default=None, metavar="PATH",
+                   help="also write the loaded cells as strict JSON")
     args = p.parse_args()
     cells = load(args.dir, args.variant)
+    if args.json:
+        # strict JSON: a NaN in any cell fails HERE, not in a consumer
+        with open(args.json, "w") as fh:
+            json.dump({"schema": "dryrun-cells/v1", "n": len(cells),
+                       "cells": cells}, fh, indent=2, sort_keys=True,
+                      allow_nan=False)
+            fh.write("\n")
     if args.what == "roofline":
         print(fmt_table(cells, args.mesh))
     elif args.what == "dryrun":

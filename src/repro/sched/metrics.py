@@ -83,6 +83,10 @@ class Metrics:
         self._replica_occ: List[List[float]] = []   # cluster runs only
         self._faults: Dict[str, int] = {}
         self._fault_class: Dict[int, Dict[str, int]] = {}
+        # the tracer's per-phase/per-leg rollup (repro.obs); set by the
+        # scheduler at the end of a traced run, None on untraced runs so
+        # untraced summaries are byte-identical to pre-obs output
+        self.trace: Optional[Dict[str, object]] = None
 
     # ---- recording --------------------------------------------------------
     def record_job(self, rec: JobRecord) -> None:
@@ -204,4 +208,6 @@ class Metrics:
                 round(sum(t[r] for t in self._replica_occ)
                       / len(self._replica_occ), 4) for r in range(n_rep)]
             out["migration"] = self.migration_summary()
+        if self.trace is not None:      # traced run: span rollup
+            out["trace"] = self.trace
         return out

@@ -41,6 +41,7 @@ from repro import movement as MV
 from repro.faults.recover import (repair_row, restore_session,
                                   snapshot_sessions)
 from repro.faults.spec import FaultInjector
+from repro.obs import NULL_TRACER
 from repro.sched.metrics import Decision, JobRecord, Metrics
 from repro.sched.policy import (AdmitCand, PlaceCand, SchedContext,
                                 SchedPolicy, VictimCand, get_policy)
@@ -99,7 +100,7 @@ class Scheduler:
 
     def __init__(self, engine: Engine, policy="cost_aware",
                  arrivals: Sequence[Arrival] = (),
-                 cfg: SchedConfig = SchedConfig()):
+                 cfg: SchedConfig = SchedConfig(), *, tracer=None):
         self.eng = engine
         self.policy: SchedPolicy = get_policy(policy)
         self.cfg = cfg
@@ -107,6 +108,15 @@ class Scheduler:
         self.metrics = Metrics()
         self.tick_count = 0
         self.now_ns = 0.0
+        # span tracing (repro.obs): host bookkeeping on the virtual clock.
+        # NULL_TRACER makes every trace call a no-op, so untraced runs pay
+        # nothing and traced runs change no scheduling decision or charge.
+        self.trace = tracer if tracer is not None else NULL_TRACER
+        if self.trace.enabled:
+            for lane in range(self._trace_lanes()):
+                self.trace.seek(lane, 0.0)       # pre-seed lane cursors
+            if hasattr(engine, "attach_tracer"):
+                engine.attach_tracer(self.trace)
         self._arrivals: List[Arrival] = sorted(arrivals,
                                                key=lambda a: (a.t_ns, a.uid))
         self._arrival_keys: List[Tuple[float, int]] = [
@@ -195,20 +205,66 @@ class Scheduler:
         return self.cfg.prefill_ns_per_token * len(e.prompt)
 
     def _charge_wave(self, kind: str, moves: Sequence[bool],
-                     direction: str) -> float:
+                     direction: str,
+                     lanes: Optional[Sequence[int]] = None) -> float:
         """Record one fused wave of session moves as ONE decision (both
-        mechanisms) and return the active-mechanism ns for the clock."""
+        mechanisms) and return the active-mechanism ns for the clock.
+        ``lanes`` optionally names the trace lane of each move (cluster
+        waves land on per-replica lanes); default: the scheduler lane."""
         if not moves:
             return 0.0
         tot = [0.0, 0.0, 0.0, 0.0]
+        costs = []
         for resident in moves:
-            for i, v in enumerate(self._move_cost(direction, resident)):
+            mc = self._move_cost(direction, resident)
+            costs.append(mc)
+            for i, v in enumerate(mc):
                 tot[i] += v
         self.metrics.record_decision(Decision(
             tick=self.tick_count, kind=kind, n_items=len(moves),
             ns_lisa=tot[0], ns_memcpy=tot[1], uj_lisa=tot[2],
             uj_memcpy=tot[3]))
+        if self.trace.enabled:
+            self._trace_moves(kind, direction, moves, costs, lanes,
+                              len(self.metrics.decisions) - 1)
         return tot[0] if self.cfg.mechanism == "lisa" else tot[1]
+
+    def _trace_lanes(self) -> int:
+        """Lane count: scheduler lane only, or (cluster) one per replica
+        plus the write-behind lane."""
+        n = getattr(self.eng, "n_replicas", 0)
+        return n + 2 if n else 1
+
+    def _trace_moves(self, kind: str, direction: str,
+                     moves: Sequence[bool],
+                     costs: Sequence[Tuple[float, float, float, float]],
+                     lanes: Optional[Sequence[int]],
+                     dec_index: int) -> None:
+        """One trace span per charged move, with a child span per plan leg.
+
+        The move attrs carry the SAME occupancy-scaled cost tuple the
+        Decision ledger accumulated (``costs`` — not recomputed); leg attrs
+        partition it exactly (``Tracer.move_span`` residual-corrects the
+        last leg), and ``dec_index`` names the owning Decision, so per-leg
+        sums grouped by decision reproduce ``Metrics.movement_totals()``
+        bit-for-bit (``tests/test_obs.py``)."""
+        plan = (self.eng.plan_resume if direction == "resume"
+                else self.eng.plan_suspend)
+        legs = MV.leg_costs(plan, self.eng.spec)
+        for i, (resident, mc) in enumerate(zip(moves, costs)):
+            if direction == "resume":
+                f = self.fast_ratio if resident else 1.0
+            else:
+                f = 1.0 + (self.fast_ratio if resident else 0.0)
+            items = [(leg.kind,
+                      (lc.ns_lisa * f, lc.ns_memcpy * f,
+                       lc.uj_lisa * f, lc.uj_memcpy * f),
+                      {"bytes": lc.bytes, "hops": lc.hops})
+                     for leg, lc in zip(plan.legs, legs)]
+            self.trace.move_span(
+                kind, lanes[i] if lanes else 0, mc, items,
+                attrs={"direction": direction, "decision": dec_index,
+                       "fast_resident": bool(resident)})
 
     # ---- the tick ---------------------------------------------------------
     def tick(self) -> None:
@@ -225,15 +281,26 @@ class Scheduler:
                               self._arrivals[self._next_arrival].t_ns)
         self._admit_arrivals()
         self.metrics.record_tick(len(self.eng.active), self.eng.slots)
+        tr = self.trace
+        tr.seek_all(self.now_ns)
+        tick_sp = tr.begin_span("tick", lane=0, cat="tick",
+                                attrs={"tick": self.tick_count,
+                                       "queued": len(self.queue)})
 
         # 1. the tick's ONE fused decode dispatch (async — device decodes
         #    while the host plans; the LIP-linked-precharge analogue)
         handle = self.eng.step_begin()
         decoded = handle is not None
+        if decoded:
+            tr.emit("decode", self.cfg.decode_ns, lane=0, cat="decode",
+                    attrs={"n_active": len(self.eng.active)})
 
         # 2. overlapped wave preparation against pre-step state
         fast_uids = self.eng.fast_resident_uids()
         wave = self._prepare_wave(fast_uids)
+        tr.instant("plan", lane=0, cat="plan",
+                   attrs={"victims": len(wave.victims),
+                          "placements": len(wave.placements)})
 
         # 3. sync; the engine auto-suspends completed bursts as ONE wave
         completed = self.eng.step_end(handle)
@@ -252,6 +319,7 @@ class Scheduler:
 
         # 4. execute the prepared wave
         self.now_ns += self._execute_wave(wave, fast_uids)
+        tr.end_span(tick_sp, t1_ns=max(self.now_ns, tr.now(0)))
 
     def run(self, max_ticks: int = 200_000) -> Dict[str, object]:
         while self.pending():
@@ -261,6 +329,8 @@ class Scheduler:
                 raise RuntimeError(
                     f"scheduler failed to drain within {max_ticks} ticks "
                     f"(queue={len(self.queue)}, active={len(self.eng.active)})")
+        if self.trace.enabled:
+            self.metrics.trace = self.trace.rollup()
         return self.metrics.summary()
 
     def _check_progress(self) -> None:
@@ -435,6 +505,10 @@ class Scheduler:
                           slo_ns=e.slo_ns)
             slot = self.eng.submit(req)
             advance += self.cfg.prefill_ns_per_token * len(e.prompt)
+            self.trace.emit(
+                "prefill", self.cfg.prefill_ns_per_token * len(e.prompt),
+                lane=0, cat="prefill",
+                attrs={"uid": e.uid, "prompt_tokens": len(e.prompt)})
             self.metrics.record_decision(Decision(
                 tick=self.tick_count, kind="submit", n_items=1))
             if slot in self.eng.active:
@@ -510,9 +584,12 @@ class ClusterScheduler(Scheduler):
                  arrivals: Sequence[Arrival] = (),
                  cfg: SchedConfig = SchedConfig(), *, migrate: bool = True,
                  faults: Optional[FaultInjector] = None,
-                 snapshot_every: int = 0):
-        super().__init__(cluster, policy=policy, arrivals=arrivals, cfg=cfg)
+                 snapshot_every: int = 0, tracer=None):
+        super().__init__(cluster, policy=policy, arrivals=arrivals, cfg=cfg,
+                         tracer=tracer)
         self.cluster = cluster
+        # trace lanes: 0 = scheduler, 1+r = replica r, last = write-behind
+        self._wb_lane = cluster.n_replicas + 1
         self.migrate = migrate
         if snapshot_every < 0:
             raise ValueError(f"snapshot_every must be >= 0, "
@@ -538,14 +615,29 @@ class ClusterScheduler(Scheduler):
             len(self.eng.active), self.eng.slots,
             per_replica=[len(e.active) / e.slots
                          for e in self.cluster.replicas])
+        tr = self.trace
+        tr.seek_all(self.now_ns)
+        tick_sp = tr.begin_span("tick", lane=0, cat="tick",
+                                attrs={"tick": self.tick_count,
+                                       "queued": len(self.queue)})
 
         # 1. ONE fused decode dispatch per replica, all in flight at once
         handle = self.eng.step_begin()
         decoded = handle is not None
+        if decoded:
+            tr.emit("decode", self.cfg.decode_ns, lane=0, cat="decode",
+                    attrs={"n_active": len(self.eng.active)})
+            if tr.enabled:
+                # replica movement lanes start after the concurrent decode
+                for r in range(self.cluster.n_replicas):
+                    tr.seek(1 + r, tr.now(0))
 
         # 2. overlapped wave preparation against pre-step state
         fast_uids = self.eng.fast_resident_uids()
         wave = self._prepare_wave(fast_uids)
+        tr.instant("plan", lane=0, cat="plan",
+                   attrs={"victims": len(wave.victims),
+                          "placements": len(wave.placements)})
 
         # 3. sync; completed bursts auto-suspend per replica (fused waves)
         completed = self.eng.step_end(handle)
@@ -553,7 +645,9 @@ class ClusterScheduler(Scheduler):
         if completed:
             flags = [self._slot_job[s].uid in fast_uids
                      for s, _ in completed]
-            self._charge_wave("complete_suspend", flags, "suspend")
+            self._charge_wave("complete_suspend", flags, "suspend",
+                              lanes=[self.cluster.replica_of(s) + 1
+                                     for s, _ in completed])
             lanes: Dict[int, float] = {}
             for (s, _), f in zip(completed, flags):
                 r = self.cluster.replica_of(s)
@@ -567,6 +661,7 @@ class ClusterScheduler(Scheduler):
 
         # 4. execute the prepared wave
         self.now_ns += self._execute_wave(wave, fast_uids)
+        tr.end_span(tick_sp, t1_ns=max(self.now_ns, tr.now(0)))
 
     # ---- chaos: injection, snapshots, replica recovery --------------------
     def _mech_ns(self, c: MV.MovementCost) -> float:
@@ -628,13 +723,26 @@ class ClusterScheduler(Scheduler):
                     n_items=len(snaps), ns_lisa=cost.ns_lisa,
                     ns_memcpy=cost.ns_memcpy, uj_lisa=cost.uj_lisa,
                     uj_memcpy=cost.uj_memcpy))
+                if self.trace.enabled:
+                    cs = (cost.ns_lisa, cost.ns_memcpy,
+                          cost.uj_lisa, cost.uj_memcpy)
+                    self.trace.move_span(
+                        "snapshot_wave", self._wb_lane, cs,
+                        [("snapshot", cs, {"bytes": cost.bytes})],
+                        attrs={"n": len(snaps), "clock_charged": False,
+                               "decision":
+                                   len(self.metrics.decisions) - 1})
         if inj is None:
             return
         for r in inj.replica_failures_at(self.tick_count):
+            self.trace.instant("replica_failure", lane=r + 1, cat="fault",
+                               attrs={"replica": r})
             self._handle_replica_failure(r)
         for r in inj.degrade_at(self.tick_count):
             cl.degrade_fast(r)
             self.metrics.record_fault("degraded")
+            self.trace.instant("fast_degraded", lane=r + 1, cat="fault",
+                               attrs={"replica": r})
         # at-rest corruption: one seeded draw per tick over the suspended,
         # not-yet-corrupt sessions (deterministic candidate order).  An
         # ACTIVE session's store row is a stale copy the next suspend
@@ -662,6 +770,10 @@ class ClusterScheduler(Scheduler):
                 eng.corrupt_stored(eng.forks.resolve(uid), page, byte, xor)
                 inj.note_corrupt(uid)
                 self.metrics.record_fault("injected", self._class_of(uid))
+                self.trace.instant(
+                    "fault_injected", lane=cl.residence[uid] + 1,
+                    cat="fault", attrs={"uid": uid, "page": int(page),
+                                        "byte": int(byte)})
 
     def _family(self, uid: int) -> Tuple[int, ...]:
         """Every uid aliasing ``uid``'s physical store row on its home
@@ -714,6 +826,16 @@ class ClusterScheduler(Scheduler):
             for i, v in enumerate((c.ns_lisa, c.ns_memcpy,
                                    c.uj_lisa, c.uj_memcpy)):
                 tot[i] += v
+            if self.trace.enabled:
+                cs = (c.ns_lisa, c.ns_memcpy, c.uj_lisa, c.uj_memcpy)
+                # the recover_wave Decision is recorded AFTER the restores
+                # (its index is the CURRENT ledger length); nothing in
+                # between records a decision
+                self.trace.move_span(
+                    "recover_wave", target + 1, cs,
+                    [("restore", cs, {"bytes": c.bytes, "uid": uid})],
+                    attrs={"direction": "restore",
+                           "decision": len(self.metrics.decisions)})
             return True
 
         # owners before aliases: an aliased snapshot restores by
@@ -924,7 +1046,8 @@ class ClusterScheduler(Scheduler):
             cl.suspend_many(victims)        # one fused dispatch per replica
             self._charge_wave("preempt_suspend",
                               [j.uid in fast_uids for j in requeue],
-                              "suspend")
+                              "suspend",
+                              lanes=[cl.replica_of(g) + 1 for g in victims])
             for g, job in zip(victims, requeue):
                 lanes[cl.replica_of(g)] += self._move_ns(
                     "suspend", job.uid in fast_uids)
@@ -998,6 +1121,14 @@ class ClusterScheduler(Scheduler):
                         n_items=len(marked), ns_lisa=rc.ns_lisa,
                         ns_memcpy=rc.ns_memcpy, uj_lisa=rc.uj_lisa,
                         uj_memcpy=rc.uj_memcpy))
+                    if self.trace.enabled:
+                        cs = (rc.ns_lisa, rc.ns_memcpy,
+                              rc.uj_lisa, rc.uj_memcpy)
+                        self.trace.move_span(
+                            "recover_wave", home + 1, cs,
+                            [("restore", cs, {"uid": uid})],
+                            attrs={"direction": "repair", "decision":
+                                   len(self.metrics.decisions) - 1})
                     for f in marked:
                         inj.consume_corrupt(f, "recovered")
                         self.metrics.record_fault("recovered",
@@ -1020,7 +1151,8 @@ class ClusterScheduler(Scheduler):
                 tot = [0.0, 0.0, 0.0, 0.0]
                 for c, t in migs:
                     src = homes[c.entry.uid]
-                    mc = cl.migration_plan(src, t).cost
+                    mplan = cl.migration_plan(src, t)
+                    mc = mplan.cost
                     ns = (mc.ns_lisa if self.cfg.mechanism == "lisa"
                           else mc.ns_memcpy)
                     # the inbound replica waits for the hop chain; the
@@ -1031,6 +1163,23 @@ class ClusterScheduler(Scheduler):
                                            mc.uj_lisa, mc.uj_memcpy)):
                         tot[i] += v
                     self._jobs[c.entry.job_id].migrations += 1
+                    if self.trace.enabled:
+                        items = [(leg.kind,
+                                  (lc.ns_lisa, lc.ns_memcpy,
+                                   lc.uj_lisa, lc.uj_memcpy),
+                                  {"bytes": lc.bytes, "hops": lc.hops})
+                                 for leg, lc in zip(
+                                     mplan.legs,
+                                     MV.leg_costs(mplan, cl.spec))]
+                        # the migrate_wave Decision lands after the loop,
+                        # at the CURRENT ledger length
+                        self.trace.move_span(
+                            "migrate_wave", t + 1,
+                            (mc.ns_lisa, mc.ns_memcpy,
+                             mc.uj_lisa, mc.uj_memcpy), items,
+                            attrs={"uid": c.entry.uid,
+                                   "src": src, "dst": t, "decision":
+                                   len(self.metrics.decisions)})
                 self.metrics.record_decision(Decision(
                     tick=self.tick_count, kind="migrate_wave",
                     n_items=len(migs), ns_lisa=tot[0], ns_memcpy=tot[1],
@@ -1041,7 +1190,8 @@ class ClusterScheduler(Scheduler):
                 self._activate(c.entry, slot, seed_tokens=1)
             flags = [c.fast_resident and homes[c.entry.uid] == t
                      for c, t in zip(ready, rtargets)]
-            self._charge_wave("resume_wave", flags, "resume")
+            self._charge_wave("resume_wave", flags, "resume",
+                              lanes=[t + 1 for t in rtargets])
             for t, f in zip(rtargets, flags):
                 lanes[t] += self._move_ns("resume", f)
             if inj is not None:
@@ -1062,6 +1212,34 @@ class ClusterScheduler(Scheduler):
                             ns_memcpy=rc.ns_memcpy, uj_lisa=rc.uj_lisa,
                             uj_memcpy=rc.uj_memcpy))
                         self.metrics.record_fault("retries", n=retries)
+                        if self.trace.enabled:
+                            bplan = cl.migration_plan(ev["src"], ev["dst"],
+                                                      ev["k"])
+                            items = [(leg.kind,
+                                      (lc.ns_lisa * retries,
+                                       lc.ns_memcpy * retries,
+                                       lc.uj_lisa * retries,
+                                       lc.uj_memcpy * retries),
+                                      {"bytes": lc.bytes * retries,
+                                       "hops": lc.hops})
+                                     for leg, lc in zip(
+                                         bplan.legs,
+                                         MV.leg_costs(bplan, cl.spec))]
+                            # trailing backoff leg: mechanism-independent
+                            # wait; move_span's residual prices it exactly
+                            items.append(("backoff", (0.0, 0.0, 0.0, 0.0),
+                                          {"bytes": 0, "hops": 0}))
+                            self.trace.move_span(
+                                "retry_wave", ev["dst"] + 1,
+                                (rc.ns_lisa, rc.ns_memcpy,
+                                 rc.uj_lisa, rc.uj_memcpy), items,
+                                attrs={"retries": retries,
+                                       "src": ev["src"], "dst": ev["dst"],
+                                       "backoff_ns":
+                                           float(ev["backoff_ns"]),
+                                       "decision":
+                                           len(self.metrics.decisions)
+                                           - 1})
                     uid = ev["corrupt_uid"]
                     if uid is not None:
                         # landed corrupt (retries exhausted or recovery
@@ -1084,6 +1262,10 @@ class ClusterScheduler(Scheduler):
                           slo_ns=e.slo_ns)
             gslot = cl.submit(req, replica=t)
             lanes[t] += self.cfg.prefill_ns_per_token * len(e.prompt)
+            self.trace.emit(
+                "prefill", self.cfg.prefill_ns_per_token * len(e.prompt),
+                lane=t + 1, cat="prefill",
+                attrs={"uid": e.uid, "prompt_tokens": len(e.prompt)})
             self.metrics.record_decision(Decision(
                 tick=self.tick_count, kind="submit", n_items=1))
             if gslot in self.eng.active:
@@ -1092,7 +1274,8 @@ class ClusterScheduler(Scheduler):
                 self.queue.remove(e)
                 job.done += len(req.generated)
                 self._charge_wave("complete_suspend",
-                                  [job.uid in fast_uids], "suspend")
+                                  [job.uid in fast_uids], "suspend",
+                                  lanes=[t + 1])
                 lanes[t] += self._move_ns("suspend", job.uid in fast_uids)
                 self._complete_job(job, self.now_ns + max(lanes))
         return max(lanes) if lanes else 0.0

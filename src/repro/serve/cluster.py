@@ -116,6 +116,7 @@ class Cluster:
         self._route_plans: Dict[Tuple, MV.MovementPlan] = {}
         self._migrate_exec = None       # built lazily (n_replicas > 1 only)
         self._fault_events: List[Dict[str, object]] = []
+        self.tracer = None              # set by attach_tracer (repro.obs)
 
     # ---- global slot ids ---------------------------------------------------
     def _gslot(self, replica: int, slot: int) -> int:
@@ -156,6 +157,14 @@ class Cluster:
             for k, v in eng.stats.items():
                 out[k] = out.get(k, 0) + v
         return out
+
+    def attach_tracer(self, tracer) -> None:
+        """Attach a :class:`repro.obs.Tracer` fleet-wide: replica ``r``'s
+        session lifecycle events land on trace lane ``1 + r`` (the
+        scheduler's per-replica lane convention)."""
+        self.tracer = tracer
+        for r, eng in enumerate(self.replicas):
+            eng.attach_tracer(tracer, lane=1 + r)
 
     def fast_resident_uids(self) -> frozenset:
         out: set = set()

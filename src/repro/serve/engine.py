@@ -187,6 +187,19 @@ class Engine:
                       "forks": 0, "bytes_not_copied": 0,
                       "modeled_move_ns_lisa": 0.0,
                       "modeled_move_ns_memcpy": 0.0}
+        # observability (repro.obs): fork/CoW/demotion/eviction events are
+        # marked as trace instants when a tracer is attached — host
+        # bookkeeping only, zero device dispatches
+        self.tracer = None
+        self.trace_lane = 0
+
+    def attach_tracer(self, tracer, lane: Optional[int] = None) -> None:
+        """Attach a :class:`repro.obs.Tracer`; session lifecycle events
+        (fork / demotion / eviction) become instants on ``lane`` (the
+        scheduler's replica lane convention: ``1 + replica_id``; the
+        single-engine scheduler passes nothing and events share lane 0)."""
+        self.tracer = tracer
+        self.trace_lane = lane if lane is not None else 0
 
     # ---- jitted bodies (traced slot/store indices; donated buffers) -------
     def _prefill_insert(self, params, cache, tokens, positions, true_len,
@@ -431,6 +444,9 @@ class Engine:
         if old in self.forks and self.forks.resolve(old) == idx:
             self.forks.release(old)
         self.stats["evictions"] += 1
+        if self.tracer is not None:
+            self.tracer.instant("evict", lane=self.trace_lane, cat="fork",
+                                attrs={"uid": old, "row": idx})
 
     def _demote_row(self, src: int) -> None:
         """Migrate a SHARED row out of the way: device-clone its pages and
@@ -451,6 +467,12 @@ class Engine:
         self.store_uid[dst] = self.store_uid.pop(src)
         self.stats["demotions"] += 1
         self._charge_move(self.plan_demote)
+        if self.tracer is not None:
+            self.tracer.instant(
+                "cow_demote", lane=self.trace_lane, cat="fork",
+                attrs={"src_row": src, "dst_row": dst,
+                       "ns_lisa": self.plan_demote.cost.ns_lisa,
+                       "ns_memcpy": self.plan_demote.cost.ns_memcpy})
 
     def _own_row(self, uid: int, idx: int) -> None:
         """Post-write bookkeeping: a fresh uid binds its claimed row; any
@@ -724,6 +746,13 @@ class Engine:
         self._charge_move(fplan)
         self.stats["forks"] += len(child_uids)
         self.stats["bytes_not_copied"] += fplan.cost.bytes
+        if self.tracer is not None:
+            self.tracer.instant(
+                "fork", lane=self.trace_lane, cat="fork",
+                attrs={"parent": parent_uid, "children": len(child_uids),
+                       "bytes_not_copied": fplan.cost.bytes,
+                       "ns_lisa": fplan.cost.ns_lisa,
+                       "ns_memcpy": fplan.cost.ns_memcpy})
 
     def fork(self, parent_uid: int, child_uid: int,
              seed_token: Optional[int] = None) -> None:

@@ -1,0 +1,20 @@
+"""Planted ``unclosed-span`` violation: ``leaky`` opens a span and never
+closes it — every later span on the lane would nest under it.  The other
+two functions show the sanctioned shapes (context manager; paired close)
+and must stay clean."""
+
+
+def leaky(tracer):
+    s = tracer.begin_span("tick", lane=0, cat="tick")   # <- finding
+    return s
+
+
+def balanced(tracer):
+    s = tracer.begin_span("tick", lane=0, cat="tick")
+    tracer.end_span(s)
+    return s
+
+
+def managed(tracer):
+    with tracer.span("tick", lane=0, cat="tick") as s:
+        return s

@@ -45,6 +45,7 @@ PLANTED = [
     ("import_reg.py", "src/repro/movement/fixture.py",
      "import-time-registration"),
     ("unref_alias.py", "src/repro/serve/fixture.py", "unrefcounted-alias"),
+    ("unclosed_span.py", "src/repro/obs/fixture.py", "unclosed-span"),
 ]
 
 
@@ -80,6 +81,15 @@ def test_host_sync_sanctioned_functions_are_structural():
 def test_host_sync_out_of_scope_module_is_clean():
     src = "def f(x):\n    return x.item()\n"
     assert lint_file("src/repro/roofline/hlo.py", src) == []
+
+
+def test_wallclock_rule_covers_obs_package():
+    """The tracer records MODELED ns only; a wall-clock read under obs/
+    would stamp host time onto the virtual timeline."""
+    src = "import time\n\n\ndef stamp():\n    return time.time()\n"
+    findings = lint_file("src/repro/obs/clock.py", src)
+    assert [f.rule for f in findings] == ["wallclock-in-virtual-clock"]
+    assert lint_file("src/repro/roofline/clock.py", src) == []
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,333 @@
+"""One observable timeline: the virtual-clock span tracer (repro.obs).
+
+The contracts pinned here:
+  * the span tree is well-formed — children sit inside their parent's
+    modeled-ns interval on the same lane, and siblings on a lane never
+    overlap (per-lane cursors are monotone);
+  * the Chrome-trace export is BYTE-stable across two identical seeded
+    runs (traces are artifacts, diffs must mean something);
+  * tracing performs zero device dispatches and changes no scheduling
+    decision (host bookkeeping only);
+  * movement-leg spans partition the Decision ledger exactly: legs sum to
+    their move, moves sum to their decision, decisions sum to
+    ``Metrics.movement_totals()`` — bit-for-bit, all four cost fields;
+  * fault/retry spans agree with the chaos ledger's incident counters;
+  * the committed ``ROOFLINE_REPORT.json`` covers every audited entry
+    point with positive traffic and a kernel attribution.
+"""
+import json
+import os
+import sys
+
+import jax
+import pytest
+
+from repro import sched
+from repro.analysis import testlib as TL
+from repro.analysis.lint import find_repo_root
+from repro.configs import get_reduced
+from repro.faults import FaultInjector, FaultSpec
+from repro.models import lm
+from repro.obs import NULL_TRACER, Span, Tracer, chrome_trace, trace_events
+from repro.serve.cluster import Cluster
+from repro.serve.engine import Engine
+
+FIELDS = ("ns_lisa", "ns_memcpy", "uj_lisa", "uj_memcpy")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_reduced("tinyllama-1.1b")
+    return cfg, lm.init_lm(cfg, jax.random.key(0))
+
+
+def _wl():
+    return sched.WorkloadConfig(n_fresh=4, n_followups=8,
+                                mean_gap_ns=1500.0, arrival="bursty",
+                                burst=2)
+
+
+def _base_run(cfg, params, traced=True):
+    wl = _wl()
+    arrivals = sched.generate_workload(wl, seed=3,
+                                       vocab_size=cfg.vocab_size)
+    eng = Engine(cfg, params, slots=2, max_len=48,
+                 n_sessions=sched.n_sessions_for(wl))
+    tr = Tracer() if traced else None
+    s = sched.Scheduler(eng, arrivals=arrivals, tracer=tr)
+    s.run()
+    return s, eng, tr
+
+
+def _cluster_run(cfg, params):
+    wl = _wl()
+    arrivals = sched.generate_workload(wl, seed=3,
+                                       vocab_size=cfg.vocab_size)
+    inj = FaultInjector(FaultSpec(rate=0.3, seed=11, max_retries=4,
+                                  replica_failures=((18, 1),)))
+    cl = Cluster(cfg, params, n_replicas=2, slots=2, max_len=48,
+                 n_sessions=sched.n_sessions_for(wl), faults=inj)
+    tr = Tracer()
+    s = sched.ClusterScheduler(cl, arrivals=arrivals, snapshot_every=4,
+                               tracer=tr)
+    s.run()
+    return s, cl, tr, inj
+
+
+@pytest.fixture(scope="module")
+def base_run(setup):
+    return _base_run(*setup)
+
+
+@pytest.fixture(scope="module")
+def cluster_run(setup):
+    return _cluster_run(*setup)
+
+
+# ---------------------------------------------------------------------------
+# tracer unit behavior
+# ---------------------------------------------------------------------------
+
+def test_tracer_basic_nesting_and_cursor():
+    tr = Tracer()
+    with tr.span("tick", lane=0, cat="tick") as t:
+        d = tr.emit("decode", 1000.0, lane=0, cat="decode")
+    assert d.parent is t and t.parent is None
+    assert d.t0_ns == 0.0 and d.t1_ns == 1000.0
+    assert t.t1_ns >= d.t1_ns
+    assert tr.now(0) == 1000.0
+    tr.seek(0, 500.0)                       # monotone: never rewinds
+    assert tr.now(0) == 1000.0
+
+
+def test_end_span_enforces_innermost():
+    tr = Tracer()
+    outer = tr.begin_span("outer")
+    tr.begin_span("inner")
+    with pytest.raises(RuntimeError, match="innermost"):
+        tr.end_span(outer)
+
+
+def test_move_span_residual_makes_legs_sum_exact():
+    tr = Tracer()
+    totals = (0.3, 0.7, 0.1, 0.2)
+    # three legs whose naive sum would NOT hit the totals bit-for-bit
+    items = [("a", (0.1, 0.2, 0.03, 0.07), {}),
+             ("b", (0.1, 0.3, 0.04, 0.06), {}),
+             ("c", (0.1, 0.2, 0.03, 0.07), {})]
+    tr.move_span("resume_wave", 0, totals, items)
+    legs = [s for s in tr.spans if s.cat == "leg"]
+    for j, f in enumerate(FIELDS):
+        acc = 0.0
+        for l in legs:
+            acc += l.attrs[f]
+        assert acc == totals[j]
+
+
+def test_null_tracer_is_inert():
+    assert not NULL_TRACER.enabled
+    s = NULL_TRACER.begin_span("x")
+    assert NULL_TRACER.end_span(s) is s
+    NULL_TRACER.move_span("w", 0, (0, 0, 0, 0), [])
+    NULL_TRACER.seek_all(1e9)
+    assert NULL_TRACER.now(3) == 0.0
+    assert NULL_TRACER.rollup()["spans"] == 0
+    assert NULL_TRACER.spans == []
+
+
+# ---------------------------------------------------------------------------
+# span tree well-formedness
+# ---------------------------------------------------------------------------
+
+def _assert_tree_well_formed(tr: Tracer):
+    siblings = {}
+    for s in tr.spans:
+        if s.instant:
+            continue
+        if s.parent is not None:
+            assert s.lane == s.parent.lane, (s, s.parent)
+            assert s.parent.t0_ns <= s.t0_ns, (s, s.parent)
+            assert s.t1_ns <= s.parent.t1_ns, (s, s.parent)
+        key = (s.lane, s.parent.index if s.parent else None)
+        siblings.setdefault(key, []).append(s)
+    for key, group in siblings.items():
+        for prev, nxt in zip(group, group[1:]):
+            assert nxt.t0_ns >= prev.t1_ns, (key, prev, nxt)
+
+
+def test_span_tree_well_formed_base(base_run):
+    _, _, tr = base_run
+    assert len(tr.spans) > 0
+    _assert_tree_well_formed(tr)
+
+
+def test_span_tree_well_formed_cluster_lanes(cluster_run):
+    s, cl, tr, _ = cluster_run
+    _assert_tree_well_formed(tr)
+    # all lanes in use: scheduler, one per replica, write-behind
+    lanes = {sp.lane for sp in tr.spans}
+    assert lanes == set(range(cl.n_replicas + 2)), lanes
+    # replica movement lanes carry the priced waves, lane 0 the tick phases
+    assert all(sp.lane == 0 for sp in tr.spans if sp.cat == "tick")
+    assert all(sp.lane > 0 for sp in tr.spans if sp.cat == "move")
+
+
+# ---------------------------------------------------------------------------
+# byte-stable export
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_byte_stable_and_strict(setup, base_run, cluster_run):
+    def reject(const):
+        raise ValueError(f"non-strict JSON constant {const}")
+
+    _, _, tr1 = base_run
+    _, _, tr2 = _base_run(*setup)
+    b1, b2 = chrome_trace(tr1), chrome_trace(tr2)
+    assert b1 == b2                          # byte-identical, same seed
+    _, _, ctr1, _ = cluster_run
+    _, _, ctr2, _ = _cluster_run(*setup)
+    assert chrome_trace(ctr1) == chrome_trace(ctr2)
+
+    doc = json.loads(b1, parse_constant=reject)
+    evs = doc["traceEvents"]
+    assert isinstance(evs, list) and len(evs) > len(tr1.spans) - 1
+    assert doc["displayTimeUnit"] == "ns"
+    assert doc["otherData"]["clock"] == "modeled-virtual-ns"
+    for ev in evs:
+        assert ev["ph"] in ("X", "i", "M"), ev
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0
+    # metadata names every lane
+    names = [ev for ev in evs if ev["ph"] == "M"]
+    assert names and names[0]["args"]["name"] == "scheduler"
+
+
+def test_trace_events_match_span_count(base_run):
+    _, _, tr = base_run
+    evs = trace_events(tr)
+    meta = [e for e in evs if e["ph"] == "M"]
+    assert len(evs) == len(tr.spans) + len(meta)
+
+
+# ---------------------------------------------------------------------------
+# zero device work, zero schedule impact
+# ---------------------------------------------------------------------------
+
+def test_tracing_adds_zero_dispatches_and_changes_nothing(setup, base_run):
+    s_traced, eng_traced, _ = base_run
+    s_plain, eng_plain, _ = _base_run(*setup, traced=False)
+    # identical device-side story: tracing is host bookkeeping only
+    TL.assert_dispatch_delta(eng_plain.stats, eng_traced.stats,
+                             decode=0, host=0)
+    assert eng_plain.stats == eng_traced.stats
+    # identical schedule and identical bill
+    assert s_plain.metrics.movement_totals() == \
+        s_traced.metrics.movement_totals()
+    plain = s_plain.metrics.summary()
+    traced = s_traced.metrics.summary()
+    tr_block = traced.pop("trace")
+    assert "trace" not in plain              # untraced summaries unchanged
+    assert plain == traced
+    assert tr_block["spans"] > 0
+
+
+# ---------------------------------------------------------------------------
+# movement additivity: legs -> moves -> decisions -> totals, bit-for-bit
+# ---------------------------------------------------------------------------
+
+def _assert_additivity(metrics, tr: Tracer):
+    moves = [s for s in tr.spans if s.cat == "move"]
+    legs = [s for s in tr.spans if s.cat == "leg"]
+    by_parent = {}
+    for l in legs:
+        p = l.parent.index if l.parent is not None else None
+        acc = by_parent.setdefault(p, [0.0] * 4)
+        for i, f in enumerate(FIELDS):
+            acc[i] += l.attrs[f]
+    per_dec = {}
+    for m in moves:
+        got = by_parent.get(m.index, [0.0] * 4)
+        for i, f in enumerate(FIELDS):
+            assert got[i] == m.attrs[f], (m.name, f)     # legs == move
+        acc = per_dec.setdefault(m.attrs["decision"], [0.0] * 4)
+        for i, f in enumerate(FIELDS):
+            acc[i] += m.attrs[f]
+    n_priced = 0
+    for di, dec in enumerate(metrics.decisions):
+        want = (dec.ns_lisa, dec.ns_memcpy, dec.uj_lisa, dec.uj_memcpy)
+        if di not in per_dec:
+            assert want == (0.0, 0.0, 0.0, 0.0), (di, dec.kind)
+            continue
+        n_priced += 1
+        got = per_dec[di]
+        for i in range(4):
+            assert got[i] == want[i], (di, dec.kind, FIELDS[i])
+    assert n_priced == len(per_dec)          # no orphaned move spans
+    # the exact association movement_totals() uses: per-decision, in order
+    tot = [0.0] * 4
+    for di in range(len(metrics.decisions)):
+        for i in range(4):
+            tot[i] += per_dec.get(di, (0.0,) * 4)[i]
+    mt = metrics.movement_totals()
+    for i, f in enumerate(FIELDS):
+        assert tot[i] == mt[f], f            # bit-for-bit
+
+
+def test_leg_spans_sum_to_movement_totals_base(base_run):
+    s, _, tr = base_run
+    assert any(sp.cat == "move" for sp in tr.spans)
+    _assert_additivity(s.metrics, tr)
+
+
+def test_leg_spans_sum_to_movement_totals_cluster_chaos(cluster_run):
+    s, _, tr, _ = cluster_run
+    kinds = {sp.attrs["wave"] for sp in tr.spans if sp.cat == "move"}
+    assert "snapshot_wave" in kinds          # the chaos kinds are traced too
+    _assert_additivity(s.metrics, tr)
+
+
+# ---------------------------------------------------------------------------
+# fault spans agree with the chaos ledger
+# ---------------------------------------------------------------------------
+
+def test_fault_spans_match_ledger(cluster_run):
+    s, _, tr, _ = cluster_run
+    counters = s.metrics.fault_summary()["counters"]
+    inj_marks = [sp for sp in tr.spans
+                 if sp.cat == "fault" and sp.name == "fault_injected"]
+    fail_marks = [sp for sp in tr.spans
+                  if sp.cat == "fault" and sp.name == "replica_failure"]
+    assert len(inj_marks) == counters.get("injected", 0)
+    assert len(fail_marks) == counters.get("replica_failures", 0)
+    retry_moves = [sp for sp in tr.spans if sp.cat == "move"
+                   and sp.attrs["wave"] == "retry_wave"]
+    assert len(retry_moves) == s.metrics.decision_counts().get(
+        "retry_wave", 0)
+    assert sum(sp.attrs["retries"] for sp in retry_moves) == \
+        counters.get("retries", 0)
+    # every retry move carries its backoff leg, priced by residual
+    for sp in retry_moves:
+        kids = [l for l in tr.spans
+                if l.cat == "leg" and l.parent is sp]
+        assert kids and kids[-1].name == "backoff"
+
+
+# ---------------------------------------------------------------------------
+# roofline report schema (the committed artifact)
+# ---------------------------------------------------------------------------
+
+def test_roofline_report_schema_covers_entry_points():
+    root = find_repo_root()
+    path = os.path.join(root, "ROOFLINE_REPORT.json")
+    assert os.path.exists(path), "run `python benchmarks/run.py roofline`"
+    sys.path.insert(0, os.path.join(root, "benchmarks"))
+    try:
+        from run import _check_roofline
+    finally:
+        sys.path.pop(0)
+    with open(path) as f:
+        rep = json.load(f)
+    errs = []
+    _check_roofline(rep, errs)
+    assert errs == []
+    assert rep["n_entry_points"] >= 9
