@@ -12,6 +12,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * ``kernel_*`` — Pallas kernels (interpret mode) vs jnp oracles.
   * ``ring_*``  — LISA hop-chain collectives on 8 host devices (subprocess).
   * ``train/serve_throughput`` — end-to-end reduced-model system benches.
+  * ``bank_*`` — bank-contention A/B: load-dependent p99, wave overlap
+    vs serialization, refresh stalls (writes ``BENCH_bank.json``).
   * ``roofline_*`` — live lowering + HLO byte/flop attribution of every
     audited jitted entry point (writes ``ROOFLINE_REPORT.json``).
 
@@ -907,6 +909,164 @@ def bench_faults(out_path="BENCH_faults.json"):
         f"graceful={bench['graceful_degradation']}")
 
 
+def bench_bank(out_path="BENCH_bank.json"):
+    """Bank-contention A/B under the virtual clock (DESIGN.md Sec. 15).
+    Three deterministic arms, gated exactly:
+
+      * **offered load** — the same open-loop request stream (fixed
+        service, round-robin banks) at 1x vs 2x rate, contention on vs
+        off.  On: per-bank queues grow with load, so p99 sojourn is
+        strictly worse at 2x.  Off: the multiplexer is a pass-through and
+        p99 is EXACTLY the service time at both loads (flat).
+      * **wave overlap** — one migration-wave's routes priced from the
+        real resume plan: disjoint-bank routes complete in less than the
+        sum of their isolated costs (bank-level parallelism), same-bank
+        routes serialize exactly (completion == sum).
+      * **scheduler A/B** — the same arrival stream through the tick loop
+        with ``contention`` off vs on: identical jobs and identical
+        movement bills (contention never reprices), p99 no better with
+        contention on, and the run observes refresh stalls (the virtual
+        time crosses several tREFI windows).
+
+    Writes ``BENCH_bank.json``."""
+    from repro import sched
+    from repro.configs import get_reduced
+    from repro.core.dram.bank import RequestMultiplexer
+    from repro.core.dram.spec import DDR3_1600
+    from repro.models import lm as LM
+    from repro.sched.metrics import percentile_ns
+    from repro.serve.engine import Engine
+
+    # ---- arm 1: open-loop sojourn vs offered load ------------------------
+    service_ns, n_banks, n_req = 600.0, 4, 400
+
+    def sojourn_p99(enabled, gap_ns):
+        m = RequestMultiplexer(DDR3_1600, n_banks=n_banks, enabled=enabled)
+        sj = []
+        for i in range(n_req):
+            ready = i * gap_ns
+            _, end = m.submit(m.bank_of(i), ready, service_ns)
+            sj.append(end - ready)
+        return round(percentile_ns(sj, 99), 3), m
+
+    # 1x: per-bank utilization 600/800 — queues drain between refreshes;
+    # 2x: 600/400 — overloaded, per-bank queues grow without bound
+    p99_on_1x, _ = sojourn_p99(True, 200.0)
+    p99_on_2x, m_2x = sojourn_p99(True, 100.0)
+    p99_off_1x, _ = sojourn_p99(False, 200.0)
+    p99_off_2x, _ = sojourn_p99(False, 100.0)
+    load = {"service_ns": service_ns, "n_banks": n_banks,
+            "n_requests": n_req,
+            "on": {"p99_1x": p99_on_1x, "p99_2x": p99_on_2x},
+            "off": {"p99_1x": p99_off_1x, "p99_2x": p99_off_2x},
+            "mux_2x": m_2x.snapshot()}
+
+    # ---- arms 2+3 share the reduced model ---------------------------------
+    cfg = get_reduced("tinyllama-1.1b")
+    params = LM.init_lm(cfg, jax.random.key(0))
+    eng0 = Engine(cfg, params, slots=2, max_len=96, n_sessions=8)
+    route_ns = eng0.plan_resume.cost.ns_lisa    # one route's isolated bill
+    n_routes = 3
+    mux = RequestMultiplexer(DDR3_1600, n_banks=8)
+    disjoint = mux.wave([(r, route_ns) for r in range(n_routes)], 0.0)
+    mux2 = RequestMultiplexer(DDR3_1600, n_banks=8)
+    same_bank = mux2.wave([(0, route_ns)] * n_routes, 0.0)
+    waves = {"route_ns": round(route_ns, 3), "n_routes": n_routes,
+             "sum_isolated_ns": round(n_routes * route_ns, 3),
+             "disjoint_completion_ns": round(disjoint, 3),
+             "same_bank_completion_ns": round(same_bank, 3)}
+
+    wl = sched.WorkloadConfig(n_fresh=8, n_followups=16, mean_gap_ns=1200.0,
+                              arrival="bursty", burst=4, zipf_s=1.5,
+                              think_ns=2000.0)
+    arrivals = sched.generate_workload(wl, seed=4, vocab_size=cfg.vocab_size)
+    ab = {}
+    for contention in (False, True):
+        eng = Engine(cfg, params, slots=2, max_len=96,
+                     n_sessions=sched.n_sessions_for(wl))
+        s = sched.Scheduler(eng, arrivals=arrivals,
+                            cfg=sched.SchedConfig(contention=contention))
+        t0 = time.perf_counter()
+        summary = s.run()
+        arm = {"jobs_completed": summary["jobs_completed"],
+               "p99_latency_ns": summary["p99_latency_ns"],
+               "movement_ns_lisa": summary["movement"]["ns_lisa"],
+               "movement_advantage": summary["movement"]["advantage"],
+               "virtual_ns": round(s.now_ns, 2),
+               "ticks": s.tick_count,
+               "wall_seconds": round(time.perf_counter() - t0, 2)}
+        if contention:
+            arm["stalls"] = summary.get("stalls", {})
+            arm["mux"] = s.mux.snapshot()
+        ab["contention_on" if contention else "contention_off"] = arm
+    off, on = ab["contention_off"], ab["contention_on"]
+
+    # pricing invariance needs an IDENTICAL schedule in both arms (the
+    # bursty A/B above diverges: the shifted clock feeds back into
+    # admission), so it gates on a sequential stream whose decisions
+    # cannot depend on completion times
+    rng = np.random.default_rng(11)
+    seq_arrivals = [
+        sched.Arrival(t_ns=i * 400.0, uid=i, kind="fresh", priority=1,
+                      slo_ns=float("inf"), new_tokens=2,
+                      prompt=rng.integers(0, cfg.vocab_size,
+                                          4).astype(np.int32))
+        for i in range(6)]
+    bills = {}
+    for contention in (False, True):
+        eng = Engine(cfg, params, slots=2, max_len=96, n_sessions=8)
+        s = sched.Scheduler(eng, arrivals=list(seq_arrivals),
+                            cfg=sched.SchedConfig(contention=contention))
+        summary = s.run()
+        bills["on" if contention else "off"] = {
+            "ns_lisa": summary["movement"]["ns_lisa"],
+            "ns_memcpy": summary["movement"]["ns_memcpy"],
+            "advantage": summary["movement"]["advantage"],
+            "jobs_completed": summary["jobs_completed"]}
+
+    gates = {
+        "on_p99_load_dependent": bool(p99_on_2x > p99_on_1x),
+        "off_p99_flat": bool(p99_off_1x == p99_off_2x == service_ns),
+        "disjoint_routes_overlap": bool(
+            disjoint < n_routes * route_ns and disjoint >= route_ns),
+        "same_bank_serializes_exactly": bool(
+            same_bank == n_routes * route_ns),
+        "contention_never_reprices": bool(
+            bills["on"] == bills["off"]),
+        "same_jobs_served": bool(
+            on["jobs_completed"] == off["jobs_completed"]),
+        # the bank model moves completion times both ways: same-bank queues
+        # and refresh windows delay, disjoint-bank wave overlap accelerates
+        # vs the serial contention-off clock — the gate is that it SHIFTS
+        # the clock without touching the bill, not a one-sided inequality
+        "contention_shifts_the_clock": bool(
+            on["p99_latency_ns"] != off["p99_latency_ns"]),
+        "refresh_stalls_observed": bool(
+            on["mux"]["n_decode_stalls"] >= 1),
+    }
+    bench = {
+        "load": load, "waves": waves, **ab,
+        "pricing_invariance": bills, "gates": gates,
+        "config": {"arch": "tinyllama-1.1b-reduced", "seed": 4,
+                   "timing": {"tREFI": DDR3_1600.timing.tREFI,
+                              "tRFC": DDR3_1600.timing.tRFC},
+                   "offered_load": "bursty gap=1200 zipf=1.5 8f+16r"},
+    }
+    with open(out_path, "w") as f:
+        json.dump(bench, f, indent=2, allow_nan=False)
+    row("bank_load_p99", 0.0,
+        f"on_1x={p99_on_1x};on_2x={p99_on_2x};"
+        f"off_flat={gates['off_p99_flat']}")
+    row("bank_wave_overlap", 0.0,
+        f"disjoint={waves['disjoint_completion_ns']};"
+        f"same_bank={waves['same_bank_completion_ns']};"
+        f"sum={waves['sum_isolated_ns']}")
+    row("bank_sched_ab", 0.0,
+        f"p99_off={off['p99_latency_ns']};p99_on={on['p99_latency_ns']};"
+        f"decode_stalls={on['mux']['n_decode_stalls']};"
+        f"gates_ok={all(gates.values())}")
+
+
 def bench_fork(out_path="BENCH_fork.json"):
     """Shared-prefix serving A/B: 64 sessions sharing one long system
     prompt, forked (zero-copy CoW aliasing — the RowClone analogue) vs
@@ -1187,6 +1347,48 @@ def _check_fork(b, errs):
                     f"the clone)")
 
 
+def _check_bank(b, errs):
+    """``BENCH_bank.json``: recompute every contention gate from the
+    recorded values — the artifact must not merely CLAIM the gates passed
+    (regenerate with ``python benchmarks/run.py bank``)."""
+    load, waves = b["load"], b["waves"]
+    on, off = load["on"], load["off"]
+    if not on["p99_2x"] > on["p99_1x"]:
+        errs.append(f"bank: contention-on p99 not load-dependent "
+                    f"({on['p99_1x']} -> {on['p99_2x']} at 2x)")
+    if not (off["p99_1x"] == off["p99_2x"] == load["service_ns"]):
+        errs.append(f"bank: contention-off p99 not flat at the service "
+                    f"time ({off['p99_1x']}, {off['p99_2x']})")
+    total = waves["sum_isolated_ns"]
+    if not waves["disjoint_completion_ns"] < total:
+        errs.append(f"bank: disjoint-route wave "
+                    f"{waves['disjoint_completion_ns']} !< sum of isolated "
+                    f"costs {total}")
+    if not waves["disjoint_completion_ns"] >= waves["route_ns"]:
+        errs.append("bank: disjoint-route wave faster than one route")
+    if waves["same_bank_completion_ns"] != total:
+        errs.append(f"bank: same-bank wave "
+                    f"{waves['same_bank_completion_ns']} != sum of "
+                    f"isolated costs {total} (must serialize exactly)")
+    sa, sb = b["contention_on"], b["contention_off"]
+    if sa["jobs_completed"] != sb["jobs_completed"]:
+        errs.append("bank: the A/B arms served different job counts")
+    bills = b["pricing_invariance"]
+    if bills["on"] != bills["off"]:
+        errs.append("bank: contention repriced the identical-schedule "
+                    "sequential stream (must only shift the clock)")
+    if sa["p99_latency_ns"] == sb["p99_latency_ns"]:
+        errs.append("bank: contention never moved a completion time "
+                    "(the A/B arms are identical)")
+    if sa["mux"]["n_decode_stalls"] < 1:
+        errs.append("bank: scheduler A/B observed no decode refresh stall")
+    if sa["virtual_ns"] < b["config"]["timing"]["tREFI"]:
+        errs.append("bank: A/B run too short to cross one tREFI window")
+    for gate, ok in b["gates"].items():
+        if ok is not True:
+            errs.append(f"bank: gate {gate} recorded as {ok!r}")
+
+
 def _check_lint(b, errs):
     """The committed repro-lint report: clean, waiver-free, and covering
     every registered jitted entry point (regenerate with
@@ -1261,6 +1463,7 @@ BENCH_SCHEMAS = {
     "BENCH_cluster.json": _check_cluster,
     "BENCH_faults.json": _check_faults,
     "BENCH_fork.json": _check_fork,
+    "BENCH_bank.json": _check_bank,
     "LINT_REPORT.json": _check_lint,
     "ROOFLINE_REPORT.json": _check_roofline,
 }
@@ -1301,10 +1504,20 @@ def check_artifacts(root=".") -> int:
     return len(errs)
 
 
+# the gate keys every trajectory line must carry: the core artifacts that
+# have existed since the log began (newer artifacts appear in later lines
+# only, so they are validated as a subset, not required)
+TRAJECTORY_CORE_GATES = frozenset({
+    "BENCH_serve.json", "BENCH_movement.json",
+    "BENCH_sched.json", "BENCH_cluster.json"})
+
+
 def _check_trajectory(path, errs, reject):
     """``BENCH_TRAJECTORY.jsonl``: strict JSON per line, ``seq`` a strictly
-    increasing int — an append-only record of every bench invocation's
-    headline gates (plot it to see the repo's trajectory)."""
+    increasing int, and every line's ``gates`` dict keyed by known
+    artifact names (with the core four always present, values strictly
+    ``true``/``false``/``null``) — an append-only record of every bench
+    invocation's headline gates (plot it to see the repo's trajectory)."""
     name = os.path.basename(path)
     if not os.path.exists(path):
         errs.append(f"{name}: missing (run any bench to append a line)")
@@ -1330,8 +1543,24 @@ def _check_trajectory(path, errs, reject):
             last = seq
             if not isinstance(rec.get("benches"), list):
                 errs.append(f"{name}:{i}: benches missing or not a list")
-            if not isinstance(rec.get("gates"), dict):
+            if not isinstance(rec.get("rows"), dict):
+                errs.append(f"{name}:{i}: rows missing or not a dict")
+            gates = rec.get("gates")
+            if not isinstance(gates, dict):
                 errs.append(f"{name}:{i}: gates missing or not a dict")
+                continue
+            unknown = set(gates) - set(BENCH_SCHEMAS)
+            if unknown:
+                errs.append(f"{name}:{i}: unknown gate keys "
+                            f"{sorted(unknown)}")
+            missing = TRAJECTORY_CORE_GATES - set(gates)
+            if missing:
+                errs.append(f"{name}:{i}: core gate keys missing "
+                            f"{sorted(missing)}")
+            for k, v in gates.items():
+                if v is not None and not isinstance(v, bool):
+                    errs.append(f"{name}:{i}: gate {k} is {v!r}, expected "
+                                f"true/false/null")
     if last is None:
         errs.append(f"{name}: no records")
 
@@ -1435,6 +1664,7 @@ BENCHES = {
     "cluster": bench_cluster,
     "faults": bench_faults,
     "fork": bench_fork,
+    "bank": bench_bank,
     "roofline": bench_roofline,
 }
 

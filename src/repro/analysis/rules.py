@@ -265,8 +265,11 @@ class WallClockRule(LintRule):
     doc = "wall-clock read or unseeded RNG in a virtual-clock module"
 
     # obs/ records MODELED time only — a wall-clock read there would stamp
-    # host time onto the virtual timeline and break byte-stable traces
-    SCOPE_PREFIX = ("src/repro/sched/", "src/repro/obs/")
+    # host time onto the virtual timeline and break byte-stable traces;
+    # core/dram/bank.py holds the refresher/bank-machine clock model whose
+    # refresh windows must be a pure function of virtual time
+    SCOPE_PREFIX = ("src/repro/sched/", "src/repro/obs/",
+                    "src/repro/core/dram/bank.py")
     WALL = frozenset({"time.time", "time.time_ns", "time.perf_counter",
                       "time.perf_counter_ns", "time.monotonic",
                       "time.monotonic_ns", "datetime.now",

@@ -56,10 +56,19 @@ class DramTiming:
     tBURST: float = 5.0     # 8-beat burst, 4 cycles
     tWR: float = 15.0       # write recovery
     tRTP: float = 7.5       # read -> precharge
+    tREFI: float = 7800.0   # average refresh interval (64 ms / 8192 rows)
+    tRFC: float = 260.0     # all-bank refresh cycle time (4 Gb density)
 
     @property
     def tRC(self) -> float:
         return self.tRAS + self.tRP
+
+    def __post_init__(self):
+        if not 0.0 < self.tRFC < self.tREFI:
+            raise ValueError(
+                f"tRFC ({self.tRFC}) must be positive and shorter than "
+                f"tREFI ({self.tREFI}) — the device must spend most of its "
+                f"time NOT refreshing")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -428,7 +437,7 @@ DDR4_2400 = register_preset(DramSpec(
     name="DDR4_2400",
     timing=DramTiming(tCK=0.833, tRCD=14.16, tRP=14.16, tRAS=32.0,
                       tCL=14.16, tCWL=10.0, tCCD=3.33, tBURST=3.33,
-                      tWR=15.0, tRTP=7.5),
+                      tWR=15.0, tRTP=7.5, tREFI=7800.0, tRFC=350.0),
     channel_bw_gbps=19.2))
 
 #: LPDDR4-3200 x32: slower core timings, narrower channel, deeper banks.
@@ -437,5 +446,5 @@ LPDDR4_3200 = register_preset(DramSpec(
     n_subarrays=32,
     timing=DramTiming(tCK=0.625, tRCD=18.0, tRP=21.0, tRAS=42.0,
                       tCL=18.0, tCWL=10.0, tCCD=5.0, tBURST=5.0,
-                      tWR=18.0, tRTP=7.5),
+                      tWR=18.0, tRTP=7.5, tREFI=3904.0, tRFC=180.0),
     channel_bw_gbps=12.8))

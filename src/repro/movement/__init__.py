@@ -38,6 +38,8 @@ from repro.movement.plan import (
     Tier,
     Transfer,
     UnpackLeg,
+    ContendedCost,
+    contend,
     fuse,
     leg_costs,
     plan,
@@ -65,6 +67,7 @@ __all__ = [
     "PageScatterLeg",
     "TierReadLeg", "TierWriteLeg", "TileCopyLeg", "HopChainLeg",
     "HostStageLeg", "plan", "ring_plan", "fuse", "retry_cost", "leg_costs",
+    "ContendedCost", "contend",
     "Env", "register_backend", "get_backend", "backend_kinds", "execute",
     "wrap_backend", "unwrap_backend", "wrapped_kinds", "set_tracer",
 ]

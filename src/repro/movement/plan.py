@@ -278,22 +278,53 @@ class MovementCost(NamedTuple):
                              uj_memcpy=self.uj_memcpy * k)
 
 
-def retry_cost(cost: MovementCost, retries: int,
-               backoff_ns: float = 0.0) -> MovementCost:
-    """The EXTRA cost of ``retries`` re-executions of an already-charged
-    plan, plus retry backoff.
+def retry_cost(cost: MovementCost, retries: int) -> MovementCost:
+    """The EXTRA *movement* cost of ``retries`` re-executions of an
+    already-charged plan.
 
     A checksum-failed leg re-issues the whole transfer, so k retries price
     exactly ``cost.scaled(k)`` — cost-additivity the chaos property tests
-    pin.  ``backoff_ns`` (bounded-exponential wait between attempts) is
-    mechanism-independent wall latency: it adds to both clocks and moves no
-    bytes, so the modeled LISA-vs-memcpy byte accounting stays honest."""
+    pin.  Retry *backoff* is deliberately NOT here: it is mechanism-
+    independent waiting, not movement, and folding it into both clocks
+    skewed the reported lisa-vs-memcpy ratio with the fault rate (the more
+    chaos, the closer the ratio drifted to 1).  Callers charge backoff to
+    the virtual clock as its own latency bucket
+    (:class:`repro.sched.metrics.Decision.backoff_ns`), keeping
+    ``advantage = ns_memcpy / ns_lisa`` fault-rate-invariant."""
     if retries <= 0:
-        base = MovementCost(0, 0, 0.0, 0.0, 0.0, 0.0)
-    else:
-        base = cost.scaled(retries)
-    return base._replace(ns_lisa=base.ns_lisa + backoff_ns,
-                         ns_memcpy=base.ns_memcpy + backoff_ns)
+        return MovementCost(0, 0, 0.0, 0.0, 0.0, 0.0)
+    return cost.scaled(retries)
+
+
+class ContendedCost(NamedTuple):
+    """A priced movement *and* when it actually ran: ``cost`` is the
+    isolated Table-1 bill (unchanged by load), ``start_ns``/``end_ns`` the
+    service window a :class:`~repro.core.dram.bank.RequestMultiplexer`
+    granted it.  The gap between ``end - ready`` and the isolated service
+    time is queue/refresh contention — the load-dependent part of latency
+    the bank model adds (DESIGN.md Sec. 15)."""
+    cost: MovementCost
+    ready_ns: float
+    start_ns: float
+    end_ns: float
+
+    @property
+    def stall_ns(self) -> float:
+        """Time spent waiting on bank occupancy or refresh, beyond the
+        isolated service time."""
+        return self.start_ns - self.ready_ns
+
+
+def contend(cost: MovementCost, mux, bank: int, ready_ns: float,
+            mechanism: str = "lisa") -> ContendedCost:
+    """Submit an isolated ``MovementCost`` through a bank multiplexer and
+    return it alongside its queued/contended completion window.  The
+    active mechanism's ns is the service time; pricing is untouched —
+    contention decides *when*, Table 1 decides *how much*."""
+    service = cost.ns_lisa if mechanism == "lisa" else cost.ns_memcpy
+    start, end = mux.submit(bank, ready_ns, service)
+    return ContendedCost(cost=cost, ready_ns=ready_ns, start_ns=start,
+                         end_ns=end)
 
 
 _FREE_LEGS = ("pack_pages", "unpack_pages")      # relabeling, not movement

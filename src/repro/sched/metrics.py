@@ -24,10 +24,17 @@ def percentile_ns(xs, q) -> Optional[float]:
     with no completions has NO latency distribution.  (The old NaN leaked
     through ``round`` into summaries where an idle class read as a perfect
     p99, and ``json.dump(..., allow_nan=False)`` would crash on it; None
-    serializes as strict-JSON ``null``.)"""
+    serializes as strict-JSON ``null``.)
+
+    ``method="linear"`` is pinned explicitly: it is numpy's current
+    default, but the p50/p99 in committed BENCH artifacts must stay
+    byte-stable even if a future numpy changes the default interpolation
+    (single- and two-element buckets are the cases where methods disagree
+    most — covered by tests)."""
     if not xs:
         return None
-    return float(np.percentile(np.asarray(xs, np.float64), q))
+    return float(np.percentile(np.asarray(xs, np.float64), q,
+                               method="linear"))
 
 
 def _round(x: Optional[float], nd: int) -> Optional[float]:
@@ -70,6 +77,11 @@ class Decision:
     uj_memcpy: float = 0.0
     # chaos-run kinds: "snapshot_wave" (write-behind: priced, not charged
     # to the clock), "recover_wave", "retry_wave" (both on the clock)
+    backoff_ns: float = 0.0
+    # retry backoff: mechanism-independent waiting charged to the clock
+    # but NEVER to ns_lisa/ns_memcpy — folding it into both skewed the
+    # reported advantage ratio with the fault rate (its own bucket keeps
+    # the lisa-vs-memcpy A/B fault-rate-invariant)
 
 
 class Metrics:
@@ -83,6 +95,8 @@ class Metrics:
         self._replica_occ: List[List[float]] = []   # cluster runs only
         self._faults: Dict[str, int] = {}
         self._fault_class: Dict[int, Dict[str, int]] = {}
+        # bank-model stalls (contention-on runs only): kind -> (ns, count)
+        self._stalls: Dict[str, List[float]] = {}
         # the tracer's per-phase/per-leg rollup (repro.obs); set by the
         # scheduler at the end of a traced run, None on untraced runs so
         # untraced summaries are byte-identical to pre-obs output
@@ -106,6 +120,16 @@ class Metrics:
             per = self._fault_class.setdefault(priority, {})
             per[kind] = per.get(kind, 0) + n
 
+    def record_stall(self, kind: str, ns: float) -> None:
+        """Count one bank-model stall (``refresh`` — a decode tick pushed
+        out of a tRFC window; ``contention`` — wave members queued behind
+        same-bank work).  Only contention-on runs record these, so
+        contention-off summaries stay byte-identical to the pre-bank
+        schema."""
+        acc = self._stalls.setdefault(kind, [0.0, 0])
+        acc[0] += ns
+        acc[1] += 1
+
     def record_tick(self, n_active: int, n_slots: int,
                     per_replica: Optional[Sequence[float]] = None) -> None:
         self._occupancy.append(n_active / n_slots if n_slots else 0.0)
@@ -114,13 +138,18 @@ class Metrics:
 
     # ---- summaries --------------------------------------------------------
     def movement_totals(self) -> Dict[str, float]:
+        """Cumulative movement bill under both mechanisms, plus the
+        ``backoff_ns`` latency bucket (clock time that moved no bytes —
+        kept OUT of the per-mechanism ns so ``advantage`` is a pure
+        movement ratio, invariant to the fault rate)."""
         t = {"ns_lisa": 0.0, "ns_memcpy": 0.0, "uj_lisa": 0.0,
-             "uj_memcpy": 0.0}
+             "uj_memcpy": 0.0, "backoff_ns": 0.0}
         for d in self.decisions:
             t["ns_lisa"] += d.ns_lisa
             t["ns_memcpy"] += d.ns_memcpy
             t["uj_lisa"] += d.uj_lisa
             t["uj_memcpy"] += d.uj_memcpy
+            t["backoff_ns"] += d.backoff_ns
         t["advantage"] = (t["ns_memcpy"] / t["ns_lisa"]
                           if t["ns_lisa"] else 1.0)
         return t
@@ -202,6 +231,9 @@ class Metrics:
             "decisions": self.decision_counts(),
             "faults": self.fault_summary(),
         }
+        if self._stalls:                # bank-contention run: stall view
+            out["stalls"] = {k: {"ns": round(v[0], 2), "n": int(v[1])}
+                             for k, v in sorted(self._stalls.items())}
         if self._replica_occ:           # cluster run: per-replica view
             n_rep = len(self._replica_occ[0])
             out["per_replica_utilization"] = [

@@ -38,6 +38,7 @@ import math
 from typing import Dict, List, NamedTuple, Optional, Sequence, Set, Tuple
 
 from repro import movement as MV
+from repro.core.dram.bank import RequestMultiplexer
 from repro.faults.recover import (repair_row, restore_session,
                                   snapshot_sessions)
 from repro.faults.spec import FaultInjector
@@ -58,11 +59,19 @@ class SchedConfig:
     mechanism: str = "lisa"           # clock + scoring mechanism
     preempt: bool = True              # allow class-based slot preemption
     max_wave: int = 0                 # cap on placements per tick (0 = none)
+    # bank-level contention (DESIGN.md Sec. 15): when on, every movement
+    # and decode tick routes through a RequestMultiplexer — same-bank work
+    # serializes, refresh windows (tREFI/tRFC) stall, disjoint banks
+    # overlap.  Off (default) keeps the isolated-cost clock bit-identical.
+    contention: bool = False
+    n_banks: int = 8
 
     def __post_init__(self):
         if self.mechanism not in ("lisa", "memcpy"):
             raise ValueError(f"unknown mechanism {self.mechanism!r} "
                              "(clock pricing needs 'lisa' or 'memcpy')")
+        if self.n_banks < 1:
+            raise ValueError(f"n_banks must be >= 1, got {self.n_banks}")
 
 
 @dataclasses.dataclass
@@ -130,6 +139,11 @@ class Scheduler:
         t, v = engine.spec.timing, engine.villa_cfg
         self.fast_ratio = ((v.tRCD_fast + v.tRAS_fast + v.tRP_fast)
                            / (t.tRCD + t.tRAS + t.tRP))
+        # bank-level contention (cfg.contention): the multiplexer the whole
+        # tick loop shares.  Disabled it is a pure pass-through, so the
+        # contention-off clock is bit-identical to the pre-bank model.
+        self.mux = RequestMultiplexer(engine.spec, n_banks=cfg.n_banks,
+                                      enabled=cfg.contention)
 
     # ---- traffic ----------------------------------------------------------
     def offer(self, arrival: Arrival) -> None:
@@ -229,6 +243,47 @@ class Scheduler:
                               len(self.metrics.decisions) - 1)
         return tot[0] if self.cfg.mechanism == "lisa" else tot[1]
 
+    def _wave_advance(self, kind: str, moves: Sequence[bool],
+                      direction: str, *, uids: Sequence[int], t0: float,
+                      lanes: Optional[Sequence[int]] = None) -> float:
+        """Charge one fused wave to the ledger (isolated Table-1 pricing,
+        via :meth:`_charge_wave`) and return the CLOCK advance: the
+        isolated active-mechanism total when the bank model is off —
+        bit-identical to the serial pre-bank clock — else the contended
+        wave span through the multiplexer: every member ready at ``t0``,
+        distinct banks overlapping, same-bank members serializing, starts
+        pushed out of refresh windows.  Pricing never changes; only WHEN
+        the wave completes does."""
+        iso = self._charge_wave(kind, moves, direction, lanes=lanes)
+        if not self.mux.enabled or not moves:
+            return iso
+        end = t0
+        for uid, resident in zip(uids, moves):
+            svc = self._move_ns(direction, resident)
+            start, e = self.mux.submit(self.mux.bank_of(uid), t0, svc)
+            if start > t0:
+                self.metrics.record_stall("contention", start - t0)
+            end = max(end, e)
+        return end - t0
+
+    def _lane_add(self, lanes: List[float], r: int, uid: int,
+                  service_ns: float, t0: float) -> None:
+        """Accumulate one movement on replica ``r``'s lane (serial within
+        the lane).  Bank model off: plain ``+=`` — the pre-bank clock.
+        On: the movement queues through the session's bank at its lane's
+        current ready time, so same-bank work *across* lanes serializes
+        and refresh windows push starts; the lane absorbs the full sojourn
+        (stall + service)."""
+        if not self.mux.enabled:
+            lanes[r] += service_ns
+            return
+        ready = t0 + lanes[r]
+        start, end = self.mux.submit(self.mux.bank_of(uid), ready,
+                                     service_ns)
+        if start > ready:
+            self.metrics.record_stall("contention", start - ready)
+        lanes[r] = end - t0
+
     def _trace_lanes(self) -> int:
         """Lane count: scheduler lane only, or (cluster) one per replica
         plus the write-behind lane."""
@@ -288,10 +343,22 @@ class Scheduler:
                                        "queued": len(self.queue)})
 
         # 1. the tick's ONE fused decode dispatch (async — device decodes
-        #    while the host plans; the LIP-linked-precharge analogue)
+        #    while the host plans; the LIP-linked-precharge analogue).  An
+        #    all-bank refresh (tREFI/tRFC) blocks the dispatch: a tick
+        #    landing inside the window waits for it to close, and idle
+        #    fast-forwards cannot skip one — windows are a pure function of
+        #    absolute virtual time
         handle = self.eng.step_begin()
         decoded = handle is not None
+        stall = 0.0
         if decoded:
+            if self.mux.enabled:
+                stall = self.mux.decode_gate(self.now_ns) - self.now_ns
+                if stall > 0.0:
+                    self.metrics.record_stall("refresh", stall)
+                    tr.emit("refresh_stall", stall, lane=0, cat="stall",
+                            attrs={"refreshes": self.mux.refreshes_before(
+                                self.now_ns + stall)})
             tr.emit("decode", self.cfg.decode_ns, lane=0, cat="decode",
                     attrs={"n_active": len(self.eng.active)})
 
@@ -305,12 +372,14 @@ class Scheduler:
         # 3. sync; the engine auto-suspends completed bursts as ONE wave
         completed = self.eng.step_end(handle)
 
-        advance = self.cfg.decode_ns if decoded else 0.0
+        advance = (self.cfg.decode_ns + stall) if decoded else 0.0
         if completed:
-            advance += self._charge_wave(
+            advance += self._wave_advance(
                 "complete_suspend",
                 [self._slot_job[s].uid in fast_uids for s, _ in completed],
-                "suspend")
+                "suspend",
+                uids=[self._slot_job[s].uid for s, _ in completed],
+                t0=self.now_ns + advance)
         self.now_ns += advance
         for slot, req in completed:
             job = self._slot_job.pop(slot)
@@ -448,9 +517,11 @@ class Scheduler:
                 self.eng.suspend(victims[0])
             else:
                 self.eng.suspend_many(victims)
-            advance += self._charge_wave(
+            advance += self._wave_advance(
                 "preempt_suspend",
-                [j.uid in fast_uids for j in requeue], "suspend")
+                [j.uid in fast_uids for j in requeue], "suspend",
+                uids=[j.uid for j in requeue],
+                t0=self.now_ns + advance)
             for job in requeue:
                 # re-queue under the ORIGINAL admission order (seq == job_id
                 # order is preserved by pushing with the job's first seq)
@@ -488,8 +559,10 @@ class Scheduler:
             slots = self.eng.resume_many([c.entry.uid for c in ready], extras)
             for c, slot in zip(ready, slots):
                 self._activate(c.entry, slot, seed_tokens=1)
-            advance += self._charge_wave(
-                "resume_wave", [c.fast_resident for c in ready], "resume")
+            advance += self._wave_advance(
+                "resume_wave", [c.fast_resident for c in ready], "resume",
+                uids=[c.entry.uid for c in ready],
+                t0=self.now_ns + advance)
 
         # fresh admissions: prefill inserts (inherently per-request — the
         # prefill is compute, not a session move)
@@ -518,8 +591,9 @@ class Scheduler:
                 # engine already suspended the session — complete it here
                 self.queue.remove(e)
                 job.done += len(req.generated)
-                advance += self._charge_wave(
-                    "complete_suspend", [job.uid in fast_uids], "suspend")
+                advance += self._wave_advance(
+                    "complete_suspend", [job.uid in fast_uids], "suspend",
+                    uids=[job.uid], t0=self.now_ns + advance)
                 self._complete_job(job, self.now_ns + advance)
         return advance
 
@@ -601,6 +675,13 @@ class ClusterScheduler(Scheduler):
         self.snapshot_every = snapshot_every
         self._snaps: Dict[int, object] = {}     # uid -> SessionSnapshot
         self._lost_uids: Set[int] = set()       # sessions gone for good
+        # per-tick lane accounting, for introspection and the lane-advance
+        # regression test: each entry records the decode part, the lanes
+        # seeded by complete-suspends, the final per-replica lanes after
+        # wave execution, and the tick's total clock advance — the model's
+        # contract is advance == decode_ns + max(lanes), never a sum of
+        # per-phase maxima
+        self.lane_log: List[Dict[str, object]] = []
 
     # ---- the tick (parallel replica lanes) --------------------------------
     def tick(self) -> None:
@@ -621,10 +702,21 @@ class ClusterScheduler(Scheduler):
                                 attrs={"tick": self.tick_count,
                                        "queued": len(self.queue)})
 
-        # 1. ONE fused decode dispatch per replica, all in flight at once
+        # 1. ONE fused decode dispatch per replica, all in flight at once.
+        #    An all-bank refresh blocks the whole fleet's dispatch: windows
+        #    are a pure function of absolute virtual time, so the idle
+        #    fast-forward above cannot skip a pending one
         handle = self.eng.step_begin()
         decoded = handle is not None
+        stall = 0.0
         if decoded:
+            if self.mux.enabled:
+                stall = self.mux.decode_gate(self.now_ns) - self.now_ns
+                if stall > 0.0:
+                    self.metrics.record_stall("refresh", stall)
+                    tr.emit("refresh_stall", stall, lane=0, cat="stall",
+                            attrs={"refreshes": self.mux.refreshes_before(
+                                self.now_ns + stall)})
             tr.emit("decode", self.cfg.decode_ns, lane=0, cat="decode",
                     attrs={"n_active": len(self.eng.active)})
             if tr.enabled:
@@ -639,28 +731,43 @@ class ClusterScheduler(Scheduler):
                    attrs={"victims": len(wave.victims),
                           "placements": len(wave.placements)})
 
-        # 3. sync; completed bursts auto-suspend per replica (fused waves)
+        # 3. sync; completed bursts auto-suspend per replica (fused waves).
+        #    ONE per-replica lanes vector carries ALL of the tick's
+        #    post-decode movement — the complete-suspends seeded here AND
+        #    the prepared wave executed below — so the tick advances by
+        #    decode + max over replicas of each replica's TOTAL.  (The old
+        #    accounting summed max(complete lanes) + max(wave lanes): two
+        #    phase maxima added serially even though the model says a
+        #    replica's wave work overlaps another replica's suspends.)
         completed = self.eng.step_end(handle)
-        advance = self.cfg.decode_ns if decoded else 0.0
+        tick_t0 = self.now_ns
+        advance = (self.cfg.decode_ns + stall) if decoded else 0.0
+        lanes = [0.0] * self.cluster.n_replicas
+        t0 = self.now_ns + advance
         if completed:
             flags = [self._slot_job[s].uid in fast_uids
                      for s, _ in completed]
             self._charge_wave("complete_suspend", flags, "suspend",
                               lanes=[self.cluster.replica_of(s) + 1
                                      for s, _ in completed])
-            lanes: Dict[int, float] = {}
             for (s, _), f in zip(completed, flags):
-                r = self.cluster.replica_of(s)
-                lanes[r] = lanes.get(r, 0.0) + self._move_ns("suspend", f)
-            advance += max(lanes.values(), default=0.0)
-        self.now_ns += advance
+                self._lane_add(lanes, self.cluster.replica_of(s),
+                               self._slot_job[s].uid,
+                               self._move_ns("suspend", f), t0)
+        seed = tuple(lanes)
+        self.now_ns = t0
         for slot, req in completed:
+            r = self.cluster.replica_of(slot)
             job = self._slot_job.pop(slot)
             job.done += len(req.generated) - job.seed_tokens
-            self._complete_job(job, self.now_ns)
+            self._complete_job(job, self.now_ns + lanes[r])
 
-        # 4. execute the prepared wave
-        self.now_ns += self._execute_wave(wave, fast_uids)
+        # 4. execute the prepared wave on the SAME lanes
+        self.now_ns += self._execute_wave(wave, fast_uids, lanes)
+        self.lane_log.append({
+            "tick": self.tick_count, "decode_ns": advance,
+            "complete_lanes": seed, "lanes": tuple(lanes),
+            "advance": self.now_ns - tick_t0})
         tr.end_span(tick_sp, t1_ns=max(self.now_ns, tr.now(0)))
 
     # ---- chaos: injection, snapshots, replica recovery --------------------
@@ -1006,10 +1113,12 @@ class ClusterScheduler(Scheduler):
                            targets=tuple(targets))
 
     # ---- wave execution ---------------------------------------------------
-    def _execute_wave(self, wave: ClusterWave,
-                      fast_uids: frozenset) -> float:
+    def _execute_wave(self, wave: ClusterWave, fast_uids: frozenset,
+                      lanes: Optional[List[float]] = None) -> float:
         cl = self.cluster
-        lanes = [0.0] * cl.n_replicas
+        if lanes is None:       # direct callers (tests): fresh lanes
+            lanes = [0.0] * cl.n_replicas
+        t0 = self.now_ns        # lane origin: all lane values are offsets
         spos = self.eng.session_pos          # one merged snapshot per phase
         active = self.eng.active
         pairs = [(c, t) for c, t in zip(wave.placements, wave.targets)
@@ -1049,8 +1158,9 @@ class ClusterScheduler(Scheduler):
                               "suspend",
                               lanes=[cl.replica_of(g) + 1 for g in victims])
             for g, job in zip(victims, requeue):
-                lanes[cl.replica_of(g)] += self._move_ns(
-                    "suspend", job.uid in fast_uids)
+                self._lane_add(lanes, cl.replica_of(g), job.uid,
+                               self._move_ns("suspend",
+                                             job.uid in fast_uids), t0)
             for job in requeue:
                 self.queue.push(job_id=job.job_id, uid=job.uid,
                                 kind="resume", priority=job.priority,
@@ -1073,7 +1183,7 @@ class ClusterScheduler(Scheduler):
             if n < 1:
                 self.queue.remove(c.entry)
                 job.target_new = job.done       # context exhausted
-                self._complete_job(job, self.now_ns + max(lanes))
+                self._complete_job(job, self.now_ns + lanes[t])
                 continue
             job.target_new -= c.entry.new_tokens - n
             ready.append(c)
@@ -1115,7 +1225,7 @@ class ClusterScheduler(Scheduler):
                         if snap is not None:
                             rc = restore_session(cl, snap, home)
                 if rc is not None:
-                    lanes[home] += self._mech_ns(rc)
+                    self._lane_add(lanes, home, uid, self._mech_ns(rc), t0)
                     self.metrics.record_decision(Decision(
                         tick=self.tick_count, kind="recover_wave",
                         n_items=len(marked), ns_lisa=rc.ns_lisa,
@@ -1158,7 +1268,7 @@ class ClusterScheduler(Scheduler):
                     # the inbound replica waits for the hop chain; the
                     # source end only runs the (free) page gather — its
                     # decode lane is not stalled by an outbound migration
-                    lanes[t] += ns
+                    self._lane_add(lanes, t, c.entry.uid, ns, t0)
                     for i, v in enumerate((mc.ns_lisa, mc.ns_memcpy,
                                            mc.uj_lisa, mc.uj_memcpy)):
                         tot[i] += v
@@ -1192,26 +1302,59 @@ class ClusterScheduler(Scheduler):
                      for c, t in zip(ready, rtargets)]
             self._charge_wave("resume_wave", flags, "resume",
                               lanes=[t + 1 for t in rtargets])
-            for t, f in zip(rtargets, flags):
-                lanes[t] += self._move_ns("resume", f)
+            for c, t, f in zip(ready, rtargets, flags):
+                self._lane_add(lanes, t, c.entry.uid,
+                               self._move_ns("resume", f), t0)
             if inj is not None:
-                # migration-wave faults: each retried route's re-copies and
-                # backoff are real latency on the inbound lane, priced as
-                # k× the route plan plus the bounded-exponential backoff
+                # migration-wave faults: each retried route's re-copies
+                # (k× the route plan) and the bounded-exponential backoff
+                # are real latency on the inbound lane — but only the
+                # re-copies are MOVEMENT; backoff is its own bucket
                 for ev in cl.drain_fault_events():
                     retries = int(ev["retries"])
                     if retries:
                         base = cl.migration_plan(ev["src"], ev["dst"],
                                                  ev["k"]).cost
-                        rc = MV.retry_cost(base, retries,
-                                           float(ev["backoff_ns"]))
-                        lanes[ev["dst"]] += self._mech_ns(rc)
+                        rc = MV.retry_cost(base, retries)
+                        backoff = float(ev["backoff_ns"])
+                        dst = ev["dst"]
+                        svc = self._mech_ns(rc)
+                        if self.mux.enabled:
+                            # retries re-queue through the multiplexer on
+                            # the banks of the route's sessions: each
+                            # session's re-copied share occupies its own
+                            # bank, so re-copies overlap across banks but
+                            # contend with everything else on them
+                            ruids = tuple(ev.get("uids") or ()) or (dst,)
+                            share = svc / len(ruids)
+                            ready_t = t0 + lanes[dst]
+                            end = ready_t
+                            for u in ruids:
+                                start, e = self.mux.submit(
+                                    self.mux.bank_of(u), ready_t, share)
+                                if start > ready_t:
+                                    self.metrics.record_stall(
+                                        "contention", start - ready_t)
+                                end = max(end, e)
+                            lanes[dst] = (end - t0) + backoff
+                        else:
+                            # the re-copies AND the bounded-exponential
+                            # backoff are real latency on the inbound lane
+                            lanes[dst] += svc + backoff
+                        # ledger: pure movement under both mechanisms; the
+                        # mechanism-independent backoff rides in its own
+                        # bucket so the lisa/memcpy advantage ratio stays
+                        # fault-rate-invariant
                         self.metrics.record_decision(Decision(
                             tick=self.tick_count, kind="retry_wave",
                             n_items=retries, ns_lisa=rc.ns_lisa,
                             ns_memcpy=rc.ns_memcpy, uj_lisa=rc.uj_lisa,
-                            uj_memcpy=rc.uj_memcpy))
+                            uj_memcpy=rc.uj_memcpy, backoff_ns=backoff))
                         self.metrics.record_fault("retries", n=retries)
+                        if self.trace.enabled and backoff > 0.0:
+                            self.trace.emit(
+                                "backoff", backoff, lane=dst + 1,
+                                cat="stall", attrs={"retries": retries})
                         if self.trace.enabled:
                             bplan = cl.migration_plan(ev["src"], ev["dst"],
                                                       ev["k"])
@@ -1276,6 +1419,8 @@ class ClusterScheduler(Scheduler):
                 self._charge_wave("complete_suspend",
                                   [job.uid in fast_uids], "suspend",
                                   lanes=[t + 1])
-                lanes[t] += self._move_ns("suspend", job.uid in fast_uids)
-                self._complete_job(job, self.now_ns + max(lanes))
+                self._lane_add(lanes, t, job.uid,
+                               self._move_ns("suspend",
+                                             job.uid in fast_uids), t0)
+                self._complete_job(job, self.now_ns + lanes[t])
         return max(lanes) if lanes else 0.0

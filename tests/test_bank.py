@@ -1,0 +1,315 @@
+"""Bank-level contention units and scheduler integration: refresher
+windows, row-state machines, multiplexer overlap/serialization, the
+decode-inside-tRFC stall, idle fast-forward vs pending refresh, the
+unified lane-advance accounting, and the percentile/backoff pins."""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro import movement as MV
+from repro import sched
+from repro.configs import get_reduced
+from repro.core.dram.bank import BankMachine, Refresher, RequestMultiplexer
+from repro.core.dram.spec import DDR3_1600, DramTiming
+from repro.models import lm
+from repro.sched.metrics import Decision, Metrics, percentile_ns
+from repro.serve.cluster import Cluster
+from repro.serve.engine import Engine
+
+T = DDR3_1600.timing
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_reduced("tinyllama-1.1b")
+    params = lm.init_lm(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def _fresh(t, uid, *, priority=1, slo=math.inf, tokens=3, plen=5, seed=0):
+    rng = np.random.default_rng(seed + uid)
+    return sched.Arrival(t_ns=t, uid=uid, kind="fresh", priority=priority,
+                         slo_ns=slo, new_tokens=tokens,
+                         prompt=rng.integers(0, 1000, plen).astype(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# refresher: absolute-time windows
+# ---------------------------------------------------------------------------
+
+def test_refresher_windows_are_absolute_time():
+    r = Refresher(tREFI=1000.0, tRFC=100.0)
+    assert r.window(1) == (1000.0, 1100.0)
+    assert r.window(3) == (3000.0, 3100.0)
+    with pytest.raises(ValueError, match="1-indexed"):
+        r.window(0)
+    # no window at t=0: the rank starts fresh
+    assert r.window_at(0.0) is None and r.window_at(999.9) is None
+    assert r.window_at(1000.0) == 1 and r.window_at(1099.9) == 1
+    assert r.window_at(1100.0) is None
+    assert r.next_free(1050.0) == 1100.0
+    assert r.next_free(1100.0) == 1100.0
+    assert r.stall_ns(1050.0) == pytest.approx(50.0)
+    assert r.refreshes_before(999.0) == 0
+    assert r.refreshes_before(5500.0) == 5
+
+
+def test_refresher_fast_forward_cannot_skip_windows():
+    """Jumping the clock across N windows changes NOTHING about where the
+    next one sits: windows derive from absolute time, not from a counter
+    the jump could leave behind."""
+    r = Refresher(tREFI=1000.0, tRFC=100.0)
+    # a clock that crawled to 5050 and one that jumped there agree
+    assert r.window_at(5050.0) == 5
+    assert r.next_free(5050.0) == 5100.0
+    assert r.refreshes_before(5050.0) == 5
+
+
+def test_refresher_validation():
+    with pytest.raises(ValueError, match="tRFC"):
+        Refresher(tREFI=100.0, tRFC=100.0)
+    with pytest.raises(ValueError, match="tRFC"):
+        Refresher(tREFI=100.0, tRFC=0.0)
+
+
+def test_spec_presets_carry_refresh_timing():
+    assert 0.0 < T.tRFC < T.tREFI
+    assert T.tREFI == pytest.approx(7800.0)     # 64 ms / 8192 rows
+    assert T.tRFC == pytest.approx(260.0)       # DDR3 4 Gb
+    with pytest.raises(ValueError, match="tRFC"):
+        DramTiming(tREFI=100.0, tRFC=200.0)
+
+
+# ---------------------------------------------------------------------------
+# bank machine: same-bank serialization, open-page row policy, refresh
+# ---------------------------------------------------------------------------
+
+def _machine(tREFI=1e9, tRFC=1.0):
+    return BankMachine(T, Refresher(tREFI, tRFC))
+
+
+def test_bank_serializes_same_bank_requests_exactly():
+    b = _machine()
+    s0, e0 = b.accept(0.0, 100.0)
+    s1, e1 = b.accept(0.0, 50.0)        # ready at 0, but the bank is busy
+    assert (s0, e0) == (0.0, 100.0)
+    assert (s1, e1) == (100.0, 150.0)
+    assert b.queue_stall_ns == pytest.approx(100.0)
+
+
+def test_bank_row_policy_hit_free_miss_pays():
+    b = _machine()
+    _, e0 = b.accept(0.0, 10.0, row=7)          # cold: ACT only
+    assert e0 == pytest.approx(T.tRCD + 10.0)
+    s1, e1 = b.accept(e0, 10.0, row=7)          # row hit: no overhead
+    assert e1 - s1 == pytest.approx(10.0)
+    # row miss with a row open: wait out tRAS from ACT, then tRP + tRCD
+    t_act = T.tRCD - T.tRCD            # ACT at start+overhead-tRCD == 0.0
+    s2, e2 = b.accept(e1, 10.0, row=9)
+    assert s2 >= t_act + T.tRAS
+    assert e2 - s2 == pytest.approx(T.tRP + T.tRCD + 10.0)
+    assert (b.n_row_hits, b.n_row_misses) == (1, 2)
+
+
+def test_bank_start_pushed_out_of_refresh_window():
+    b = _machine(tREFI=1000.0, tRFC=100.0)
+    s, e = b.accept(1010.0, 20.0)
+    assert s == 1100.0 and e == 1120.0
+    assert b.refresh_stall_ns == pytest.approx(90.0)
+
+
+# ---------------------------------------------------------------------------
+# multiplexer: overlap vs serialization, pass-through, decode gate
+# ---------------------------------------------------------------------------
+
+def test_mux_disabled_is_pure_passthrough():
+    m = RequestMultiplexer(DDR3_1600, enabled=False)
+    assert m.submit(5.0, 5.0, 100.0) == (5.0, 105.0)
+    assert m.wave([(0, 100.0), (0, 100.0)], 0.0) == 100.0   # no queueing
+    assert m.decode_gate(7850.0) == 7850.0                  # no refresh
+    assert m.stats["n_requests"] == 0
+
+
+def test_mux_disjoint_banks_overlap_same_bank_serializes():
+    m = RequestMultiplexer(DDR3_1600, n_banks=8)
+    # disjoint banks: the wave completes in max, not sum
+    assert m.wave([(0, 100.0), (1, 80.0), (2, 60.0)], 0.0) == 100.0
+    # same bank: serializes exactly — completion is the sum of services
+    m2 = RequestMultiplexer(DDR3_1600, n_banks=8)
+    assert m2.wave([(3, 100.0), (3, 80.0), (3, 60.0)], 0.0) == 240.0
+    assert m2.stats["queue_stall_ns"] == pytest.approx(100.0 + 180.0)
+
+
+def test_mux_bank_of_is_deterministic_mod_map():
+    m = RequestMultiplexer(DDR3_1600, n_banks=8)
+    assert [m.bank_of(u) for u in (0, 7, 8, 15)] == [0, 7, 0, 7]
+    with pytest.raises(ValueError, match="bank"):
+        m.submit(8, 0.0, 1.0)
+    with pytest.raises(ValueError, match="n_banks"):
+        RequestMultiplexer(DDR3_1600, n_banks=0)
+
+
+def test_mux_decode_gate_stalls_inside_trfc():
+    m = RequestMultiplexer(DDR3_1600)
+    assert m.decode_gate(100.0) == 100.0
+    # inside window 1 (7800..8060): pushed to its end
+    assert m.decode_gate(7900.0) == pytest.approx(8060.0)
+    assert m.stats["n_decode_stalls"] == 1
+    assert m.stats["decode_refresh_stall_ns"] == pytest.approx(160.0)
+    snap = m.snapshot()
+    assert snap["n_banks"] == 8 and snap["enabled"]
+    assert len(snap["per_bank_requests"]) == 8
+
+
+def test_contend_pairs_isolated_cost_with_contended_window():
+    m = RequestMultiplexer(DDR3_1600, n_banks=4)
+    cost = MV.MovementCost(4096, 2, 100.0, 900.0, 1.0, 5.0)
+    a = MV.contend(cost, m, bank=1, ready_ns=0.0)
+    assert (a.start_ns, a.end_ns) == (0.0, 100.0)
+    assert a.stall_ns == 0.0 and a.cost is cost
+    b = MV.contend(cost, m, bank=1, ready_ns=10.0)   # queued behind a
+    assert b.start_ns == 100.0 and b.stall_ns == pytest.approx(90.0)
+    c = MV.contend(cost, m, bank=2, ready_ns=10.0, mechanism="memcpy")
+    assert c.end_ns - c.start_ns == pytest.approx(900.0)
+
+
+# ---------------------------------------------------------------------------
+# percentile pin (single- and two-element buckets)
+# ---------------------------------------------------------------------------
+
+def test_percentile_linear_small_buckets():
+    assert percentile_ns([], 99) is None
+    assert percentile_ns([42.0], 50) == 42.0
+    assert percentile_ns([42.0], 99) == 42.0
+    # two elements under method="linear": p50 is the midpoint, p99
+    # interpolates 99% of the way — the exact values a method change
+    # (e.g. "nearest") would break
+    assert percentile_ns([10.0, 20.0], 50) == pytest.approx(15.0)
+    assert percentile_ns([10.0, 20.0], 99) == pytest.approx(19.9)
+    assert percentile_ns([10.0, 20.0], 0) == 10.0
+
+
+# ---------------------------------------------------------------------------
+# backoff bucket: the advantage ratio is fault-rate-invariant
+# ---------------------------------------------------------------------------
+
+def test_backoff_never_skews_the_mechanism_ratio():
+    """The same priced schedule under 0 vs heavy retry backoff reports the
+    SAME lisa/memcpy advantage: backoff rides in its own bucket, never in
+    the per-mechanism movement ns (the old accounting added it to both,
+    drifting the ratio toward 1 with the fault rate)."""
+    def run(backoff):
+        mets = Metrics()
+        mets.record_decision(Decision(tick=1, kind="resume_wave", n_items=2,
+                                      ns_lisa=200.0, ns_memcpy=1800.0,
+                                      uj_lisa=1.0, uj_memcpy=9.0))
+        mets.record_decision(Decision(tick=2, kind="retry_wave", n_items=3,
+                                      ns_lisa=300.0, ns_memcpy=2700.0,
+                                      uj_lisa=1.5, uj_memcpy=13.5,
+                                      backoff_ns=backoff))
+        return mets.movement_totals()
+    calm, chaotic = run(0.0), run(50_000.0)
+    assert calm["advantage"] == pytest.approx(9.0)
+    assert chaotic["advantage"] == calm["advantage"]     # invariant
+    assert chaotic["backoff_ns"] == pytest.approx(50_000.0)
+    assert chaotic["ns_lisa"] == calm["ns_lisa"]
+
+
+# ---------------------------------------------------------------------------
+# scheduler integration: refresh × the tick loop
+# ---------------------------------------------------------------------------
+
+def test_decode_tick_inside_trfc_observes_the_stall(setup):
+    """An idle fast-forward lands the clock so the first decode issues at
+    exactly a refresh window's start (prefill ends at 3*tREFI): the decode
+    stalls for the full tRFC, metrics record it, and the windows the jump
+    crossed are still accounted (absolute-time windows — satellite 4)."""
+    cfg, params = setup
+    eng = Engine(cfg, params, slots=2, max_len=96, n_sessions=8)
+    prefill_ns = 250.0 * 5                       # plen=5 at default pricing
+    t_arrive = 3 * T.tREFI - prefill_ns          # decode lands at 3*tREFI
+    s = sched.Scheduler(eng, arrivals=[_fresh(t_arrive, 0, tokens=3)],
+                        cfg=sched.SchedConfig(contention=True))
+    out = s.run()
+    assert out["jobs_completed"] == 1
+    # the jump crossed windows 1 and 2 without "executing" them, yet
+    # window 3 still blocked at its absolute time
+    assert s.mux.refreshes_before(s.now_ns) >= 3
+    assert s.mux.stats["n_decode_stalls"] >= 1
+    st = out["stalls"]["refresh"]
+    assert st["n"] >= 1 and st["ns"] >= T.tRFC   # first stall is the full
+    assert s.mux.stats["decode_refresh_stall_ns"] >= T.tRFC
+
+
+def test_contention_off_run_reports_no_stalls(setup):
+    cfg, params = setup
+    eng = Engine(cfg, params, slots=2, max_len=96, n_sessions=8)
+    arrivals = [_fresh(3 * T.tREFI - 1250.0, 0, tokens=3)]
+    s = sched.Scheduler(eng, arrivals=arrivals, cfg=sched.SchedConfig())
+    out = s.run()
+    assert out["jobs_completed"] == 1
+    assert "stalls" not in out                   # schema unchanged when off
+    assert s.mux.stats["n_requests"] == 0
+
+
+def test_contention_shifts_the_clock_never_the_bill(setup):
+    """Contention-on vs -off over the same arrivals: identical jobs and
+    identical movement bills (pricing untouched).  The clock shifts both
+    ways by design — same-bank queues and refresh windows delay, while
+    disjoint-bank wave members overlap instead of serializing — so the
+    invariant is the bill, not a one-sided latency ordering."""
+    cfg, params = setup
+    arrivals = [_fresh(i * 400.0, i, tokens=2, plen=4) for i in range(6)]
+    outs, nows = [], []
+    for contention in (False, True):
+        eng = Engine(cfg, params, slots=2, max_len=96, n_sessions=8)
+        s = sched.Scheduler(eng, arrivals=list(arrivals),
+                            cfg=sched.SchedConfig(contention=contention))
+        outs.append(s.run())
+        nows.append(s.now_ns)
+    off, on = outs
+    assert on["jobs_completed"] == off["jobs_completed"] == 6
+    assert on["movement"]["ns_lisa"] == off["movement"]["ns_lisa"]
+    assert on["movement"]["advantage"] == off["movement"]["advantage"]
+
+
+def test_sched_config_validates_n_banks():
+    with pytest.raises(ValueError, match="n_banks"):
+        sched.SchedConfig(n_banks=0)
+
+
+# ---------------------------------------------------------------------------
+# lane-advance regression (satellite 1): one lanes vector per tick
+# ---------------------------------------------------------------------------
+
+def test_cluster_advance_is_decode_plus_single_max_over_lanes(setup):
+    """The cluster tick advances by decode + max over replicas of each
+    replica's TOTAL lane (complete-suspends AND wave execution in one
+    vector).  The old accounting summed two phase maxima — pinned here by
+    requiring a tick where that formula strictly overcharges."""
+    cfg, params = setup
+    wl = sched.WorkloadConfig(n_fresh=8, n_followups=16, mean_gap_ns=800.0,
+                              arrival="bursty", burst=4, zipf_s=1.5,
+                              think_ns=1500.0)
+    arrivals = sched.generate_workload(wl, seed=4, vocab_size=cfg.vocab_size)
+    cl = Cluster(cfg, params, n_replicas=2, slots=2, max_len=96,
+                 n_sessions=sched.n_sessions_for(wl))
+    s = sched.ClusterScheduler(cl, arrivals=arrivals)
+    out = s.run()
+    assert out["jobs_completed"] == 24
+    assert s.lane_log
+    overlap_seen = False
+    for entry in s.lane_log:
+        comp, fin = entry["complete_lanes"], entry["lanes"]
+        exec_part = [f - c for f, c in zip(fin, comp)]
+        # the contract: ONE max over the unified lanes
+        assert entry["advance"] == pytest.approx(
+            entry["decode_ns"] + max(fin, default=0.0))
+        if max(comp) > 0 and max(exec_part) > 0:
+            old = entry["decode_ns"] + max(comp) + max(exec_part)
+            assert entry["advance"] <= old + 1e-9
+            if entry["advance"] < old - 1e-9:
+                overlap_seen = True              # the old formula overpaid
+    assert overlap_seen

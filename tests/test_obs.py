@@ -305,11 +305,20 @@ def test_fault_spans_match_ledger(cluster_run):
         "retry_wave", 0)
     assert sum(sp.attrs["retries"] for sp in retry_moves) == \
         counters.get("retries", 0)
-    # every retry move carries its backoff leg, priced by residual
+    # every retry move still carries its trailing backoff leg marker; its
+    # residual is ZERO now that backoff lives in the Decision's own
+    # latency bucket (never in the per-mechanism movement ns)
     for sp in retry_moves:
         kids = [l for l in tr.spans
                 if l.cat == "leg" and l.parent is sp]
         assert kids and kids[-1].name == "backoff"
+        for f in FIELDS:
+            assert kids[-1].attrs[f] == pytest.approx(0.0, abs=1e-6)
+    backoff_total = sum(d.backoff_ns for d in s.metrics.decisions)
+    if any(sp.attrs.get("backoff_ns", 0.0) > 0 for sp in retry_moves):
+        assert backoff_total > 0.0
+    assert backoff_total == pytest.approx(
+        sum(sp.attrs.get("backoff_ns", 0.0) for sp in retry_moves))
 
 
 # ---------------------------------------------------------------------------
